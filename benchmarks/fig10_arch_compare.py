@@ -1,0 +1,52 @@
+"""Paper Fig. 10 analog: cross-architecture comparison for SU3_Bench.
+
+The paper compares PIUMA vs Xeon cores (PIUMA wins 1.5x at 32 cores via
+bandwidth). We put four platforms on the same three-term roofline:
+paper-Xeon socket, paper-PIUMA core cluster, TPU v5e chip (this work's
+target), and this container's CPU (measured). Per-chip bandwidth-bound
+GF/s at the fp32 SoA arithmetic intensity (864/576 = 1.5)."""
+from __future__ import annotations
+
+from repro.core import roofline
+from repro.core.su3.engine import EngineConfig, SU3Engine
+
+AI_SOA = 864 / 576
+AI_AOS = 864 / 640
+
+
+def run(L: int = 8) -> list[dict]:
+    rows = []
+    for hw, cores in ((roofline.XEON_8280_SOCKET, 1), (roofline.PIUMA_CORE, 32),
+                      (roofline.TPU_V5E, 1)):
+        bw = hw.hbm_bw * cores
+        peak = hw.peak_flops_vpu * cores
+        # PIUMA third term (paper §5.3): issue rate 3.6 GF/s/core dot-product,
+        # 4.8 GF/s/core blocked-GEMM
+        issue = 4.8e9 * cores if hw is roofline.PIUMA_CORE else float("inf")
+        bound = min(bw * AI_SOA, peak, issue)
+        rows.append({
+            "name": f"fig10_{hw.name}_x{cores}",
+            "bw_gbs": round(bw / 1e9, 1),
+            "compute_gf": round(peak / 1e9, 1),
+            "issue_gf": None if issue == float("inf") else round(issue / 1e9, 1),
+            "bound_gf": round(bound / 1e9, 2),
+            "bound_term": (
+                "issue" if bound == issue else
+                "bandwidth" if bound == bw * AI_SOA else "compute"
+            ),
+        })
+    # measured on this container (relative only)
+    r = SU3Engine(EngineConfig(L=L, variant="versionX", iterations=3, warmups=1,
+                               tile=128)).run()
+    rows.append({
+        "name": "fig10_container_cpu_measured",
+        "bw_gbs": round(r.gbytes, 2),
+        "compute_gf": None, "issue_gf": None,
+        "bound_gf": round(r.gflops, 2), "bound_term": "measured",
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

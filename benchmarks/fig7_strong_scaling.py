@@ -1,0 +1,46 @@
+"""Paper Fig. 7 analog: strong scaling of VersionX over device counts.
+
+Each point runs in a subprocess with XLA_FLAGS host-device-count (device
+count locks at first jax init). Both placement policies are measured —
+the paper's with/without-empty-constructor pair.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_CHILD = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+from repro.core.su3.engine import EngineConfig, SU3Engine
+cfg = EngineConfig(L=int(sys.argv[3]), variant="versionX", placement=sys.argv[2],
+                   iterations=3, warmups=1, tile=128)
+r = SU3Engine(cfg).run()
+print(json.dumps(r.row()))
+"""
+
+
+def run(L: int = 8, device_counts: tuple[int, ...] = (1, 2, 4)) -> list[dict]:
+    rows = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    for n in device_counts:
+        for placement in ("sharded", "host_scatter"):
+            out = subprocess.run(
+                [sys.executable, "-c", _CHILD, str(n), placement, str(L)],
+                capture_output=True, text=True, env=env, timeout=300,
+            )
+            if out.returncode != 0:
+                rows.append({"name": f"fig7_{placement}_d{n}", "error": out.stderr[-200:]})
+                continue
+            row = json.loads(out.stdout.strip().splitlines()[-1])
+            row["name"] = f"fig7_{placement}_d{n}"
+            rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,51 @@
+"""LM-side microbenchmarks: measured reduced-config step times on CPU plus
+pointers into the dry-run roofline table for the full configs."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.models import registry
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import make_train_step
+
+ARCHS = ("qwen3-4b", "granite-moe-1b-a400m", "zamba2-1.2b", "xlstm-125m")
+
+
+def run(seq: int = 64, batch: int = 4, reps: int = 3) -> list[dict]:
+    rows = []
+    shape = ShapeConfig("bench", seq, batch, "train")
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        api = registry.get(cfg)
+        params = api.init(jax.random.PRNGKey(0), cfg)
+        batch_data = registry.make_inputs(cfg, shape, jax.random.PRNGKey(1))
+        step = jax.jit(
+            make_train_step(cfg, AdamWConfig(), q_chunk=min(64, seq), kv_chunk=min(64, seq)),
+            donate_argnums=(0, 1),
+        )
+        from repro.optim import adamw
+
+        opt = adamw.init(params, AdamWConfig())
+        params, opt, _ = step(params, opt, batch_data)  # compile+warm
+        jax.block_until_ready(params)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            params, opt, m = step(params, opt, batch_data)
+        jax.block_until_ready(params)
+        dt = (time.perf_counter() - t0) / reps
+        rows.append({
+            "name": f"lm_step_{arch}_reduced",
+            "us_per_call": round(dt * 1e6, 1),
+            "tokens_per_s": round(seq * batch / dt, 1),
+            "loss": float(m["loss"]),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

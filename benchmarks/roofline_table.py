@@ -1,0 +1,102 @@
+"""Render the §Dry-run / §Roofline tables from experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "experiments" / "dryrun"
+
+ARCH_ORDER = [
+    "internvl2-26b", "granite-34b", "qwen3-4b", "minitron-8b", "yi-6b",
+    "zamba2-1.2b", "deepseek-v3-671b", "granite-moe-1b-a400m",
+    "xlstm-125m", "whisper-tiny",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str) -> dict[tuple[str, str], dict]:
+    out = {}
+    for p in sorted(DRYRUN.glob(f"*__{mesh}.json")):  # tagged variants excluded
+        d = json.loads(p.read_text())
+        if d.get("status") != "ok":
+            continue
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def roofline_table(mesh: str) -> str:
+    cells = load(mesh)
+    lines = [
+        f"### Roofline baselines — mesh `{mesh}` "
+        f"({'(2,16,16)=512' if mesh == 'multi' else '(16,16)=256'} chips, v5e model)",
+        "",
+        "| arch | shape | compute | memory | collective | bound | useful/HLO | roofline frac | GiB/dev (analytic) | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = cells.get((arch, shape))
+            if d is None:
+                lines.append(f"| {arch} | {shape} | — | — | — | skipped (long-context inapplicable) | | | | |")
+                continue
+            r = d["roofline"]
+            m = d["memory_analytic"]
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+                f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** "
+                f"| {r['useful_flops_ratio']:.3f} | {r['roofline_fraction']:.3f} "
+                f"| {m['total_bytes'] / 2**30:.2f} | {'Y' if m['fits_v5e_16g'] else 'N'} |"
+            )
+    return "\n".join(lines)
+
+
+def dryrun_table(mesh: str) -> str:
+    cells = load(mesh)
+    lines = [
+        f"### Dry-run compile record — mesh `{mesh}`",
+        "",
+        "| arch | shape | compile s | HLO GFLOPs/dev | HLO GB/dev | coll GB/dev (link) | top collectives | XLA GiB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = cells.get((arch, shape))
+            if d is None:
+                continue
+            r = d["roofline"]
+            by = r.get("collective_by_kind", {})
+            top = ", ".join(
+                f"{k}:{v / 1e9:.1f}G" for k, v in
+                sorted(by.items(), key=lambda kv: -kv[1])[:2]
+            ) or "none"
+            lines.append(
+                f"| {arch} | {shape} | {d['compile_s']} | {r['flops_per_device'] / 1e9:.0f} "
+                f"| {r['bytes_per_device'] / 1e9:.1f} | {r['collective_link_bytes'] / 1e9:.2f} "
+                f"| {top} | {d['memory']['total_bytes_per_device'] / 2**30:.2f} |"
+            )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    for mesh in ("single", "multi"):
+        if which in ("all", "roofline"):
+            print(roofline_table(mesh))
+            print()
+        if which in ("all", "dryrun"):
+            print(dryrun_table(mesh))
+            print()
+
+
+if __name__ == "__main__":
+    main()

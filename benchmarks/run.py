@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+``us_per_call`` is the best iteration time where measured (engine rows) and
+empty for analytic tables; ``derived`` carries the table-specific payload.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _emit(rows: list[dict]) -> None:
+    for r in rows:
+        name = r.pop("name", "unnamed")
+        us = r.pop("us_per_call", None)
+        if us is None and "best_s" in r:
+            us = round(r["best_s"] * 1e6, 1)
+        derived = json.dumps(r, default=str)
+        print(f"{name},{us if us is not None else ''},{derived}")
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from benchmarks import (
+        fig7_strong_scaling, fig9_gemm_vs_dot, fig10_arch_compare,
+        lm_step, table1_roofline, table2_variants, table3_placement,
+    )
+
+    _emit(table1_roofline.run())
+    _emit(table2_variants.run(L=8 if not quick else 4, iters=(1, 5) if not quick else (1,)))
+    _emit(table3_placement.run(L=8 if not quick else 4))
+    _emit(fig7_strong_scaling.run(L=8 if not quick else 4,
+                                  device_counts=(1, 2, 4) if not quick else (1, 2)))
+    _emit(fig9_gemm_vs_dot.run(sizes=(4, 8) if not quick else (4,)))
+    _emit(fig10_arch_compare.run(L=8 if not quick else 4))
+    _emit(lm_step.run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Table 1 analog: theoretical roofline ladders for SU3_Bench.
+
+Reproduces the paper's Xeon CLX-8280 SIMD-utilization ladder exactly
+(2.7 GHz x 2 SIMD x 8 lanes x 2 flops), and derives the equivalent ladder
+for the TPU v5e VPU (8x128 lanes x FMA x ~940 MHz) — the honest compute
+roof for a vector (non-MXU) kernel, which is SU3's PIUMA moment on TPU.
+"""
+from __future__ import annotations
+
+from repro.core import roofline
+from repro.core.su3 import layouts
+
+GHZ = 2.7
+CORES = 28
+BW_SOCKET = 105.0  # GB/s
+
+
+def xeon_ladder() -> list[dict]:
+    rows = []
+    for units, fma in ((2, True), (1, True), (1, False)):
+        for simd in range(8, 0, -1):
+            core = GHZ * units * simd * (2 if fma else 1)
+            socket_peak = core * CORES
+            # bandwidth roof at AI=1.35 (fp32)
+            bw_roof = BW_SOCKET * layouts.paper_arithmetic_intensity(4)
+            rows.append({
+                "name": f"xeon_units{units}_fma{int(fma)}_simd{simd}",
+                "core_gf": round(core, 1),
+                "socket_gf": round(min(socket_peak, bw_roof), 1),
+                "bw_bound_gf": round(bw_roof, 1),
+            })
+    return rows
+
+
+def v5e_ladder() -> list[dict]:
+    hw = roofline.TPU_V5E
+    rows = []
+    ai_aos = layouts.paper_arithmetic_intensity(4)  # 1.35
+    ai_soa = 864 / 576  # padding removed
+    for name, ai in (("aos", ai_aos), ("soa", ai_soa)):
+        bw_roof = hw.hbm_bw * ai / 1e9
+        rows.append({
+            "name": f"v5e_{name}",
+            "vpu_roof_gf": round(hw.peak_flops_vpu / 1e9, 1),
+            "mxu_roof_gf": round(hw.peak_flops / 1e9, 1),
+            "bw_bound_gf": round(bw_roof, 1),
+            "binding": "bandwidth" if bw_roof < hw.peak_flops_vpu / 1e9 else "vpu",
+        })
+    return rows
+
+
+def run() -> list[dict]:
+    return xeon_ladder()[:3] + v5e_ladder()  # headline rows
+
+
+if __name__ == "__main__":
+    for r in xeon_ladder() + v5e_ladder():
+        print(r)

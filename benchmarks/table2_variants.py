@@ -1,0 +1,42 @@
+"""Paper Table 2 analog: baseline performance of the implementation
+variants (versions 0/3/X/gemm/blocked/pallas) with -I/-W iteration sweeps.
+
+CPU-measured numbers are for *relative* comparison between variants (this
+container is the dev host, not the target); the v5e projection column uses
+the roofline bandwidth bound with each variant's layout traffic.
+"""
+from __future__ import annotations
+
+from repro.core import roofline
+from repro.core.su3.engine import EngineConfig, SU3Engine
+from repro.core.su3.layouts import Layout
+
+VARIANTS = [
+    ("version0", Layout.SOA),
+    ("version3", Layout.SOA),
+    ("versionX", Layout.SOA),
+    ("version_gemm", Layout.SOA),
+    ("version_blocked", Layout.AOSOA),
+    ("pallas", Layout.SOA),
+]
+
+
+def run(L: int = 8, iters: tuple[int, ...] = (1, 5)) -> list[dict]:
+    rows = []
+    for variant, layout in VARIANTS:
+        for n_iter in iters:
+            cfg = EngineConfig(L=L, layout=layout, variant=variant,
+                               iterations=n_iter, warmups=1, tile=128)
+            r = SU3Engine(cfg).run()
+            tm = r.traffic
+            v5e_gf = roofline.TPU_V5E.hbm_bw * tm.arithmetic_intensity / 1e9
+            row = r.row()
+            row.update(name=f"table2_{variant}_I{n_iter}",
+                       v5e_bw_bound_gf=round(v5e_gf, 1))
+            rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

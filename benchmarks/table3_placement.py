@@ -1,0 +1,28 @@
+"""Paper Table 3/5/6 analog: placement policy study (the NUMA/first-touch
+lesson). ``sharded`` = paper's empty-constructor + parallel init fix;
+``host_scatter`` = default-constructor first-touch on socket 0 (data built
+on one device, then redistributed); ``replicated`` = the memory-blowup
+failure. Reports init/scatter time and per-device bytes."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.su3.engine import EngineConfig, SU3Engine
+
+
+def run(L: int = 8) -> list[dict]:
+    rows = []
+    for placement in ("sharded", "host_scatter", "replicated"):
+        cfg = EngineConfig(L=L, placement=placement, iterations=2, warmups=1, tile=128)
+        eng = SU3Engine(cfg)
+        r = eng.run()
+        row = r.row()
+        row["name"] = f"table3_{placement}"
+        row["devices"] = eng.n_devices
+        rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,3 @@
+"""repro: SU3_Bench-on-TPU multi-pod JAX framework (see README)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,13 @@
+"""The paper's own workload: SU3_Bench lattice configs (core.su3.engine)."""
+from repro.core.su3.engine import EngineConfig
+from repro.core.su3.layouts import Layout
+
+# Paper's headline configuration: L=32, fp32 (640 MiB A+C working set).
+PAPER_L32 = EngineConfig(L=32, dtype="float32", layout=Layout.SOA, variant="pallas",
+                         iterations=100, warmups=1)
+# PIUMA-section configuration: L=16 and L=32, 4 iterations (paper §5).
+PIUMA_L16 = EngineConfig(L=16, dtype="float32", layout=Layout.SOA, variant="pallas",
+                         iterations=4, warmups=0)
+# CPU-friendly smoke configuration.
+SMOKE_L8 = EngineConfig(L=8, dtype="float32", layout=Layout.SOA, variant="pallas",
+                        iterations=3, warmups=1, tile=128)

@@ -1,0 +1,1 @@
+"""Core: the paper contribution (SU3 lattice engine + roofline methodology)."""

@@ -1,0 +1,137 @@
+"""The paper's SU3_Bench implementation variants, re-expressed in JAX.
+
+The OpenMP study compares Versions 0–3 (different pragma/collapse strategies),
+VersionX (plain ``parallel for``), and an explicitly unrolled GEMM. Pragmas
+have no JAX analogue — what *does* transfer is how each variant expresses the
+computation to the compiler and what layout it streams:
+
+  version0        loop-nest faithful: per-site fori_loop over links with
+                  dynamic indexing — the "trust the compiler" shape. XLA, like
+                  icc on the collapsed pragmas, does poorly here.
+  version3        fully-collapsed analog: one flat work-item axis
+                  (site*link*row), gathered operands — models the paper's
+                  worst performer (collapse(4)) whose index arithmetic defeats
+                  vectorization; here the gathers defeat fusion.
+  versionX        the "simplest parallel" shape: one einsum over canonical
+                  complex data. XLA's equivalent of ``#pragma omp parallel for``.
+  version_gemm    paper §4 "explicit GEMM + FMA": planar SoA operands, the
+                  3x3x3 complex product fully unrolled into real FMA chains
+                  over site-lane vectors. This is also what the Pallas kernel
+                  implements on TPU (kernels/su3_matmul.py).
+  version_blocked paper §5.4 blocked GEMM: version_gemm applied per AoSoA
+                  site tile (register/VMEM-pressure blocking).
+
+All variants take/return the *canonical* complex form so they are directly
+interchangeable and testable against ``kernels.ref.su3_mult_ref``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.su3 import layouts
+from repro.kernels import ref as kref
+
+Variant = Callable[[jax.Array, jax.Array], jax.Array]
+_REGISTRY: dict[str, Variant] = {}
+
+
+def register(name: str) -> Callable[[Variant], Variant]:
+    def deco(fn: Variant) -> Variant:
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_variant(name: str) -> Variant:
+    return _REGISTRY[name]
+
+
+def variant_names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+@register("version0")
+def version0(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Loop-nest faithful: scan over links with dynamic slicing per link."""
+
+    def per_link(j: jax.Array) -> jax.Array:
+        aj = jax.lax.dynamic_index_in_dim(a, j, axis=1, keepdims=False)
+        bj = jax.lax.dynamic_index_in_dim(b, j, axis=0, keepdims=False)
+        return jnp.einsum("skl,lm->skm", aj, bj)
+
+    c = jax.lax.map(per_link, jnp.arange(layouts.LINKS))  # (4, s, 3, 3)
+    return jnp.moveaxis(c, 0, 1)
+
+
+@register("version3")
+def version3(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Fully-collapsed work-item analog (paper's worst performer).
+
+    Flattens (site, link, row, col) into one axis and gathers operand rows —
+    mirroring Version 2/3's manual index reconstruction from work-item ids.
+    """
+    n_sites = a.shape[0]
+    s_idx, j_idx, k_idx, m_idx = jnp.unravel_index(
+        jnp.arange(n_sites * layouts.LINKS * layouts.SU3 * layouts.SU3),
+        (n_sites, layouts.LINKS, layouts.SU3, layouts.SU3),
+    )
+    a_rows = a[s_idx, j_idx, k_idx, :]  # (work, 3)
+    b_cols = b[j_idx, :, m_idx]  # (work, 3)
+    c_flat = jnp.sum(a_rows * b_cols, axis=-1)
+    return c_flat.reshape(n_sites, layouts.LINKS, layouts.SU3, layouts.SU3)
+
+
+@register("versionX")
+def version_x(a: jax.Array, b: jax.Array) -> jax.Array:
+    """The paper's VersionX: simplest parallel formulation — one einsum."""
+    return kref.su3_mult_ref(a, b)
+
+
+def _gemm_planar_unrolled(a_p: jax.Array, b_p: jax.Array) -> jax.Array:
+    """Fully unrolled 3x3x3 complex product over planar site-vectors.
+
+    a_p: (2, 4, 3, 3, S) — SoA; b_p: (2, 4, 3, 3). Emits 432 real FMA-shaped
+    ops per site over (S,) lane vectors; the k/l/m loops are Python-unrolled
+    exactly like the paper's hand-written GEMM.
+    """
+    ar, ai = a_p[0], a_p[1]
+    br, bi = b_p[0], b_p[1]
+    out_r = [[[None] * layouts.SU3 for _ in range(layouts.SU3)] for _ in range(layouts.LINKS)]
+    out_i = [[[None] * layouts.SU3 for _ in range(layouts.SU3)] for _ in range(layouts.LINKS)]
+    for j in range(layouts.LINKS):
+        for k in range(layouts.SU3):
+            for m in range(layouts.SU3):
+                cr = ar[j, k, 0] * br[j, 0, m] - ai[j, k, 0] * bi[j, 0, m]
+                ci = ar[j, k, 0] * bi[j, 0, m] + ai[j, k, 0] * br[j, 0, m]
+                for l in range(1, layouts.SU3):
+                    cr = cr + ar[j, k, l] * br[j, l, m] - ai[j, k, l] * bi[j, l, m]
+                    ci = ci + ar[j, k, l] * bi[j, l, m] + ai[j, k, l] * br[j, l, m]
+                out_r[j][k][m] = cr
+                out_i[j][k][m] = ci
+    stack = lambda o: jnp.stack(
+        [jnp.stack([jnp.stack(row, 0) for row in link], 0) for link in o], 0
+    )
+    return jnp.stack([stack(out_r), stack(out_i)], axis=0)
+
+
+@register("version_gemm")
+def version_gemm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Paper §4: explicit unrolled GEMM with FMAs on planar SoA data."""
+    a_p = layouts.pack_soa(a)
+    b_p = layouts.to_planar(b)
+    c_p = _gemm_planar_unrolled(a_p, b_p)
+    return layouts.unpack_soa(c_p, a.dtype)
+
+
+@register("version_blocked")
+def version_blocked(a: jax.Array, b: jax.Array, *, lane: int = layouts.LANE) -> jax.Array:
+    """Paper §5.4: blocked GEMM — unrolled product per AoSoA site tile."""
+    n_sites = a.shape[0]
+    t = layouts.pack_aosoa(a, lane=lane)  # (tiles, 2, 4, 3, 3, lane)
+    b_p = layouts.to_planar(b)
+    c_t = jax.lax.map(lambda tile: _gemm_planar_unrolled(tile, b_p), t)
+    return layouts.unpack_aosoa(c_t, n_sites, a.dtype)

@@ -1,0 +1,78 @@
+"""Activation sharding constraints — placement for every major intermediate.
+
+XLA's SPMD propagation through nested while loops (layer scan x microbatch
+scan x attention chunk scan) can drop the batch sharding of loop carries and
+remat-saved residuals: observed on the qwen3 train cell as unsharded
+(36, 64, 4096, d) fp32 stacks = 22 GiB/device of dead weight. Pinning the
+canonical activations at block boundaries keeps every saved buffer sharded
+— the paper's "data must live where compute happens" applied to activations.
+
+Models call ``shard(x, kind)``; a no-op unless a launcher has installed
+rules via ``use_rules`` (smoke tests on one device run unconstrained).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import MeshRules, _axis_size
+
+_STATE: dict[str, object] = {"mesh": None, "rules": None}
+
+# kind -> logical axis per dim (None = replicated). 'model' entries fall
+# back to replicated when the dim does not divide the model axis.
+KINDS: dict[str, tuple[str | None, ...]] = {
+    "btd": ("data", None, None),  # (batch, seq, d_model)
+    "btf": ("data", None, "model"),  # (batch, seq, d_ff/d_inner)
+    "bthd": ("data", None, "model", None),  # (batch, seq, heads, head_dim)
+    "btv": ("data", None, "model"),  # logits (batch, seq, vocab)
+    "bt": ("data", None),  # per-token scalars
+    "gecd": ("data", "model", None, None),  # MoE capacity buffer (G,E,C,d)
+    "becf": ("data", "model", None, "model2"),  # unused placeholder
+    "bhpn": ("data", "model", None, None),  # SSM state (b, heads, p, n)
+    "bshp": ("data", None, "model", None),  # SSD activations (b, s, heads, p)
+    "bqhgd": ("data", None, "model", None, None),  # flash out (b,cq,hkv,g,dv)
+    "bhgqd": ("data", "model", None, None, None),  # flash acc (b,hkv,g,cq,dv)
+    "bhgq": ("data", "model", None, None),  # flash stats (b,hkv,g,cq)
+}
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: MeshRules) -> Iterator[None]:
+    prev = dict(_STATE)
+    _STATE["mesh"] = mesh
+    _STATE["rules"] = rules
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def shard(x: jax.Array, kind: str) -> jax.Array:
+    mesh: Mesh | None = _STATE["mesh"]  # type: ignore[assignment]
+    rules: MeshRules | None = _STATE["rules"]  # type: ignore[assignment]
+    if mesh is None or rules is None:
+        return x
+    axes = KINDS[kind]
+    assert len(axes) == x.ndim, (kind, x.shape)
+    spec: list = []
+    used: set[str] = set()
+    for dim, name in zip(x.shape, axes):
+        assignment = None
+        if name == "data":
+            mesh_axes = tuple(a for a in rules.data_axes if a not in used)
+            if mesh_axes and dim % _axis_size(mesh, mesh_axes) == 0:
+                assignment = mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+                used.update(mesh_axes)
+        elif name == "model":
+            mesh_axes = tuple(a for a in rules.model_axes if a not in used)
+            if mesh_axes and dim % _axis_size(mesh, mesh_axes) == 0:
+                assignment = mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+                used.update(mesh_axes)
+        spec.append(assignment)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for the SU3 hot-spot, with jnp oracles (ref.py)."""

@@ -1,0 +1,61 @@
+"""jit'd public wrappers around the Pallas kernels, with backend dispatch.
+
+On TPU the Pallas path compiles natively; on CPU (this container) it runs in
+``interpret=True`` mode, which executes the kernel body with standard JAX ops
+— bit-identical control flow, no Mosaic. The dry-run/compile paths of the LM
+stack use the pure-jnp reference implementations instead (Pallas does not
+lower through the CPU AOT pipeline), selected in models/ by backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.su3 import layouts
+from repro.kernels import ref as kref
+from repro.kernels import su3_matmul
+
+DEFAULT_TILE = 512
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def su3_mult_planar(
+    a_p: jax.Array, b_p: jax.Array, *, tile: int = DEFAULT_TILE, interpret: bool | None = None
+) -> jax.Array:
+    """Planar flattened SoA entry point: a_p (2, 36, S), b_p (2, 36)."""
+    if interpret is None:
+        interpret = _use_interpret()
+    return su3_matmul.su3_mult_planar(a_p, b_p, tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def su3_mult(
+    a: jax.Array, b: jax.Array, *, tile: int = DEFAULT_TILE, interpret: bool | None = None
+) -> jax.Array:
+    """Canonical complex entry point matching kernels.ref.su3_mult_ref.
+
+    a: (n_sites, 4, 3, 3) complex, b: (4, 3, 3) complex.
+    Packs to planar SoA, pads sites to the tile, runs the kernel, unpacks.
+    """
+    if interpret is None:
+        interpret = _use_interpret()
+    n_sites = a.shape[0]
+    pad = (-n_sites) % tile
+    a_p = layouts.pack_soa(a).reshape(2, su3_matmul.ROWS, n_sites)
+    if pad:
+        a_p = jnp.pad(a_p, ((0, 0), (0, 0), (0, pad)))
+    b_p = layouts.to_planar(b).reshape(2, su3_matmul.ROWS)
+    c_p = su3_matmul.su3_mult_planar(a_p, b_p, tile=tile, interpret=interpret)
+    c_p = c_p[:, :, :n_sites].reshape(2, layouts.LINKS, layouts.SU3, layouts.SU3, n_sites)
+    return layouts.unpack_soa(c_p, a.dtype)
+
+
+# Re-exported oracles so call sites can do `from repro.kernels import ops` and
+# flip between kernel and reference with one name change.
+su3_mult_ref = kref.su3_mult_ref
+su3_mult_planar_ref = kref.su3_mult_planar_ref

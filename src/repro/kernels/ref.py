@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth that tests/test_su3_kernels.py sweeps shapes and
+dtypes against. They use complex arithmetic directly (which XLA supports on
+CPU) — the Pallas kernels use planar re/im because TPU vector units do not.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def su3_mult_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """SU3_Bench core kernel, canonical complex form.
+
+    C[i, j] = A[i, j] @ B[j]  for every site i and link j (paper Fig. 1).
+
+    a: (n_sites, 4, 3, 3) complex; b: (4, 3, 3) complex -> (n_sites, 4, 3, 3).
+    """
+    return jnp.einsum("sjkl,jlm->sjkm", a, b)
+
+
+def su3_mult_planar_ref(a_p: jax.Array, b_p: jax.Array) -> jax.Array:
+    """Planar oracle: SoA layout (2, 4, 3, 3, n_sites) x (2, 4, 3, 3).
+
+    (ar + i*ai)(br + i*bi) = (ar*br - ai*bi) + i*(ar*bi + ai*br)
+    """
+    ar, ai = a_p[0], a_p[1]
+    br, bi = b_p[0], b_p[1]
+    cr = jnp.einsum("jkls,jlm->jkms", ar, br) - jnp.einsum("jkls,jlm->jkms", ai, bi)
+    ci = jnp.einsum("jkls,jlm->jkms", ar, bi) + jnp.einsum("jkls,jlm->jkms", ai, br)
+    return jnp.stack([cr, ci], axis=0)
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Naive full-materialization attention oracle.
+
+    q: (batch, q_len, n_q_heads, d_head); k/v: (batch, kv_len, n_kv_heads, d_head).
+    GQA handled by repeating kv heads. Computes in fp32 regardless of input dtype.
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert hq % hkv == 0
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else d**-0.5
+    qf = q.astype(jnp.float32) * scale
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, k.astype(jnp.float32))
+    if causal:
+        # Align last query with last key (supports sq < sk for chunked decode).
+        qpos = jnp.arange(sq)[:, None] + (sk - sq)
+        kpos = jnp.arange(sk)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w

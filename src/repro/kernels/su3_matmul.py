@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the SU3_Bench core loop.
+
+TPU-native formulation of the paper's explicit/blocked GEMM (§4, §5.4):
+
+  * A 3x3 complex matrix cannot profitably use the 128x128 MXU (K=3 wastes
+    >97% of the systolic array) — and the kernel is bandwidth-bound anyway
+    (AI = 1.35 fp32). So *sites* map to VPU lanes and the 3x3x3 complex
+    product is fully unrolled into real FMA chains over (tile,) vectors:
+    the paper's "explicit GEMM with FMA" in lane-vector form.
+  * The paper's PIUMA blocking (2x3 + 1x3 to fit the register file) becomes
+    site-tile blocking to fit VMEM: one grid step streams an
+    (2, 36, tile) A-block HBM->VMEM, produces the C-block, and streams it
+    back. tile is the tunable (kernels.ops.DEFAULT_TILE; swept by the
+    autotuner and by tests).
+  * B (2, 36) is tiny (288 B fp32); it rides in VMEM across all grid steps —
+    the paper's "B stays in cache" plus its "copy B transposed" fix: the
+    packing step lays B out so the kernel reads it row-major.
+
+Layout contract (planar SoA, packed by kernels.ops / core.su3.layouts):
+  a: (2, 36, S)  — [re|im, link*row*col, site], S % tile == 0
+  b: (2, 36)     — [re|im, link*row*col]
+  -> c: (2, 36, S)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LINKS, SU3 = 4, 3
+ROWS = LINKS * SU3 * SU3  # 36 complex entries per site
+
+
+def _flat(j: int, k: int, l: int) -> int:
+    return (j * SU3 + k) * SU3 + l
+
+
+def _su3_kernel(a_ref, b_ref, c_ref):
+    """One grid step: C-tile = A-tile (x) B, fully unrolled complex FMAs."""
+    a = a_ref[...]  # (2, 36, tile) in VMEM
+    b = b_ref[...]  # (2, 36)      in VMEM (resident across grid steps)
+    ar, ai = a[0], a[1]
+    out_r = [None] * ROWS
+    out_i = [None] * ROWS
+    for j in range(LINKS):
+        for k in range(SU3):
+            for m in range(SU3):
+                # c[j,k,m] = sum_l a[j,k,l] * b[j,l,m]   (complex)
+                cr = None
+                ci = None
+                for l in range(SU3):
+                    arow, brow = _flat(j, k, l), _flat(j, l, m)
+                    br = b[0, brow]
+                    bi = b[1, brow]
+                    if cr is None:
+                        cr = ar[arow] * br - ai[arow] * bi
+                        ci = ar[arow] * bi + ai[arow] * br
+                    else:
+                        cr = cr + ar[arow] * br - ai[arow] * bi
+                        ci = ci + ar[arow] * bi + ai[arow] * br
+                out_r[_flat(j, k, m)] = cr
+                out_i[_flat(j, k, m)] = ci
+    c = jnp.stack([jnp.stack(out_r, axis=0), jnp.stack(out_i, axis=0)], axis=0)
+    c_ref[...] = c.astype(c_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def su3_mult_planar(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    tile: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Planar-SoA SU3 multiply via pallas_call. See module docstring for layout."""
+    assert a.ndim == 3 and a.shape[:2] == (2, ROWS), a.shape
+    assert b.shape == (2, ROWS), b.shape
+    n_sites = a.shape[2]
+    assert n_sites % tile == 0, (n_sites, tile)
+    grid = (n_sites // tile,)
+    return pl.pallas_call(
+        _su3_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2, ROWS, tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((2, ROWS), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((2, ROWS, tile), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def vmem_bytes(tile: int, word_bytes: int = 4) -> int:
+    """Working-set estimate for one grid step (A, C tiles + B) — the quantity
+    the paper bounded by the register file and we bound by VMEM (~16 MiB)."""
+    return (2 * 2 * ROWS * tile + 2 * ROWS) * word_bytes

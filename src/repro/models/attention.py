@@ -1,0 +1,216 @@
+"""GQA/MQA attention with chunked-flash prefill and KV-cache decode.
+
+Pure-JAX reference formulation (this is what the multi-pod dry-run lowers;
+Pallas flash kernels in kernels/ are selected on real TPU backends). The
+chunked path is a lax.scan-over-(q-chunks, kv-chunks) online-softmax — a
+flash-attention schedule expressed in HLO, so 32k prefill never materializes
+an (S, S) score matrix.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.act_sharding import shard
+from repro.models import common
+from repro.models.common import ParamSpec
+
+NEG_INF = -1e30
+
+
+def spec(cfg: ModelConfig) -> common.SpecTree:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s: common.SpecTree = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", None)),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", None)),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", None)),
+        "wo": ParamSpec((h, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((hd,), (None,), init="ones")
+        s["k_norm"] = ParamSpec((hd,), (None,), init="ones")
+    return s
+
+
+def _project_qkv(
+    params: Any, x: jax.Array, cfg: ModelConfig, positions: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    q = shard(jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype)), "bthd")
+    k = shard(jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype)), "bthd")
+    v = shard(jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype)), "bthd")
+    if cfg.qk_norm:
+        q = common.rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = common.rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Online-softmax chunked attention. q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D)."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]  # may differ from d (e.g. MLA)
+    g = hq // hkv
+    sq_orig, skv_orig = sq, skv
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    if sq % q_chunk:  # pad ragged lengths; padded keys masked out below
+        pad = (-sq) % q_chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sq += pad
+    if skv % kv_chunk:
+        pad = (-skv) % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        skv += pad
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    scale = d**-0.5
+
+    # (nq, B, cq, Hkv, G, D)
+    qc = q.reshape(b, nq, q_chunk, hkv, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(b, nk, kv_chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, kv_chunk, hkv, dv).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_and_idx):
+        qi, iq = qi_and_idx
+        qf = qi.astype(jnp.float32) * scale
+        q_pos = iq * q_chunk + jnp.arange(q_chunk) + q_offset  # absolute q pos
+
+        def kv_step(carry, kv_and_idx):
+            acc, m, l = carry
+            ki, vi, ik = kv_and_idx
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, ki.astype(jnp.float32))
+            # Additive (cq, ck) f32 penalty instead of a broadcast boolean
+            # mask: XLA (CPU especially) hoists loop-invariant predicates out
+            # of the kv scan as stacked pred[...] buffers at the full
+            # (b,h,g,cq,ck) shape — hundreds of MB of dead weight. A small
+            # 2-D penalty added to the scores fuses cleanly.
+            k_pos = ik * kv_chunk + jnp.arange(kv_chunk)
+            penalty = jnp.zeros((q_chunk, kv_chunk), jnp.float32)
+            if causal:
+                penalty = jnp.where(k_pos[None, :] <= q_pos[:, None], 0.0, NEG_INF)
+            if skv != skv_orig:
+                penalty = penalty + jnp.where(k_pos[None, :] < skv_orig, 0.0, NEG_INF)
+            s = s + penalty[None, None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vi.astype(jnp.float32)
+            )
+            return (acc_new, m_new, l_new), None
+
+        acc0 = shard(jnp.zeros((b, hkv, g, q_chunk, dv), jnp.float32), "bhgqd")
+        m0 = shard(jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32), "bhgq")
+        l0 = shard(jnp.zeros((b, hkv, g, q_chunk), jnp.float32), "bhgq")
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), (kc, vc, jnp.arange(nk))
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-37)  # (b,hkv,g,cq,d)
+        return None, shard(out.transpose(0, 3, 1, 2, 4), "bqhgd")  # (b,cq,hkv,g,d)
+
+    _, outs = jax.lax.scan(q_step, None, (qc, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hq, dv)
+    return out[:, :sq_orig].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, cur_len: jax.Array
+) -> jax.Array:
+    """Single-step decode: q (B,1,Hq,D) against cache (B,S,Hkv,D)."""
+    b, _, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = hq // hkv
+    qf = q.reshape(b, hkv, g, d).astype(jnp.float32) * d**-0.5
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    valid = jnp.arange(s)[None, None, None, :] < cur_len
+    logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype: Any = jnp.bfloat16
+) -> dict[str, jax.Array]:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+def cache_spec(
+    cfg: ModelConfig, batch: int, max_len: int, dtype: Any = jnp.bfloat16
+) -> dict[str, jax.ShapeDtypeStruct]:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    shp = (batch, max_len, kv, hd)
+    return {
+        "k": jax.ShapeDtypeStruct(shp, dtype),
+        "v": jax.ShapeDtypeStruct(shp, dtype),
+    }
+
+
+def apply(
+    params: Any,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    cache: dict[str, jax.Array] | None = None,
+    cur_len: jax.Array | None = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> tuple[jax.Array, dict[str, jax.Array] | None]:
+    """Self-attention. If ``cache`` is given, runs one decode step (Sq==1 or
+    prefill-writing-cache when Sq>1); else full-sequence flash attention."""
+    b, sq, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg, positions)
+
+    if cache is None:
+        out = flash_attention(
+            q, k, v, causal=causal, q_chunk=q_chunk, kv_chunk=kv_chunk
+        )
+        new_cache = None
+    else:
+        assert cur_len is not None
+        start = cur_len if jnp.ndim(cur_len) == 0 else cur_len[0]
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0)
+        )
+        new_cache = {"k": k_cache, "v": v_cache}
+        if sq == 1:
+            out = decode_attention(q, k_cache, v_cache, cur_len + 1)
+        else:  # prefill into cache: attend over the fresh prefix only
+            out = flash_attention(
+                q, k, v, causal=causal, q_chunk=q_chunk, kv_chunk=kv_chunk
+            )
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def attention_ref(params: Any, x: jax.Array, cfg: ModelConfig, positions: jax.Array) -> jax.Array:
+    """Full-materialization oracle for tests."""
+    from repro.kernels import ref as kref
+
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    out = kref.flash_attention_ref(q, k, v, causal=True)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))

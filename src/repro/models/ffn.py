@@ -1,0 +1,51 @@
+"""Dense FFN (SwiGLU, LLaMA-style) and the GELU variant for Whisper."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.act_sharding import shard
+from repro.models import common
+from repro.models.common import ParamSpec
+
+
+def spec(cfg: ModelConfig, d_ff: int | None = None) -> common.SpecTree:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    return {
+        "w_gate": ParamSpec((d, f), ("embed", "mlp")),
+        "w_up": ParamSpec((d, f), ("embed", "mlp")),
+        "w_down": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def apply(params: Any, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    gate = shard(jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt)), "btf")
+    up = shard(jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dt)), "btf")
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(gate) * up, params["w_down"].astype(dt))
+
+
+def spec_gelu(cfg: ModelConfig) -> common.SpecTree:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_in": ParamSpec((d, f), ("embed", "mlp")),
+        "b_in": ParamSpec((f,), ("mlp",), init="zeros"),
+        "w_out": ParamSpec((f, d), ("mlp", "embed")),
+        "b_out": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def apply_gelu(params: Any, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = shard(
+        jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(dt)) + params["b_in"].astype(dt),
+        "btf",
+    )
+    return (
+        jnp.einsum("bsf,fd->bsd", jax.nn.gelu(h), params["w_out"].astype(dt))
+        + params["b_out"].astype(dt)
+    )

@@ -1,0 +1,209 @@
+"""Mamba-2 (SSD) mixer — the Zamba2 backbone block.
+
+Training/prefill uses the chunked state-space-duality algorithm (minimal SSD
+from the Mamba-2 paper): intra-chunk attention-like einsums with a decay mask
+plus an inter-chunk state scan. Decode keeps the O(1) recurrent state
+  h_t = h_{t-1} * exp(dt*A) + dt * B_t (x) x_t,   y_t = C_t . h_t + D*x_t
+with states {"ssm": (B, H, P, N), "conv": (B, K-1, conv_dim)}.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.act_sharding import shard
+from repro.models import common
+from repro.models.common import ParamSpec
+
+
+def dims(cfg: ModelConfig) -> tuple[int, int, int, int, int]:
+    """(d_inner, n_heads, head_p, d_state, conv_dim)."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = cfg.ssm_heads if cfg.ssm_heads else d_inner // 64
+    head_p = d_inner // n_heads
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * n  # x, B, C share the causal conv (n_groups=1)
+    return d_inner, n_heads, head_p, n, conv_dim
+
+
+def spec(cfg: ModelConfig) -> common.SpecTree:
+    d = cfg.d_model
+    d_inner, h, p, n, conv_dim = dims(cfg)
+    proj_out = 2 * d_inner + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": ParamSpec((d, proj_out), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), (None, "mlp")),
+        "conv_b": ParamSpec((conv_dim,), ("mlp",), init="zeros"),
+        "dt_bias": ParamSpec((h,), (None,), init="zeros"),
+        "a_log": ParamSpec((h,), (None,), init="ones"),
+        "d_skip": ParamSpec((h,), (None,), init="ones"),
+        "gate_norm": ParamSpec((d_inner,), ("mlp",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(params: Any, u: jax.Array, cfg: ModelConfig):
+    d_inner, h, p, n, conv_dim = dims(cfg)
+    zxbcdt = shard(jnp.einsum("bsd,de->bse", u, params["in_proj"].astype(u.dtype)), "btf")
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim :]
+    return z, xbc, dt
+
+
+def _causal_conv(params: Any, xbc: jax.Array, conv_state: jax.Array | None, cfg: ModelConfig):
+    """Depthwise causal conv over (B, S, conv_dim). Returns (out, new_state)."""
+    k = cfg.ssm_conv
+    if conv_state is not None:
+        ctx = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    else:
+        ctx = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    w = params["conv_w"].astype(xbc.dtype)  # (k, conv_dim)
+    out = sum(ctx[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    out = jax.nn.silu(out + params["conv_b"].astype(xbc.dtype))
+    new_state = ctx[:, -(k - 1) :, :] if k > 1 else None
+    return out, new_state
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., q) -> (..., q, q) lower-triangular pairwise segment sums."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]  # sum over (j, i]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (b, s, h, p)
+    dt: jax.Array,  # (b, s, h) — post-softplus
+    a: jax.Array,  # (h,) negative
+    b_in: jax.Array,  # (b, s, n)
+    c_in: jax.Array,  # (b, s, n)
+    *,
+    chunk: int = 128,
+    h0: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Minimal SSD. Returns (y (b,s,h,p), final state (b,h,p,n))."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    f32 = jnp.float32
+
+    # One scan over chunks carrying the SSM state: each step materializes a
+    # single (b, h, q, q) decay matrix instead of all nc at once (the
+    # all-chunks einsum costs nc * b * h * q^2 floats — GBs at 4k/500k seq).
+    xd = (x.astype(f32) * dt[..., None].astype(f32)).reshape(bsz, nc, chunk, h, p)
+    da = jnp.moveaxis((dt.astype(f32) * a.astype(f32)).reshape(bsz, nc, chunk, h), 2, 3)
+    bc = b_in.astype(f32).reshape(bsz, nc, chunk, n)
+    cc = c_in.astype(f32).reshape(bsz, nc, chunk, n)
+    init = h0.astype(f32) if h0 is not None else jnp.zeros((bsz, h, p, n), f32)
+
+    def step(carry, inp):
+        xd_c, da_c, b_c, c_c = inp  # (b,q,h,p), (b,h,q), (b,q,n), (b,q,n)
+        da_cum = jnp.cumsum(da_c, axis=-1)  # (b,h,q)
+        l_mat = jnp.exp(_segsum(da_c))  # (b,h,q,q)
+        y_diag = jnp.einsum("bln,bsn,bhls,bshp->blhp", c_c, b_c, l_mat, xd_c)
+        # inter-chunk contribution from the carried state
+        state_decay = jnp.exp(da_cum)  # (b,h,q)
+        y_off = jnp.einsum("bsn,bhpn,bhs->bshp", c_c, carry, state_decay)
+        # update carried state to end of chunk
+        decay_states = jnp.exp(da_cum[..., -1:] - da_cum)  # (b,h,q)
+        states = jnp.einsum("bsn,bhs,bshp->bhpn", b_c, decay_states, xd_c)
+        new = shard(carry * jnp.exp(da_cum[..., -1])[..., None, None] + states, "bhpn")
+        return new, shard(y_diag + y_off, "bshp")
+
+    seq = (
+        jnp.moveaxis(xd, 1, 0),
+        jnp.moveaxis(da, 1, 0),
+        jnp.moveaxis(bc, 1, 0),
+        jnp.moveaxis(cc, 1, 0),
+    )
+    init = shard(init, "bhpn")
+    final, ys = jax.lax.scan(step, init, seq)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p)
+    return y, final
+
+
+def apply(
+    params: Any,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    state: dict[str, jax.Array] | None = None,
+    chunk: int = 128,
+) -> tuple[jax.Array, dict[str, jax.Array] | None]:
+    """Mamba2 mixer. state=None -> train/prefill; else one-step decode."""
+    d_inner, h, p, n, conv_dim = dims(cfg)
+    bsz, s, _ = x.shape
+    dt_f32 = jnp.float32
+    z, xbc, dt_raw = _split_proj(params, x, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(dt_f32) + params["dt_bias"].astype(dt_f32))
+    a = -jnp.exp(params["a_log"].astype(dt_f32))  # (h,) negative
+
+    if state is None:
+        xbc_c, _ = _causal_conv(params, xbc, None, cfg)
+        xs = xbc_c[..., :d_inner].reshape(bsz, s, h, p)
+        b_in = xbc_c[..., d_inner : d_inner + n]
+        c_in = xbc_c[..., d_inner + n :]
+        y, _ = ssd_chunked(xs, dt, a, b_in, c_in, chunk=chunk)
+        new_state = None
+    else:
+        xbc_c, conv_state = _causal_conv(params, xbc, state["conv"], cfg)
+        xs = xbc_c[..., :d_inner].reshape(bsz, s, h, p)
+        b_in = xbc_c[..., d_inner : d_inner + n]
+        c_in = xbc_c[..., d_inner + n :]
+        hprev = state["ssm"].astype(dt_f32)
+        if s == 1:  # one-step decode recurrence
+            dec = jnp.exp(dt[:, 0] * a)  # (b, h)
+            upd = jnp.einsum(
+                "bhp,bn->bhpn", xs[:, 0].astype(dt_f32) * dt[:, 0, :, None], b_in[:, 0]
+            )
+            hnew = hprev * dec[..., None, None] + upd
+            y = jnp.einsum("bn,bhpn->bhp", c_in[:, 0], hnew)[:, None]  # (b,1,h,p)
+        else:  # prefill-with-state: chunked SSD carrying h0
+            y, hnew = ssd_chunked(xs, dt, a, b_in, c_in, chunk=chunk, h0=hprev)
+        new_state = {"ssm": hnew.astype(state["ssm"].dtype), "conv": conv_state.astype(state["conv"].dtype)}
+
+    y = y + xs.astype(y.dtype) * params["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = common.rmsnorm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype)), new_state
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype: Any = jnp.float32) -> dict[str, jax.Array]:
+    d_inner, h, p, n, conv_dim = dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, h, p, n), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def state_spec(cfg: ModelConfig, batch: int, dtype: Any = jnp.float32):
+    d_inner, h, p, n, conv_dim = dims(cfg)
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, h, p, n), dtype),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssd_ref(x, dt, a, b_in, c_in):
+    """Sequential-recurrence oracle for ssd_chunked."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    f32 = jnp.float32
+    hst = jnp.zeros((bsz, h, p, n), f32)
+    ys = []
+    for t in range(s):
+        dec = jnp.exp(dt[:, t].astype(f32) * a.astype(f32))  # (b,h)
+        upd = jnp.einsum(
+            "bhp,bn->bhpn", x[:, t].astype(f32) * dt[:, t, :, None].astype(f32), b_in[:, t].astype(f32)
+        )
+        hst = hst * dec[..., None, None] + upd
+        ys.append(jnp.einsum("bn,bhpn->bhp", c_in[:, t].astype(f32), hst))
+    return jnp.stack(ys, axis=1), hst

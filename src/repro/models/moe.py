@@ -1,0 +1,201 @@
+"""Mixture-of-Experts FFN with expert parallelism, dropless-ish capacity
+dispatch, shared experts, and both softmax (Switch/granite) and
+sigmoid+aux-free (DeepSeek-V3) routing.
+
+Dispatch design (pjit-auto friendly, EP over the 'model'/'experts' axis):
+
+  tokens stay sharded over the data axes; expert weights are sharded over
+  the expert dim ('experts' -> model axis). Routing is computed redundantly
+  on every model column (cheap), then each column *locally gathers* the
+  tokens assigned to its expert shard into an (G, E, C, d) capacity buffer
+  (activations are model-replicated between ops, so the gather needs no
+  communication), runs its experts, and scatter-adds weighted outputs back;
+  the scatter's partial sums across model columns become one all-reduce —
+  the EP combine collective.
+
+  Slot assignment within an expert's capacity is computed with a sort
+  (dropless up to the capacity factor; overflow tokens are dropped exactly
+  like GShard/Switch capacity semantics). Sentinel index == T makes both the
+  OOB gather (mode="fill" -> zeros) and the scatter (extra row) self-masking.
+
+  For long sequences the dispatch runs under lax.scan over token chunks so
+  only one chunk's capacity buffer is ever live.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.act_sharding import shard
+from repro.models import common, ffn
+from repro.models.common import ParamSpec
+
+
+def spec(cfg: ModelConfig) -> common.SpecTree:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    s: common.SpecTree = {
+        "router": ParamSpec((d, e), ("embed", "experts"), scale=0.02),
+        "w_gate": ParamSpec((e, d, f), ("experts", "embed", None)),
+        "w_up": ParamSpec((e, d, f), ("experts", "embed", None)),
+        "w_down": ParamSpec((e, f, d), ("experts", None, "embed")),
+    }
+    if cfg.router_aux_free:
+        # DeepSeek aux-loss-free routing bias: updated outside the gradient.
+        s["router_bias"] = ParamSpec((e,), ("experts",), init="zeros")
+    if cfg.n_shared_experts:
+        shared_cfg = dataclasses.replace(cfg)  # same d_model
+        s["shared"] = ffn.spec(shared_cfg, d_ff=cfg.n_shared_experts * cfg.d_ff_expert)
+    return s
+
+
+def capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = math.ceil(tokens_per_group * cfg.experts_per_token / cfg.n_experts * cfg.capacity_factor)
+    return max(c, 1)
+
+
+def _route(
+    params: Any, x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (G, T, d) -> (weights (G,T,k), idx (G,T,k), aux_loss scalar)."""
+    logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32), params["router"].astype(jnp.float32))
+    k = cfg.experts_per_token
+    if cfg.router_aux_free:
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + jax.lax.stop_gradient(params["router_bias"].astype(jnp.float32))
+        _, idx = jax.lax.top_k(sel, k)
+        w = jnp.take_along_axis(scores, idx, axis=-1)
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        top, idx = jax.lax.top_k(probs, k)
+        w = top / jnp.maximum(jnp.sum(top, axis=-1, keepdims=True), 1e-9)
+        # Switch load-balance loss: E * sum_e f_e * p_e
+        e = cfg.n_experts
+        f_e = jnp.mean(
+            jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=2), axis=(0, 1)
+        ) / k
+        p_e = jnp.mean(probs, axis=(0, 1))
+        aux = e * jnp.sum(f_e * p_e)
+    return w.astype(x.dtype), idx, aux
+
+
+def _dispatch_indices(
+    idx: jax.Array, n_tokens: int, cfg: ModelConfig, cap: int
+) -> tuple[jax.Array, jax.Array]:
+    """idx: (G, T, k) expert ids -> (token_for_slot (G,E,C), kslot (G,E,C)).
+
+    token_for_slot[g,e,c] = flat token index in [0,T) or T (sentinel/empty).
+    kslot identifies which of the token's k choices routed here (for weights).
+    """
+    g_dim, t_dim, k = idx.shape
+    e_dim = cfg.n_experts
+    tk = t_dim * k
+
+    def per_group(idx_g: jax.Array) -> tuple[jax.Array, jax.Array]:
+        e_flat = idx_g.reshape(tk)  # expert of each assignment
+        tok_flat = jnp.repeat(jnp.arange(t_dim), k)
+        k_flat = jnp.tile(jnp.arange(k), t_dim)
+        order = jnp.argsort(e_flat)  # stable: preserves token order in expert
+        e_sorted = e_flat[order]
+        counts = jnp.bincount(e_flat, length=e_dim)
+        starts = jnp.cumsum(counts) - counts
+        slot = jnp.arange(tk) - starts[e_sorted]  # position within expert
+        buf_tok = jnp.full((e_dim, cap), t_dim, dtype=jnp.int32)
+        buf_k = jnp.zeros((e_dim, cap), dtype=jnp.int32)
+        # slots >= cap fall out of bounds and are dropped (capacity overflow).
+        buf_tok = buf_tok.at[e_sorted, slot].set(tok_flat[order].astype(jnp.int32), mode="drop")
+        buf_k = buf_k.at[e_sorted, slot].set(k_flat[order].astype(jnp.int32), mode="drop")
+        return buf_tok, buf_k
+
+    return jax.vmap(per_group)(idx)
+
+
+def _expert_ffn(params: Any, xs: jax.Array) -> jax.Array:
+    """xs: (G, E, C, d) -> (G, E, C, d), per-expert SwiGLU."""
+    dt = xs.dtype
+    gate = jnp.einsum("gecd,edf->gecf", xs, params["w_gate"].astype(dt))
+    up = jnp.einsum("gecd,edf->gecf", xs, params["w_up"].astype(dt))
+    return jnp.einsum("gecf,efd->gecd", jax.nn.silu(gate) * up, params["w_down"].astype(dt))
+
+
+def _moe_chunk(params: Any, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (G, T, d) one token-chunk -> (out (G,T,d), aux)."""
+    g_dim, t_dim, d = x.shape
+    cap = capacity(t_dim, cfg)
+    w, idx, aux = _route(params, x, cfg)
+    tok_slot, k_slot = _dispatch_indices(idx, t_dim, cfg, cap)  # (G,E,C)
+
+    def gather_group(xg: jax.Array, tokg: jax.Array) -> jax.Array:
+        return jnp.take(xg, tokg, axis=0, mode="fill", fill_value=0)  # (E,C,d)
+
+    xs = shard(jax.vmap(gather_group)(x, tok_slot), "gecd")  # (G,E,C,d)
+    ys = shard(_expert_ffn(params, xs), "gecd")
+
+    # combine weights per slot
+    def slot_weights(wg: jax.Array, tokg: jax.Array, kg: jax.Array) -> jax.Array:
+        flat = tokg * cfg.experts_per_token + kg  # (E,C) index into (T*k,)
+        return jnp.take(wg.reshape(-1), flat, axis=0, mode="fill", fill_value=0)
+
+    ws = jax.vmap(slot_weights)(w, tok_slot, k_slot)  # (G,E,C)
+    ys = ys * ws[..., None].astype(ys.dtype)
+
+    def scatter_group(ysg: jax.Array, tokg: jax.Array) -> jax.Array:
+        out = jnp.zeros((t_dim + 1, d), ysg.dtype)  # extra row = sentinel sink
+        out = out.at[tokg.reshape(-1)].add(ysg.reshape(-1, d))
+        return out[:t_dim]
+
+    out = shard(jax.vmap(scatter_group)(ys, tok_slot), "btd")
+    return out, aux
+
+
+def apply(
+    params: Any, x: jax.Array, cfg: ModelConfig, *, token_chunk: int = 8192
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss). Groups = batch rows; long sequences
+    are scanned in chunks so one capacity buffer is live at a time."""
+    b, s, d = x.shape
+    if s > token_chunk and s % token_chunk == 0:
+        n_chunks = s // token_chunk
+        xc = x.reshape(b, n_chunks, token_chunk, d).transpose(1, 0, 2, 3)
+
+        def step(_, xi):
+            out_i, aux_i = _moe_chunk(params, xi, cfg)
+            return None, (out_i, aux_i)
+
+        _, (outs, auxs) = jax.lax.scan(step, None, xc)
+        out = outs.transpose(1, 0, 2, 3).reshape(b, s, d)
+        aux = jnp.mean(auxs)
+    else:
+        out, aux = _moe_chunk(params, x, cfg)
+
+    if cfg.n_shared_experts:
+        out = out + ffn.apply(params["shared"], x)
+    return out, aux
+
+
+def moe_ref(params: Any, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Oracle: dense per-token expert evaluation (no capacity drops).
+
+    Matches `apply` exactly when no expert exceeds capacity.
+    """
+    b, s, d = x.shape
+    w, idx, _ = _route(params, x.reshape(b, s, d), cfg)
+    out = jnp.zeros_like(x)
+    for kk in range(cfg.experts_per_token):
+        e_ids = idx[..., kk]  # (b, s)
+        wg = jnp.take(params["w_gate"], e_ids, axis=0)  # (b,s,d,f)
+        wu = jnp.take(params["w_up"], e_ids, axis=0)
+        wd = jnp.take(params["w_down"], e_ids, axis=0)
+        gate = jnp.einsum("bsd,bsdf->bsf", x, wg.astype(x.dtype))
+        up = jnp.einsum("bsd,bsdf->bsf", x, wu.astype(x.dtype))
+        y = jnp.einsum("bsf,bsfd->bsd", jax.nn.silu(gate) * up, wd.astype(x.dtype))
+        out = out + y * w[..., kk, None].astype(x.dtype)
+    if cfg.n_shared_experts:
+        out = out + ffn.apply(params["shared"], x)
+    return out

@@ -1,0 +1,109 @@
+"""Uniform model API per architecture family + input_specs for the dry-run.
+
+registry.get(cfg) returns a ModelApi with:
+  spec/init/loss_fn/prefill/decode_step/state_spec/init_state
+``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for every model
+input of an (arch x shape) cell — weak-type-correct, shardable, and
+allocation-free, as the multi-pod dry-run requires.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer, whisper, xlstm_model, zamba
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    spec: Callable[..., Any]
+    init: Callable[..., Any]
+    loss_fn: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    state_spec: Callable[..., Any]
+    init_state: Callable[..., Any]
+
+
+_TRANSFORMER = ModelApi(
+    spec=transformer.spec,
+    init=transformer.init,
+    loss_fn=transformer.loss_fn,
+    prefill=transformer.prefill,
+    decode_step=transformer.decode_step,
+    state_spec=transformer.state_spec,
+    init_state=transformer.init_state,
+)
+
+_ZAMBA = ModelApi(
+    spec=zamba.spec, init=zamba.init, loss_fn=zamba.loss_fn,
+    prefill=zamba.prefill, decode_step=zamba.decode_step,
+    state_spec=zamba.state_spec, init_state=zamba.init_state,
+)
+
+_XLSTM = ModelApi(
+    spec=xlstm_model.spec, init=xlstm_model.init, loss_fn=xlstm_model.loss_fn,
+    prefill=xlstm_model.prefill, decode_step=xlstm_model.decode_step,
+    state_spec=xlstm_model.state_spec, init_state=xlstm_model.init_state,
+)
+
+_WHISPER = ModelApi(
+    spec=whisper.spec, init=whisper.init, loss_fn=whisper.loss_fn,
+    prefill=whisper.prefill, decode_step=whisper.decode_step,
+    state_spec=whisper.state_spec, init_state=whisper.init_state,
+)
+
+
+def get(cfg: ModelConfig) -> ModelApi:
+    if cfg.is_encoder_decoder:
+        return _WHISPER
+    if cfg.hybrid_attn_every:
+        return _ZAMBA
+    if cfg.family == "ssm":
+        return _XLSTM
+    return _TRANSFORMER
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) dry-run cell.
+
+    train:   {tokens, labels, (labels2), (patches), (frames)} full seq_len
+    prefill: {tokens, (patches), (frames)} full seq_len (cache written)
+    decode:  {tokens (B,1)} — the KV cache/state comes from state_spec.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    emb = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        specs: dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.mtp_depth:
+            specs["labels2"] = jax.ShapeDtypeStruct((b, s), i32)
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:  # decode
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.n_patches and shape.kind != "decode":
+        specs["patches"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), emb)
+    if cfg.is_encoder_decoder and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_len, cfg.d_model), emb)
+    return specs
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeConfig, key: jax.Array) -> dict[str, jax.Array]:
+    """Concrete random inputs matching input_specs (smoke tests/examples)."""
+    specs = input_specs(cfg, shape)
+    out: dict[str, jax.Array] = {}
+    keys = jax.random.split(key, len(specs))
+    for k, (name, sds) in zip(keys, sorted(specs.items())):
+        if sds.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, sds.shape, 0, cfg.vocab_size, jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, sds.shape, jnp.float32).astype(sds.dtype)
+    return out

@@ -1,0 +1,243 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, strictly sequential) with exponential gating and stabilizer state,
+per Beck et al. 2024 (arXiv:2405.04517).
+
+Both cells run as a lax.scan over time for train/prefill and as a one-step
+update for decode — decode state is O(1) in sequence length, which is why
+xlstm-125m is a `long_500k` architecture.
+
+mLSTM state: {"c": (B,H,dk,dv), "n": (B,H,dk), "m": (B,H)}
+sLSTM state: {"c","n","h": (B,d_inner), "m": (B,d_inner)}
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.act_sharding import shard
+from repro.models import common
+from repro.models.common import ParamSpec
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = cfg.n_heads
+    return d_inner, h, d_inner // h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_spec(cfg: ModelConfig) -> common.SpecTree:
+    d = cfg.d_model
+    d_inner, h, p = _dims(cfg)
+    return {
+        "w_up": ParamSpec((d, 2 * d_inner), ("embed", "mlp")),  # x_inner, z
+        "conv_w": ParamSpec((cfg.ssm_conv, d_inner), (None, "mlp")),
+        "conv_b": ParamSpec((d_inner,), ("mlp",), init="zeros"),
+        "w_q": ParamSpec((d_inner, h, p), ("mlp", None, None)),
+        "w_k": ParamSpec((d_inner, h, p), ("mlp", None, None)),
+        "w_v": ParamSpec((d_inner, h, p), ("mlp", None, None)),
+        "w_i": ParamSpec((d_inner, h), ("mlp", None), scale=0.02),
+        "w_f": ParamSpec((d_inner, h), ("mlp", None), scale=0.02),
+        "b_i": ParamSpec((h,), (None,), init="zeros"),
+        "b_f": ParamSpec((h,), (None,), init="ones"),  # forget-bias > 0
+        "skip": ParamSpec((d_inner,), ("mlp",), init="ones"),
+        "out_norm": ParamSpec((d_inner,), ("mlp",), init="ones"),
+        "w_down": ParamSpec((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_cell(carry, qkvif):
+    """One timestep. carry: (c (b,h,dk,dv), n (b,h,dk), m (b,h))."""
+    c, n, m = carry
+    q, k, v, i_pre, f_pre = qkvif  # (b,h,p) x3, (b,h) x2
+    log_f = -jax.nn.softplus(-f_pre)  # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = f_g[..., None, None] * c + i_g[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n_new = f_g[..., None] * n + i_g[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)), 1.0)
+    h_t = num / den[..., None]
+    return (c_new, n_new, m_new), h_t
+
+
+def mlstm_apply(
+    params: Any,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    state: dict[str, jax.Array] | None = None,
+) -> tuple[jax.Array, dict[str, jax.Array] | None]:
+    d_inner, h, p = _dims(cfg)
+    bsz, s, _ = x.shape
+    dt = x.dtype
+    up = shard(jnp.einsum("bsd,de->bse", x, params["w_up"].astype(dt)), "btf")
+    x_in, z = up[..., :d_inner], up[..., d_inner:]
+
+    # causal conv on the qk path
+    k_conv = cfg.ssm_conv
+    if state is not None:
+        ctx = jnp.concatenate([state["conv"].astype(dt), x_in], axis=1)
+        new_conv = ctx[:, -(k_conv - 1) :, :]
+    else:
+        ctx = jnp.pad(x_in, ((0, 0), (k_conv - 1, 0), (0, 0)))
+        new_conv = None
+    w = params["conv_w"].astype(dt)
+    x_c = sum(ctx[:, i : i + s, :] * w[i] for i in range(k_conv))
+    x_c = jax.nn.silu(x_c + params["conv_b"].astype(dt))
+
+    f32 = jnp.float32
+    q = jnp.einsum("bse,ehp->bshp", x_c, params["w_q"].astype(dt)).astype(f32)
+    k = jnp.einsum("bse,ehp->bshp", x_c, params["w_k"].astype(dt)).astype(f32) * (p**-0.5)
+    v = jnp.einsum("bse,ehp->bshp", x_in, params["w_v"].astype(dt)).astype(f32)
+    i_pre = (jnp.einsum("bse,eh->bsh", x_in, params["w_i"].astype(dt)) + params["b_i"]).astype(f32)
+    f_pre = (jnp.einsum("bse,eh->bsh", x_in, params["w_f"].astype(dt)) + params["b_f"]).astype(f32)
+
+    if state is None:
+        carry0 = (
+            jnp.zeros((bsz, h, p, p), f32),
+            jnp.zeros((bsz, h, p), f32),
+            jnp.zeros((bsz, h), f32),
+        )
+    else:
+        carry0 = (state["c"].astype(f32), state["n"].astype(f32), state["m"].astype(f32))
+    if s == 1 and state is not None:
+        carry, h_t = _mlstm_cell(carry0, (q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0]))
+        h_seq = h_t[:, None]
+    else:
+        seq = (
+            jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+            jnp.moveaxis(i_pre, 1, 0), jnp.moveaxis(f_pre, 1, 0),
+        )
+        carry, hs = jax.lax.scan(_mlstm_cell, carry0, seq)
+        h_seq = jnp.moveaxis(hs, 0, 1)  # (b,s,h,p)
+    if state is None:
+        new_state = None
+    else:
+        new_state = {
+            "c": carry[0].astype(state["c"].dtype),
+            "n": carry[1].astype(state["n"].dtype),
+            "m": carry[2].astype(state["m"].dtype),
+            "conv": new_conv.astype(state["conv"].dtype),
+        }
+
+    h_flat = h_seq.reshape(bsz, s, d_inner).astype(dt)
+    h_flat = h_flat + params["skip"].astype(dt) * x_c
+    h_flat = common.rmsnorm(h_flat, params["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", h_flat, params["w_down"].astype(dt)), new_state
+
+
+def mlstm_state_spec(cfg: ModelConfig, batch: int, dtype: Any = jnp.float32):
+    d_inner, h, p = _dims(cfg)
+    return {
+        "c": jax.ShapeDtypeStruct((batch, h, p, p), dtype),
+        "n": jax.ShapeDtypeStruct((batch, h, p), dtype),
+        "m": jax.ShapeDtypeStruct((batch, h), dtype),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, d_inner), dtype),
+    }
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, dtype: Any = jnp.float32):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), mlstm_state_spec(cfg, batch, dtype))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_spec(cfg: ModelConfig) -> common.SpecTree:
+    d = cfg.d_model
+    d_inner, h, p = _dims(cfg)
+    return {
+        "w_up": ParamSpec((d, d_inner), ("embed", "mlp")),
+        # input projections for i, f, z, o gates
+        "w_gates": ParamSpec((d_inner, 4, d_inner), ("mlp", None, None), scale=0.02),
+        "b_gates": ParamSpec((4, d_inner), (None, None), init="zeros"),
+        # block-diagonal (per-head) recurrent weights for each gate
+        "r_gates": ParamSpec((4, h, p, p), (None, None, None, None), scale=0.02),
+        "out_norm": ParamSpec((d_inner,), ("mlp",), init="ones"),
+        "w_down": ParamSpec((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_cell(params, cfg, carry, x_t):
+    """x_t: (b, 4, d_inner) pre-computed input gate contributions."""
+    d_inner, h, p = _dims(cfg)
+    c, n, m, h_prev = carry  # all (b, d_inner) f32
+    hp = h_prev.reshape(-1, h, p)
+    rec = jnp.einsum("ghpq,bhq->gbhp", params["r_gates"].astype(jnp.float32), hp)
+    rec = jnp.moveaxis(rec, 0, 1).reshape(-1, 4, d_inner)
+    pre = x_t + rec + params["b_gates"].astype(jnp.float32)[None]
+    i_pre, f_pre, z_pre, o_pre = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(z_pre)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_apply(
+    params: Any,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    state: dict[str, jax.Array] | None = None,
+) -> tuple[jax.Array, dict[str, jax.Array] | None]:
+    d_inner, h, p = _dims(cfg)
+    bsz, s, _ = x.shape
+    dt = x.dtype
+    f32 = jnp.float32
+    u = shard(jnp.einsum("bsd,de->bse", x, params["w_up"].astype(dt)), "btf")
+    gates_in = jnp.einsum("bse,egf->bsgf", u, params["w_gates"].astype(dt))
+    gates_in = gates_in.astype(f32)  # (b, s, 4, d_inner)
+
+    if state is None:
+        zeros = jnp.zeros((bsz, d_inner), f32)
+        carry = (zeros, zeros, zeros, zeros)
+    else:
+        carry = (
+            state["c"].astype(f32), state["n"].astype(f32),
+            state["m"].astype(f32), state["h"].astype(f32),
+        )
+    if s == 1 and state is not None:
+        carry, h_t = _slstm_cell(params, cfg, carry, gates_in[:, 0])
+        h_seq = h_t[:, None]
+    else:
+        carry, hs = jax.lax.scan(
+            lambda c, g: _slstm_cell(params, cfg, c, g), carry, jnp.moveaxis(gates_in, 1, 0)
+        )
+        h_seq = jnp.moveaxis(hs, 0, 1)
+    if state is None:
+        new_state = None
+    else:
+        new_state = {
+            "c": carry[0].astype(state["c"].dtype), "n": carry[1].astype(state["n"].dtype),
+            "m": carry[2].astype(state["m"].dtype), "h": carry[3].astype(state["h"].dtype),
+        }
+
+    y = common.rmsnorm(h_seq.astype(dt), params["out_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["w_down"].astype(dt)), new_state
+
+
+def slstm_state_spec(cfg: ModelConfig, batch: int, dtype: Any = jnp.float32):
+    d_inner, _, _ = _dims(cfg)
+    shp = jax.ShapeDtypeStruct((batch, d_inner), dtype)
+    return {"c": shp, "n": shp, "m": shp, "h": shp}
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, dtype: Any = jnp.float32):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), slstm_state_spec(cfg, batch, dtype))

@@ -1,0 +1,106 @@
+"""xLSTM LM stack: mLSTM blocks with sLSTM blocks at cfg.slstm_layers.
+
+Heterogeneous 12-layer stack -> plain python loop over per-layer param dicts
+(compile-time cost is fine at this depth; the homogeneous-scan machinery in
+transformer.py is for the 48-88 layer archs).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.act_sharding import shard
+from repro.models import common, xlstm
+from repro.models.common import ParamSpec
+
+
+def _is_slstm(cfg: ModelConfig, i: int) -> bool:
+    return i in cfg.slstm_layers
+
+
+def spec(cfg: ModelConfig) -> common.SpecTree:
+    d, v = cfg.d_model, cfg.vocab_size
+    blocks = []
+    for i in range(cfg.n_layers):
+        cell = xlstm.slstm_spec(cfg) if _is_slstm(cfg, i) else xlstm.mlstm_spec(cfg)
+        blocks.append({"norm": ParamSpec((d,), ("embed",), init="ones"), "cell": cell})
+    return {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), init="embed", scale=0.02),
+        "blocks": blocks,
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "lm_head": ParamSpec((d, v), ("embed", "vocab"), scale=0.02),
+    }
+
+
+def init(key: jax.Array, cfg: ModelConfig, dtype: Any = jnp.float32) -> Any:
+    return common.init_params(spec(cfg), key, dtype)
+
+
+def forward(
+    params: Any,
+    batch: dict[str, jax.Array],
+    cfg: ModelConfig,
+    *,
+    state: Any = None,
+    remat: bool = False,
+) -> tuple[jax.Array, Any]:
+    x = shard(
+        common.embed_lookup(params["embed"], batch["tokens"]).astype(jnp.dtype(cfg.dtype)),
+        "btd",
+    )
+    new_states = []
+    for i, bp in enumerate(params["blocks"]):
+        apply = xlstm.slstm_apply if _is_slstm(cfg, i) else xlstm.mlstm_apply
+        st = state[i] if state is not None else None
+
+        def block(bp, x, st, apply=apply):
+            x = shard(x, "btd")
+            h = common.rmsnorm(x, bp["norm"], cfg.norm_eps)
+            y, new_st = apply(bp["cell"], h, cfg, state=st)
+            return shard(x + y, "btd"), new_st
+
+        if remat:
+            block = jax.checkpoint(block, policy=jax.checkpoint_policies.nothing_saveable)
+        x, new_st = block(bp, x, st)
+        new_states.append(new_st)
+    return x, (new_states if state is not None else None)
+
+
+def _logits(params: Any, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = common.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return shard(jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(h.dtype)), "btv")
+
+
+def loss_fn(params: Any, batch: dict[str, jax.Array], cfg: ModelConfig, *, remat: bool = True, **_):
+    x, _ = forward(params, batch, cfg, remat=remat)
+    loss = common.softmax_cross_entropy(_logits(params, x, cfg), batch["labels"])
+    return loss, {"nll": loss, "loss": loss}
+
+
+def state_spec(cfg: ModelConfig, batch: int, max_len: int = 0, dtype: Any = jnp.float32) -> Any:
+    out = []
+    for i in range(cfg.n_layers):
+        if _is_slstm(cfg, i):
+            out.append(xlstm.slstm_state_spec(cfg, batch, dtype))
+        else:
+            out.append(xlstm.mlstm_state_spec(cfg, batch, dtype))
+    return out
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int = 0, dtype: Any = jnp.float32) -> Any:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), state_spec(cfg, batch, max_len, dtype)
+    )
+
+
+def prefill(params: Any, batch: dict[str, jax.Array], state: Any, cfg: ModelConfig, **_):
+    x, new_state = forward(params, batch, cfg, state=state)
+    return _logits(params, x[:, -1:], cfg), new_state
+
+
+def decode_step(params: Any, batch: dict[str, jax.Array], state: Any, cur_len: jax.Array, cfg: ModelConfig):
+    x, new_state = forward(params, batch, cfg, state=state)
+    return _logits(params, x, cfg), new_state

@@ -1,0 +1,189 @@
+"""Zamba2-style hybrid: Mamba2 backbone with a single *shared* attention
+block applied every k layers (weight sharing across applications — the
+Zamba/Zamba2 signature). Each application keeps its own KV cache.
+
+Decode state:
+  {"mamba": stacked mamba2 states (L, ...),
+   "attn":  stacked KV caches (n_apps, B, S, kv, hd)}
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.act_sharding import shard
+from repro.models import attention, common, ffn, mamba2
+from repro.models.common import ParamSpec
+
+
+def _counts(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_groups, group_size, n_tail). layers = n_groups*k + tail."""
+    k = cfg.hybrid_attn_every
+    n_groups = cfg.n_layers // k
+    return n_groups, k, cfg.n_layers - n_groups * k
+
+
+def mamba_layer_spec(cfg: ModelConfig) -> common.SpecTree:
+    return {
+        "norm": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "mixer": mamba2.spec(cfg),
+    }
+
+
+def shared_block_spec(cfg: ModelConfig) -> common.SpecTree:
+    d = cfg.d_model
+    return {
+        "attn_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "attn": attention.spec(cfg),
+        "ffn_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "ffn": ffn.spec(cfg),
+    }
+
+
+def spec(cfg: ModelConfig) -> common.SpecTree:
+    d, v = cfg.d_model, cfg.vocab_size
+    return {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), init="embed", scale=0.02),
+        "mamba_layers": common.stack_specs(mamba_layer_spec(cfg), cfg.n_layers),
+        "shared_attn": shared_block_spec(cfg),  # ONE param set, many applications
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "lm_head": ParamSpec((d, v), ("embed", "vocab"), scale=0.02),
+    }
+
+
+def init(key: jax.Array, cfg: ModelConfig, dtype: Any = jnp.float32) -> Any:
+    return common.init_params(spec(cfg), key, dtype)
+
+
+def _mamba_block(lp: Any, x: jax.Array, cfg: ModelConfig, state: Any = None):
+    x = shard(x, "btd")
+    h = common.rmsnorm(x, lp["norm"], cfg.norm_eps)
+    y, new_state = mamba2.apply(lp["mixer"], h, cfg, state=state)
+    return shard(x + y, "btd"), new_state
+
+
+def _shared_block(
+    sp: Any, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+    cache: Any = None, cur_len: jax.Array | None = None,
+):
+    h = common.rmsnorm(x, sp["attn_norm"], cfg.norm_eps)
+    a, new_cache = attention.apply(
+        sp["attn"], h, cfg, positions=positions, cache=cache, cur_len=cur_len
+    )
+    x = x + a
+    h = common.rmsnorm(x, sp["ffn_norm"], cfg.norm_eps)
+    return x + ffn.apply(sp["ffn"], h), new_cache
+
+
+def _slice_layers(params: Any, start: int, n: int) -> Any:
+    return jax.tree.map(lambda p: jax.lax.slice_in_dim(p, start, start + n, axis=0), params)
+
+
+def forward(
+    params: Any,
+    batch: dict[str, jax.Array],
+    cfg: ModelConfig,
+    *,
+    state: Any = None,
+    cur_len: jax.Array | None = None,
+    remat: bool = False,
+) -> tuple[jax.Array, Any]:
+    b, s = batch["tokens"].shape
+    positions = (
+        jnp.broadcast_to(jnp.arange(s), (b, s))
+        if cur_len is None
+        else jnp.broadcast_to(cur_len + jnp.arange(s), (b, s))
+    )
+    x = shard(
+        common.embed_lookup(params["embed"], batch["tokens"]).astype(jnp.dtype(cfg.dtype)),
+        "btd",
+    )
+    n_groups, k, tail = _counts(cfg)
+
+    def mamba_scan(stack, x, states):
+        def body(carry, layer_in):
+            xc = carry
+            lp, st = layer_in
+            y, new_st = _mamba_block(lp, xc, cfg, state=st)
+            return y, new_st
+
+        if remat:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        return jax.lax.scan(body, x, (stack, states))
+
+    mamba_states = state["mamba"] if state is not None else None
+    new_mamba, new_attn = [], []
+    for g in range(n_groups):
+        stack = _slice_layers(params["mamba_layers"], g * k, k)
+        states = _slice_layers(mamba_states, g * k, k) if state is not None else None
+        x, ns = mamba_scan(stack, x, states)
+        new_mamba.append(ns)
+        cache = (
+            jax.tree.map(lambda c: c[g], state["attn"]) if state is not None else None
+        )
+        x, nc = _shared_block(
+            params["shared_attn"], x, cfg, positions, cache=cache, cur_len=cur_len
+        )
+        new_attn.append(nc)
+    if tail:
+        stack = _slice_layers(params["mamba_layers"], n_groups * k, tail)
+        states = (
+            _slice_layers(mamba_states, n_groups * k, tail) if state is not None else None
+        )
+        x, ns = mamba_scan(stack, x, states)
+        new_mamba.append(ns)
+
+    new_state = None
+    if state is not None:
+        new_state = {
+            "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_mamba),
+            "attn": jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *new_attn),
+        }
+    return x, new_state
+
+
+def _logits(params: Any, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = common.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return shard(jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(h.dtype)), "btv")
+
+
+def loss_fn(params: Any, batch: dict[str, jax.Array], cfg: ModelConfig, *, remat: bool = True, **_):
+    x, _ = forward(params, batch, cfg, remat=remat)
+    logits = _logits(params, x, cfg)
+    loss = common.softmax_cross_entropy(logits, batch["labels"])
+    return loss, {"nll": loss, "loss": loss}
+
+
+def state_spec(cfg: ModelConfig, batch: int, max_len: int, dtype: Any = jnp.bfloat16) -> Any:
+    n_groups, _, _ = _counts(cfg)
+    kv_len = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+    m = mamba2.state_spec(cfg, batch)
+    c = attention.cache_spec(cfg, batch, kv_len, dtype)
+    return {
+        "mamba": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype), m
+        ),
+        "attn": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_groups,) + s.shape, s.dtype), c
+        ),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int, dtype: Any = jnp.bfloat16) -> Any:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), state_spec(cfg, batch, max_len, dtype)
+    )
+
+
+def prefill(params: Any, batch: dict[str, jax.Array], state: Any, cfg: ModelConfig, **_):
+    cur = jnp.zeros((), jnp.int32)
+    x, new_state = forward(params, batch, cfg, state=state, cur_len=cur)
+    return _logits(params, x[:, -1:], cfg), new_state
+
+
+def decode_step(params: Any, batch: dict[str, jax.Array], state: Any, cur_len: jax.Array, cfg: ModelConfig):
+    x, new_state = forward(params, batch, cfg, state=state, cur_len=cur_len)
+    return _logits(params, x, cfg), new_state

@@ -1,0 +1,74 @@
+"""Batched serving engine: prefill + decode with greedy/temperature sampling.
+
+Static-batch engine (one prefill, N decode steps) — the serve_step the
+decode_* dry-run shapes lower is exactly ``_decode_fn`` here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0  # 0 => greedy
+    seed: int = 0
+    cache_dtype: str = "float32"  # bf16 on TPU
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.api = registry.get(cfg)
+        self._prefill = jax.jit(
+            lambda p, b, s: self.api.prefill(
+                p, b, s, cfg,
+                q_chunk=min(512, scfg.max_len), kv_chunk=min(1024, scfg.max_len),
+            )
+        )
+        self._decode = jax.jit(
+            lambda p, b, s, n: self.api.decode_step(p, b, s, n, cfg)
+        )
+
+    def _sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        probs_logits = logits[:, -1].astype(jnp.float32) / self.scfg.temperature
+        return jax.random.categorical(key, probs_logits, axis=-1)[:, None].astype(jnp.int32)
+
+    def generate(
+        self, prompts: np.ndarray, n_new_tokens: int, extras: dict[str, Any] | None = None
+    ) -> np.ndarray:
+        """prompts: (B, prompt_len) int32 -> (B, prompt_len + n_new_tokens)."""
+        b, plen = prompts.shape
+        assert plen + n_new_tokens <= self.scfg.max_len
+        state = self.api.init_state(
+            self.cfg, b, self.scfg.max_len, jnp.dtype(self.scfg.cache_dtype)
+        )
+        batch: dict[str, Any] = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if extras:
+            batch.update(extras)
+        logits, state = self._prefill(self.params, batch, state)
+        key = jax.random.PRNGKey(self.scfg.seed)
+        out = [jnp.asarray(prompts, jnp.int32)]
+        key, sub = jax.random.split(key)
+        tok = self._sample(logits, sub)
+        out.append(tok)
+        cur = plen
+        for _ in range(n_new_tokens - 1):
+            logits, state = self._decode(self.params, {"tokens": tok}, state, jnp.int32(cur))
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)
+            out.append(tok)
+            cur += 1
+        return np.asarray(jnp.concatenate(out, axis=1))

@@ -1,0 +1,85 @@
+"""The training loop: restore-or-init, step, checkpoint, fault hooks.
+
+This is the single-process driver (examples + CPU e2e tests); the
+multi-pod launcher composes the same pieces with jax.distributed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, PipelineState, TokenPipeline, make_train_batch
+from repro.distributed.fault_tolerance import HeartbeatMonitor
+from repro.models import registry
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    seq_len: int = 256
+    global_batch: int = 8
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    microbatches: int = 1
+    opt: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
+
+
+def train(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    *,
+    log: Callable[[str], None] = print,
+) -> dict[str, Any]:
+    api = registry.get(cfg)
+    pipe = TokenPipeline(
+        DataConfig(cfg.vocab_size, tcfg.seq_len, tcfg.global_batch, seed=tcfg.seed)
+    )
+    params = api.init(jax.random.PRNGKey(tcfg.seed), cfg)
+    opt_state = adamw.init(params, tcfg.opt)
+    pstate = PipelineState()
+    start_step = 0
+
+    ckpt = None
+    if tcfg.checkpoint_dir:
+        ckpt = CheckpointManager(CheckpointConfig(tcfg.checkpoint_dir))
+        if ckpt.latest_step() is not None:
+            (params, opt_state), extra, start_step = ckpt.restore((params, opt_state))
+            pstate = PipelineState(step=int(extra.get("pipeline_step", start_step)))
+            log(f"restored checkpoint at step {start_step}")
+
+    step_fn = jax.jit(
+        make_train_step(cfg, tcfg.opt, microbatches=tcfg.microbatches,
+                        q_chunk=min(512, tcfg.seq_len), kv_chunk=min(1024, tcfg.seq_len)),
+        donate_argnums=(0, 1),
+    )
+    monitor = HeartbeatMonitor(["host0"])
+    losses: list[float] = []
+    t_last = time.perf_counter()
+    for step in range(start_step, tcfg.steps):
+        batch, pstate = make_train_batch(pipe, pstate, cfg)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if (step + 1) % tcfg.log_every == 0 or step == tcfg.steps - 1:
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            now = time.perf_counter()
+            monitor.beat("host0", step_time_s=(now - t_last) / tcfg.log_every)
+            t_last = now
+            log(f"step {step + 1:5d} loss {loss:.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} lr {float(metrics['lr']):.2e}")
+        if ckpt and (step + 1) % tcfg.checkpoint_every == 0:
+            ckpt.save(step + 1, (params, opt_state), {"pipeline_step": pstate.step})
+    if ckpt:
+        ckpt.save(tcfg.steps, (params, opt_state), {"pipeline_step": pstate.step})
+        ckpt.wait()
+    return {"params": params, "losses": losses, "final_loss": losses[-1] if losses else None}

@@ -1,0 +1,97 @@
+"""Training step factory: loss + grad (+ microbatched accumulation) + AdamW.
+
+Gradient accumulation runs as a lax.scan over microbatches — each microbatch
+re-runs the remat'd forward/backward and adds into the (param-sharded) grad
+buffer. This bounds activation memory to one microbatch and is the overlap
+unit for the latency-hiding scheduler (grad all-reduces of microbatch k
+overlap with compute of k+1 under XLA's scheduler on TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.optim import adamw
+
+
+def make_loss_fn(cfg: ModelConfig, **loss_kwargs) -> Callable[..., Any]:
+    api = registry.get(cfg)
+
+    def loss_fn(params: Any, batch: dict[str, jax.Array]):
+        return api.loss_fn(params, batch, cfg, **loss_kwargs)
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig,
+    *,
+    microbatches: int = 1,
+    grad_acc_dtype: str = "float32",
+    param_shardings: Any = None,
+    **loss_kwargs,
+) -> Callable[..., Any]:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``param_shardings``: when given, the gradient accumulator is pinned to
+    the param shardings — without this XLA's propagation through the
+    microbatch scan can replicate the f32 accumulator and reduce gradients
+    with a full-tensor all-reduce instead of a sharded reduce-scatter
+    (observed: 4.6 TB/device/step of all-reduce on the 671B train cell).
+    ``grad_acc_dtype``: bf16 halves both accumulator HBM and reduction wire
+    bytes (error-feedback-free: acceptable at 8-16 microbatches, recorded
+    as a §Perf tradeoff).
+    """
+    loss_fn = make_loss_fn(cfg, **loss_kwargs)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    acc_dt = jnp.dtype(grad_acc_dtype)
+
+    def _pin(tree: Any) -> Any:
+        if param_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, param_shardings)
+
+    def train_step(params: Any, opt_state: dict[str, Any], batch: dict[str, jax.Array]):
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+            grads = _pin(grads)
+        else:
+            # (B, ...) -> (k, B/k, ...) and scan-accumulate
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, b):
+                g_acc, m_acc = carry
+                (_, metrics), g = grad_fn(params, b)
+                # Pin g BEFORE the add: converts the partial (unreduced)
+                # per-device grads into the FSDP layout via reduce-scatter;
+                # without it SPMD all-reduces the full tensors then slices
+                # (2x the link bytes — 2.67 TB/step on the 671B cell).
+                g = _pin(g)
+                g_acc = _pin(jax.tree.map(lambda a, x: a + x.astype(a.dtype), g_acc, g))
+                m_acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = _pin(jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params))
+            # probe the metric tree structure so the accumulator matches
+            metric_shapes = jax.eval_shape(
+                lambda p, b: grad_fn(p, b)[0][1], params, jax.tree.map(lambda x: x[0], mb)
+            )
+            m0 = jax.tree.map(lambda _: jnp.zeros((), jnp.float32), metric_shapes)
+            (grads, msum), _ = jax.lax.scan(acc, (g0, m0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / microbatches, msum)
+        new_params, new_opt, om = adamw.update(grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(om)
+        return new_params, new_opt, metrics
+
+    return train_step

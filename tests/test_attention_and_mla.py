@@ -1,0 +1,114 @@
+"""Chunked-flash attention and MLA vs full-materialization oracles; decode
+parity with the training path (the strongest serving-correctness check)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ref as kref
+from repro.models import attention, common, mla
+
+
+@pytest.mark.parametrize("hq,hkv", [(8, 8), (8, 2), (8, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_vs_ref(hq, hkv, causal):
+    k = jax.random.PRNGKey(hq * 10 + hkv)
+    q = jax.random.normal(k, (2, 32, hq, 16))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (2, 32, hkv, 16))
+    v = jax.random.normal(jax.random.fold_in(k, 2), (2, 32, hkv, 16))
+    out = attention.flash_attention(q, kk, v, causal=causal, q_chunk=8, kv_chunk=8)
+    expected = kref.flash_attention_ref(q, kk, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_ragged_lengths():
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (2, 30, 4, 8))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (2, 30, 4, 8))
+    v = jax.random.normal(jax.random.fold_in(k, 2), (2, 30, 4, 8))
+    out = attention.flash_attention(q, kk, v, causal=True, q_chunk=16, kv_chunk=16)
+    expected = kref.flash_attention_ref(q, kk, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), rtol=2e-5, atol=2e-5)
+
+
+def _gqa_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64, n_heads=8,
+                n_kv_heads=2, d_ff=128, vocab_size=101, qk_norm=True, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_attention_decode_matches_full():
+    cfg = _gqa_cfg()
+    params = common.init_params(attention.spec(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 64))
+    pos = jnp.broadcast_to(jnp.arange(24), (2, 24))
+    full = attention.attention_ref(params, x, cfg, pos)
+    cache = attention.init_cache(cfg, 2, 24, jnp.float32)
+    outs = []
+    for t in range(24):
+        o, cache = attention.apply(
+            params, x[:, t : t + 1], cfg, positions=pos[:, t : t + 1],
+            cache=cache, cur_len=jnp.int32(t),
+        )
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, 1)), np.asarray(full), rtol=1e-4, atol=1e-4
+    )
+
+
+def _mla_cfg():
+    return ModelConfig(
+        name="m", family="moe", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=97, dtype="float32", use_mla=True, q_lora_rank=48,
+        kv_lora_rank=32, qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+    )
+
+
+def test_mla_flash_vs_ref():
+    cfg = _mla_cfg()
+    params = common.init_params(mla.spec(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64))
+    pos = jnp.broadcast_to(jnp.arange(16), (2, 16))
+    out, _ = mla.apply(params, x, cfg, positions=pos, q_chunk=8, kv_chunk=8)
+    expected = mla.mla_ref(params, x, cfg, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), rtol=1e-4, atol=1e-4)
+
+
+def test_mla_absorbed_decode_matches_ref():
+    """The absorbed-latent decode must agree with decompressed attention."""
+    cfg = _mla_cfg()
+    params = common.init_params(mla.spec(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64))
+    pos = jnp.broadcast_to(jnp.arange(16), (2, 16))
+    expected = mla.mla_ref(params, x, cfg, pos)
+    cache = mla.init_cache(cfg, 2, 16, jnp.float32)
+    outs = []
+    for t in range(16):
+        o, cache = mla.apply(
+            params, x[:, t : t + 1], cfg, positions=pos[:, t : t + 1],
+            cache=cache, cur_len=jnp.int32(t),
+        )
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, 1)), np.asarray(expected), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE scores depend only on relative positions."""
+    d = 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 1, d))
+    p0 = jnp.arange(4)[None]
+    p1 = p0 + 100
+    s0 = jnp.einsum(
+        "bshd,bthd->bst",
+        common.apply_rope(q, p0, 1e4), common.apply_rope(k, p0, 1e4),
+    )
+    s1 = jnp.einsum(
+        "bshd,bthd->bst",
+        common.apply_rope(q, p1, 1e4), common.apply_rope(k, p1, 1e4),
+    )
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), rtol=1e-4, atol=1e-5)

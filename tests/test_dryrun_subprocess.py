@@ -1,0 +1,54 @@
+"""Dry-run integration: lower+compile real cells in a subprocess with a
+reduced placeholder device count (device count locks at first jax init, so
+these must not run in the main test process)."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+CASES = [
+    ("whisper-tiny", "train_4k", "single"),
+    ("xlstm-125m", "decode_32k", "single"),
+    ("granite-moe-1b-a400m", "prefill_32k", "multi"),
+    ("zamba2-1.2b", "long_500k", "single"),
+]
+
+
+@pytest.mark.parametrize("arch,shape,mesh", CASES)
+def test_dryrun_cell_subprocess(arch, shape, mesh):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env["REPRO_XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape, "--mesh", mesh],
+        capture_output=True, text=True, env=env, timeout=480, cwd=ROOT,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "[ok]" in out.stdout
+    result = json.loads(
+        (ROOT / "experiments" / "dryrun" / f"{arch}__{shape}__{mesh}.json").read_text()
+    )
+    assert result["status"] == "ok"
+    r = result["roofline"]
+    assert r["flops_per_device"] > 0
+    assert r["bytes_per_device"] > 0
+    assert r["dominant"] in ("compute", "memory", "collective")
+
+
+def test_dryrun_skips_inapplicable():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env["REPRO_XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "yi-6b", "--shape", "long_500k", "--mesh", "single"],
+        capture_output=True, text=True, env=env, timeout=120, cwd=ROOT,
+    )
+    assert out.returncode == 0
+    assert "[skip]" in out.stdout

@@ -1,0 +1,59 @@
+"""Pallas flash-attention TPU kernel vs oracle: shape/dtype/block sweeps
+(interpret mode on CPU) + VMEM budget check."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.roofline import TPU_V5E
+from repro.kernels import ref as kref
+from repro.kernels.flash_attention import flash_attention_tpu, vmem_bytes
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (4, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_tpu_vs_ref(hq, hkv, causal):
+    b, s, d = 2, 64, 32
+    k0 = jax.random.PRNGKey(hq * 7 + hkv + int(causal))
+    q = jax.random.normal(k0, (b, s, hq, d))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (b, s, hkv, d))
+    out = flash_attention_tpu(q, k, v, causal=causal, block_q=16, block_k=32,
+                              interpret=True)
+    expected = kref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(16, 16), (32, 64), (64, 32)])
+def test_flash_tpu_block_sweep(block_q, block_k):
+    b, s, h, d = 1, 128, 4, 16
+    k0 = jax.random.PRNGKey(block_q + block_k)
+    q = jax.random.normal(k0, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (b, s, h, d))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (b, s, h, d))
+    out = flash_attention_tpu(q, k, v, block_q=block_q, block_k=block_k,
+                              interpret=True)
+    expected = kref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_tpu_bf16():
+    b, s, h, d = 2, 64, 4, 32
+    k0 = jax.random.PRNGKey(0)
+    q = jax.random.normal(k0, (b, s, h, d)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (b, s, h, d)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (b, s, h, d)).astype(jnp.bfloat16)
+    out = flash_attention_tpu(q, k, v, block_q=16, block_k=32, interpret=True)
+    expected = kref.flash_attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(expected),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_flash_tpu_vmem_budget():
+    # prefill_32k config: per grid step working set must fit VMEM
+    assert vmem_bytes(block_q=256, block_k=256, skv=32768, d=128, g=6) < TPU_V5E.vmem_bytes * 8
+    assert vmem_bytes(block_q=256, block_k=256, skv=4096, d=128, g=4) < TPU_V5E.vmem_bytes

@@ -1,0 +1,76 @@
+"""Layout roundtrips (hypothesis), traffic model vs the paper's numbers,
+and the SU3 engine end-to-end on every placement/layout/variant combo."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.su3 import layouts
+from repro.core.su3.engine import EngineConfig, SU3Engine
+from repro.core.su3.layouts import Layout, TrafficModel
+
+
+@hypothesis.settings(deadline=None, max_examples=25)
+@hypothesis.given(n_sites=st.integers(1, 500), seed=st.integers(0, 2**31 - 1))
+def test_layout_roundtrips(n_sites, seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (n_sites, 4, 3, 3, 2))
+    a = jax.lax.complex(a[..., 0], a[..., 1])
+    for pack, unpack, args in [
+        (layouts.pack_aos, layouts.unpack_aos, ()),
+        (layouts.pack_soa, layouts.unpack_soa, ()),
+    ]:
+        rt = unpack(pack(a), *args) if not args else None
+        np.testing.assert_allclose(np.asarray(rt), np.asarray(a), rtol=1e-6)
+    rt = layouts.unpack_aosoa(layouts.pack_aosoa(a), n_sites)
+    np.testing.assert_allclose(np.asarray(rt), np.asarray(a), rtol=1e-6)
+
+
+def test_paper_arithmetic_intensity():
+    # §3.1: AI = 864/(320*2) = 1.35 fp32; 0.675 fp64
+    assert layouts.paper_arithmetic_intensity(4) == pytest.approx(1.35)
+    assert layouts.paper_arithmetic_intensity(8) == pytest.approx(0.675)
+
+
+def test_traffic_model_layouts():
+    aos = TrafficModel(Layout.AOS, 1000, 4)
+    soa = TrafficModel(Layout.SOA, 1000, 4)
+    # paper: site struct is 320 B of which 288 B is gauge field
+    assert aos.bytes_per_site_rw == 2 * 320
+    assert soa.bytes_per_site_rw == 2 * 288
+    # SoA removes exactly the padding traffic -> higher AI
+    assert soa.arithmetic_intensity > aos.arithmetic_intensity
+    assert soa.arithmetic_intensity == pytest.approx(864 / 576)
+
+
+def test_site_sizes_match_paper():
+    # §3.1: L=32 -> A is 320 MiB fp32
+    shape = layouts.LatticeShape(32)
+    assert shape.n_sites * 320 == 320 * 1024**2
+
+
+@pytest.mark.parametrize("placement", ["sharded", "host_scatter", "replicated"])
+def test_engine_placements(placement):
+    cfg = EngineConfig(L=4, placement=placement, iterations=2, warmups=0, tile=128)
+    r = SU3Engine(cfg).run()
+    assert r.verified
+    assert r.gflops > 0
+
+
+@pytest.mark.parametrize(
+    "layout,variant",
+    [(Layout.SOA, "pallas"), (Layout.AOSOA, "pallas"),
+     (Layout.SOA, "versionX"), (Layout.AOS, "version_gemm"),
+     (Layout.SOA, "version0"), (Layout.AOS, "version3")],
+)
+def test_engine_layout_variant_matrix(layout, variant):
+    cfg = EngineConfig(L=4, layout=layout, variant=variant, iterations=1, warmups=0, tile=128)
+    r = SU3Engine(cfg).run()
+    assert r.verified, (layout, variant)
+
+
+def test_engine_bfloat16():
+    cfg = EngineConfig(L=4, dtype="bfloat16", iterations=1, warmups=0, tile=128)
+    assert SU3Engine(cfg).run().verified

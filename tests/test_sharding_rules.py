@@ -1,0 +1,116 @@
+"""Sharding resolver unit tests: divisibility fallbacks, axis-conflict
+avoidance, state-sharding rules, and the locality invariant."""
+import os
+import subprocess
+import sys
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding
+from repro.models.common import ParamSpec
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) != 1, reason="resolver tests build their own meshes"
+)
+
+
+def _mesh(shape=(2, 4), axes=("data", "model")):
+    # single-device container: build a mesh over 1 device when needed
+    import math
+
+    import numpy as np
+
+    n = math.prod(shape)
+    if len(jax.devices()) < n:
+        dev = np.array(jax.devices()[:1] * n).reshape(shape)
+        return jax.sharding.Mesh(dev, axes)
+    return jax.make_mesh(shape, axes)
+
+
+def test_resolver_basic_tp():
+    mesh = _mesh()
+    rules = sharding.MeshRules(data_axes=("data",), fsdp_axes=("data",), model_axes=("model",))
+    spec = sharding.resolve_spec(("embed", "mlp"), (64, 128), mesh, rules)
+    assert spec == P("data", "model")
+
+
+def test_resolver_divisibility_fallback():
+    mesh = _mesh()
+    rules = sharding.default_rules(mesh)
+    # kv_heads=1 cannot shard over model(4) -> replicated
+    spec = sharding.resolve_spec(("embed", "kv_heads", None), (64, 1, 128), mesh, rules)
+    assert spec in (P("data"), P("data", None), P("data", None, None))
+    # odd dim cannot shard over data(2)
+    spec = sharding.resolve_spec(("embed",), (63,), mesh, rules)
+    assert spec == P()
+
+
+def test_resolver_no_axis_reuse():
+    mesh = _mesh()
+    rules = sharding.MeshRules(
+        data_axes=("data",), fsdp_axes=("model",), model_axes=("model",)
+    )
+    # both dims want 'model': only the first gets it
+    spec = sharding.resolve_spec(("embed", "mlp"), (64, 128), mesh, rules)
+    assert spec == P("model")
+
+
+@hypothesis.settings(deadline=None, max_examples=30)
+@hypothesis.given(
+    d0=st.sampled_from([1, 2, 3, 8, 48, 63, 64]),
+    d1=st.sampled_from([1, 4, 16, 128, 256]),
+)
+def test_resolver_locality_invariant(d0, d1):
+    """local shape x axis sizes == global shape for every resolution."""
+    mesh = _mesh()
+    rules = sharding.default_rules(mesh)
+    spec = sharding.resolve_spec(("embed", "heads"), (d0, d1), mesh, rules)
+    for i, dim in enumerate((d0, d1)):
+        ax = spec[i] if i < len(spec) else None
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        assert dim % size == 0
+
+
+def test_state_sharding_kv_and_seq_shard():
+    mesh = _mesh((2, 4))
+    rules = sharding.default_rules(mesh)
+    # (L,B,S,H,D) with H=1 (MQA): replicated over model by default
+    spec = sharding._state_spec_for("k", (8, 4, 64, 1, 16), mesh, rules)
+    assert spec == P(None, "data", None, None, None)
+    # with kv_seq_shard: sequence dim takes the model axis
+    spec = sharding._state_spec_for("k", (8, 4, 64, 1, 16), mesh, rules, kv_seq_shard=True)
+    assert spec == P(None, "data", "model", None, None)
+    # H divisible: heads win, sequence stays unsharded either way
+    spec = sharding._state_spec_for("k", (8, 4, 64, 8, 16), mesh, rules, kv_seq_shard=True)
+    assert spec == P(None, "data", None, "model", None)
+    # layer dim never decides batch sharding (regression: n_layers % dp != 0)
+    spec = sharding._state_spec_for("k", (37, 4, 64, 8, 16), mesh, rules)
+    assert spec[1] == "data"
+
+
+def test_default_rules_multi_pod():
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    rules = sharding.default_rules(mesh)
+    assert rules.data_axes == ("pod", "data")
+    assert rules.fsdp_axes == ("pod", "data")
+
+
+def test_param_shardings_tree():
+    mesh = _mesh()
+    rules = sharding.default_rules(mesh)
+    spec_tree = {
+        "w": ParamSpec((64, 128), ("embed", "mlp")),
+        "n": {"b": ParamSpec((4,), (None,))},
+    }
+    sh = sharding.param_shardings(spec_tree, mesh, rules)
+    assert sh["w"].spec == P("data", "model")
+    assert sh["n"]["b"].spec == P()

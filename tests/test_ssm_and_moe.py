@@ -1,0 +1,143 @@
+"""Mamba2/xLSTM recurrence parity and MoE dispatch vs dense oracle."""
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import common, mamba2, moe, xlstm
+
+
+def _hybrid_cfg():
+    return ModelConfig(name="h", family="hybrid", n_layers=2, d_model=64, n_heads=4,
+                       n_kv_heads=4, d_ff=128, vocab_size=97, dtype="float32",
+                       ssm_state=16, ssm_heads=4, ssm_expand=2)
+
+
+@hypothesis.settings(deadline=None, max_examples=10)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), chunk=st.sampled_from([4, 8, 16]))
+def test_ssd_chunked_vs_sequential(seed, chunk):
+    k = jax.random.PRNGKey(seed)
+    b, s, h, p, n = 2, 16, 2, 4, 8
+    x = jax.random.normal(k, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1), (b, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 2), (h,)))
+    b_in = jax.random.normal(jax.random.fold_in(k, 3), (b, s, n))
+    c_in = jax.random.normal(jax.random.fold_in(k, 4), (b, s, n))
+    y, hf = mamba2.ssd_chunked(x, dt, a, b_in, c_in, chunk=chunk)
+    y_ref, hf_ref = mamba2.ssd_ref(x, dt, a, b_in, c_in)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hf_ref), rtol=1e-3, atol=1e-4)
+
+
+def test_mamba2_prefill_decode_parity():
+    cfg = _hybrid_cfg()
+    params = common.init_params(mamba2.spec(cfg), jax.random.PRNGKey(5))
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 16, 64))
+    y_full, _ = mamba2.apply(params, x, cfg, chunk=8)
+    st_ = mamba2.init_state(cfg, 2)
+    outs = []
+    for t in range(16):
+        o, st_ = mamba2.apply(params, x[:, t : t + 1], cfg, state=st_)
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, 1)), np.asarray(y_full), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_mamba2_chunked_prefill_with_state():
+    """prefill in two halves with carried state == one-shot prefill."""
+    cfg = _hybrid_cfg()
+    params = common.init_params(mamba2.spec(cfg), jax.random.PRNGKey(5))
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 16, 64))
+    y_full, _ = mamba2.apply(params, x, cfg, chunk=8)
+    st_ = mamba2.init_state(cfg, 2)
+    y1, st_ = mamba2.apply(params, x[:, :8], cfg, state=st_, chunk=4)
+    y2, st_ = mamba2.apply(params, x[:, 8:], cfg, state=st_, chunk=4)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full), rtol=1e-3, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("kind", ["mlstm", "slstm"])
+def test_xlstm_parity(kind):
+    cfg = ModelConfig(name="x", family="ssm", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=4, d_ff=0, vocab_size=97, dtype="float32",
+                      ssm_expand=2, ssm_conv=4)
+    specf = xlstm.mlstm_spec if kind == "mlstm" else xlstm.slstm_spec
+    applyf = xlstm.mlstm_apply if kind == "mlstm" else xlstm.slstm_apply
+    statef = xlstm.mlstm_init_state if kind == "mlstm" else xlstm.slstm_init_state
+    params = common.init_params(specf(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 64))
+    y_full, _ = applyf(params, x, cfg)
+    st_ = statef(cfg, 2)
+    outs = []
+    for t in range(12):
+        o, st_ = applyf(params, x[:, t : t + 1], cfg, state=st_)
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, 1)), np.asarray(y_full), rtol=1e-3, atol=2e-4
+    )
+    assert np.all(np.isfinite(np.asarray(y_full)))
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def _moe_cfg(**kw):
+    base = dict(name="m", family="moe", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, d_ff=128, vocab_size=97, dtype="float32",
+                n_experts=8, experts_per_token=2, n_shared_experts=1,
+                d_ff_expert=32, capacity_factor=8.0)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("aux_free", [False, True])
+def test_moe_matches_dense_oracle(aux_free):
+    cfg = _moe_cfg(router_aux_free=aux_free)
+    params = common.init_params(moe.spec(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64))
+    out, aux = moe.apply(params, x, cfg)
+    expected = moe.moe_ref(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), rtol=1e-4, atol=1e-5)
+    assert np.isfinite(float(aux))
+
+
+def test_moe_chunked_matches_unchunked():
+    cfg = _moe_cfg()
+    params = common.init_params(moe.spec(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 64))
+    out_c, _ = moe.apply(params, x, cfg, token_chunk=16)
+    out_u, _ = moe.apply(params, x, cfg, token_chunk=10**9)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_u), rtol=1e-5, atol=1e-6)
+
+
+def test_moe_capacity_drops_tokens():
+    """At capacity_factor -> 0 every routed token is dropped; only the
+    shared-expert path remains."""
+    cfg = _moe_cfg(capacity_factor=1e-9, n_shared_experts=0)
+    params = common.init_params(moe.spec(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64))
+    out, _ = moe.apply(params, x, cfg)
+    # capacity 1 per expert: at most E tokens survive per group
+    assert float(jnp.mean(jnp.abs(out))) < float(jnp.mean(jnp.abs(moe.moe_ref(params, x, cfg))))
+
+
+@hypothesis.settings(deadline=None, max_examples=10)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_moe_dispatch_weight_conservation(seed):
+    """Each surviving token's combine weights sum to <= 1 (normalized)."""
+    cfg = _moe_cfg()
+    params = common.init_params(moe.spec(cfg), jax.random.PRNGKey(seed % 1000))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 8, 64))
+    w, idx, _ = moe._route(params, x, cfg)
+    s = np.asarray(jnp.sum(w, -1))
+    assert np.all(s <= 1.0 + 1e-5)
+    assert np.all(s >= 0.99)  # normalized

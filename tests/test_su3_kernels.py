@@ -1,0 +1,115 @@
+"""Pallas SU3 kernel vs pure-jnp oracle: shape/dtype/tile sweeps + SU(3)
+algebra property tests (hypothesis)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.su3 import layouts, variants
+from repro.kernels import ops, ref, su3_matmul
+
+
+def _random_links(key, n_sites):
+    a = jax.random.normal(key, (n_sites, 4, 3, 3, 2))
+    return jax.lax.complex(a[..., 0], a[..., 1])
+
+
+def _random_b(key):
+    b = jax.random.normal(key, (4, 3, 3, 2))
+    return jax.lax.complex(b[..., 0], b[..., 1])
+
+
+@pytest.mark.parametrize("n_sites", [1, 7, 128, 300, 1024])
+@pytest.mark.parametrize("tile", [128, 256])
+def test_pallas_matches_ref_shapes(n_sites, tile):
+    a = _random_links(jax.random.PRNGKey(n_sites), n_sites)
+    b = _random_b(jax.random.PRNGKey(n_sites + 1))
+    out = ops.su3_mult(a, b, tile=tile)
+    expected = ref.su3_mult_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_pallas_planar_dtypes(dtype):
+    n = 256
+    a = _random_links(jax.random.PRNGKey(0), n)
+    b = _random_b(jax.random.PRNGKey(1))
+    a_p = layouts.pack_soa(a).reshape(2, su3_matmul.ROWS, n).astype(dtype)
+    b_p = layouts.to_planar(b).reshape(2, su3_matmul.ROWS).astype(dtype)
+    out = ops.su3_mult_planar(a_p, b_p, tile=128)
+    expected = ref.su3_mult_planar_ref(
+        a_p.astype(jnp.float32).reshape(2, 4, 3, 3, n),
+        b_p.astype(jnp.float32).reshape(2, 4, 3, 3),
+    ).reshape(2, su3_matmul.ROWS, n)
+    tol = 5e-2 if dtype == "bfloat16" else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected), rtol=tol, atol=tol
+    )
+
+
+def test_vmem_budget():
+    # paper's register-blocking lesson: the tile working set must fit VMEM
+    from repro.core.roofline import TPU_V5E
+
+    assert su3_matmul.vmem_bytes(ops.DEFAULT_TILE) < TPU_V5E.vmem_bytes
+
+
+@pytest.mark.parametrize("variant", variants.variant_names())
+def test_all_variants_match_ref(variant):
+    a = _random_links(jax.random.PRNGKey(7), 384)
+    b = _random_b(jax.random.PRNGKey(8))
+    out = variants.get_variant(variant)(a, b)
+    expected = ref.su3_mult_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Property tests: the kernel must respect SU(3) group structure.
+# ---------------------------------------------------------------------------
+
+
+def _random_su3(rng: np.random.Generator) -> np.ndarray:
+    """Random special-unitary 3x3 via QR + phase fix."""
+    z = rng.normal(size=(3, 3)) + 1j * rng.normal(size=(3, 3))
+    q, r = np.linalg.qr(z)
+    q = q * (np.diagonal(r) / np.abs(np.diagonal(r)))[None, :].conj()
+    q = q / np.linalg.det(q) ** (1 / 3)
+    return q.astype(np.complex64)
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), n_sites=st.integers(1, 64))
+def test_su3_closure_property(seed, n_sites):
+    """SU(3) x SU(3) stays in SU(3): unit determinant, unitary product."""
+    rng = np.random.default_rng(seed)
+    a = np.stack([[_random_su3(rng) for _ in range(4)] for _ in range(n_sites)])
+    b = np.stack([_random_su3(rng) for _ in range(4)])
+    c = np.asarray(ops.su3_mult(jnp.asarray(a), jnp.asarray(b), tile=128))
+    dets = np.linalg.det(c.reshape(-1, 3, 3))
+    np.testing.assert_allclose(np.abs(dets), 1.0, atol=1e-4)
+    prods = np.einsum("nij,nkj->nik", c.reshape(-1, 3, 3), c.reshape(-1, 3, 3).conj())
+    np.testing.assert_allclose(prods, np.broadcast_to(np.eye(3), prods.shape), atol=1e-4)
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_linearity_property(seed):
+    """C(alpha*A) == alpha*C(A) — the kernel is linear in A."""
+    key = jax.random.PRNGKey(seed)
+    a = _random_links(key, 128)
+    b = _random_b(jax.random.fold_in(key, 1))
+    alpha = 2.5 - 0.5j
+    c1 = np.asarray(ops.su3_mult(alpha * a, b, tile=128))
+    c2 = alpha * np.asarray(ops.su3_mult(a, b, tile=128))
+    np.testing.assert_allclose(c1, c2, rtol=1e-4, atol=1e-4)
+
+
+def test_paper_identity_check():
+    """su3_bench validation: A=(1,0), B=(1/3,0) -> C elements == (1,0)."""
+    n = 256
+    a = jnp.full((n, 4, 3, 3), 1.0 + 0.0j, jnp.complex64)
+    b = jnp.full((4, 3, 3), (1.0 / 3.0) + 0.0j, jnp.complex64)
+    c = ops.su3_mult(a, b, tile=128)
+    np.testing.assert_allclose(np.asarray(c), np.ones_like(np.asarray(c)), rtol=1e-6)
