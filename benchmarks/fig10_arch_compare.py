@@ -35,14 +35,16 @@ def run(L: int = 8) -> list[dict]:
                 "bandwidth" if bound == bw * AI_SOA else "compute"
             ),
         })
-    # measured on this container (relative only)
-    r = SU3Engine(EngineConfig(L=L, variant="versionX", iterations=3, warmups=1,
-                               tile=128)).run()
+    # measured on this container (relative only) — one ExecutionPlan row
+    eng = SU3Engine(EngineConfig(L=L, variant="versionX", iterations=3, warmups=1,
+                                 tile=128))
+    r = eng.run()
     rows.append({
         "name": "fig10_container_cpu_measured",
         "bw_gbs": round(r.gbytes, 2),
         "compute_gf": None, "issue_gf": None,
         "bound_gf": round(r.gflops, 2), "bound_term": "measured",
+        "plan": eng.plan.describe(),
     })
     return rows
 

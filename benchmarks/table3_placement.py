@@ -2,23 +2,22 @@
 lesson). ``sharded`` = paper's empty-constructor + parallel init fix;
 ``host_scatter`` = default-constructor first-touch on socket 0 (data built
 on one device, then redistributed); ``replicated`` = the memory-blowup
-failure. Reports init/scatter time and per-device bytes."""
+failure. Each policy is just a different ExecutionPlan (same codec/kernel
+tuple, different out_shardings at init) — the ``plan`` column records it.
+Reports init/scatter time and per-device bytes."""
 from __future__ import annotations
 
-import jax
-
 from repro.core.su3.engine import EngineConfig, SU3Engine
+from repro.core.su3.plan import PLACEMENTS
 
 
 def run(L: int = 8) -> list[dict]:
     rows = []
-    for placement in ("sharded", "host_scatter", "replicated"):
+    for placement in PLACEMENTS:
         cfg = EngineConfig(L=L, placement=placement, iterations=2, warmups=1, tile=128)
-        eng = SU3Engine(cfg)
-        r = eng.run()
+        r = SU3Engine(cfg).run()
         row = r.row()
         row["name"] = f"table3_{placement}"
-        row["devices"] = eng.n_devices
         rows.append(row)
     return rows
 

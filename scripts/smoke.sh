@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Quick-mode smoke: tier-1 suite + machine-readable benchmark rows.
+#
+#   scripts/smoke.sh            # pytest + benchmarks --quick --json
+#   scripts/smoke.sh --no-bench # tests only
+#
+# Writes BENCH_su3.json in the repo root so the perf trajectory is
+# comparable across PRs (schema: su3-bench-rows/v1).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 suite =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+  echo "== quick benchmarks (BENCH_su3.json) =="
+  python -m benchmarks.run --quick --json BENCH_su3.json
+fi

@@ -1,0 +1,39 @@
+"""Version-compat shims for the span of jax versions this repo runs on.
+
+The container pins jax 0.4.x while the code targets current jax; every
+new-API touchpoint goes through here so call sites stay clean.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable
+
+import jax
+
+
+def shard_map(
+    f: Callable, *, mesh: jax.sharding.Mesh, in_specs: Any, out_specs: Any,
+    check_vma: bool = True,
+) -> Callable:
+    """jax.shard_map (new) / jax.experimental.shard_map (0.4.x; check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map as _sm  # 0.4.x
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma)
+
+
+def set_mesh(mesh: jax.sharding.Mesh):
+    """jax.set_mesh (new) / sharding.use_mesh (mid) / no-op ctx (0.4.x).
+
+    On 0.4.x there is no ambient-mesh API; callers there always pass explicit
+    NamedShardings built from the same mesh, so a null context is equivalent.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    use = getattr(jax.sharding, "use_mesh", None)
+    if use is not None:
+        return use(mesh)
+    return contextlib.nullcontext(mesh)

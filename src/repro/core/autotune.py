@@ -1,29 +1,42 @@
-"""SU3 autotune: the paper's §4/§5.4 methodology as a driver.
+"""SU3 autotune: the paper's §4/§5.4 methodology as a driver, with a cache.
 
 Hillclimbs the SU3 kernel the way the paper does — enumerate candidates
 (layout, variant, Pallas tile), napkin-math the expected effect, measure,
 keep the winner:
 
   * layout sweep charges the traffic model (AOS streams 320 B/site vs SoA
-    288 B — the paper's streaming-store/padding point);
+    288 B — the paper's streaming-store/padding point) and cross-checks it
+    at the HLO level by lowering the *physical* ExecutionPlan step, so the
+    packed layout actually shows up in the counted bytes;
   * tile sweep bounds the VMEM working set (the paper's register-blocking
-    point re-derived for HBM->VMEM);
-  * variant sweep measures XLA wall time on this host AND the HLO-level
-    bytes from the loop-aware cost model (the dry-run profile) so the
-    decision is made on the roofline term, not host noise.
+    point re-derived for HBM->VMEM) and measures each candidate;
+  * ``best_config`` selects the tile with the best *measured* GFLOPS among
+    VMEM-fitting, verified candidates and persists the decision in a JSON
+    cache keyed by (backend, device_kind, layout, dtype, L, n_devices) — a
+    second call loads the tuned plan with zero measurements, so engines,
+    serving, and benchmarks all start from the tuned tuple for free.
+
+Cache location: ``$REPRO_SU3_CACHE_DIR`` or ``~/.cache/repro_su3``.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import tempfile
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import hlo_costs, roofline
-from repro.core.su3 import layouts, variants
+from repro.core.su3 import layouts, registry, variants
 from repro.core.su3.engine import EngineConfig, SU3Engine
+from repro.core.su3.plan import make_raw_step
 from repro.kernels import su3_matmul
+
+CACHE_ENV = "REPRO_SU3_CACHE_DIR"
+CACHE_FILE = "su3_autotune.json"
 
 
 @dataclasses.dataclass
@@ -36,31 +49,51 @@ class TuneResult:
     v5e_bound_gf: float
 
 
-def hlo_bytes_for_variant(variant: str, layout: layouts.Layout, n_sites: int = 4096) -> float:
-    """Lower the variant through XLA and count HLO-level bytes per site."""
-    a = jnp.zeros((n_sites, 4, 3, 3), jnp.complex64)
-    b = jnp.zeros((4, 3, 3), jnp.complex64)
-    if variant == "pallas":
-        from repro.kernels import ops
+# ---------------------------------------------------------------------------
+# HLO-level accounting
+# ---------------------------------------------------------------------------
 
-        a_p = layouts.pack_soa(a).reshape(2, su3_matmul.ROWS, n_sites)
-        b_p = layouts.to_planar(b).reshape(2, su3_matmul.ROWS)
-        fn = lambda x, y: ops.su3_mult_planar(x, y, tile=512, interpret=True)
-        compiled = jax.jit(fn).lower(a_p, b_p).compile()
-    else:
-        fn = variants.get_variant(variant)
-        compiled = jax.jit(fn).lower(a, b).compile()
+
+def hlo_bytes_for_variant(
+    variant: str, layout: layouts.Layout, n_sites: int = 4096, tile: int = 512
+) -> float:
+    """Lower the *physical* plan step through XLA; count HLO bytes per site.
+
+    The operands are packed per the requested layout before lowering (via the
+    layout codec), so AOS genuinely streams its 80-word sites and SOA its
+    72-word sites — previously the canonical complex operands were lowered
+    for every non-Pallas variant and the ``layout`` argument was ignored,
+    making the AOS and SOA rows identical.
+    """
+    codec = layouts.make_codec(layout, tile=tile, dtype="float32")
+    entry = registry.get_kernel(variant)
+    interpret = True if entry.form == registry.PLANAR else None
+    step = make_raw_step(codec, entry, tile=tile, interpret=interpret)
+    pad = (-n_sites) % tile
+    a = jnp.zeros((n_sites + pad, 4, 3, 3), jnp.complex64)
+    a_phys = codec.pack(a)
+    b_p = codec.pack_b(jnp.zeros((4, 3, 3), jnp.complex64))
+    compiled = jax.jit(step).lower(a_phys, b_p).compile()
     cost = hlo_costs.analyze_hlo(compiled.as_text())
-    return cost.bytes / n_sites
+    return cost.bytes / (n_sites + pad)  # bytes per site actually lowered
 
 
-def tile_sweep(tiles: tuple[int, ...] = (128, 256, 512, 1024, 2048, 4096)) -> list[dict]:
+# ---------------------------------------------------------------------------
+# Sweeps
+# ---------------------------------------------------------------------------
+
+
+def tile_sweep(
+    tiles: tuple[int, ...] = (128, 256, 512, 1024, 2048, 4096),
+    L: int = 8,
+    dtype: str = "float32",
+) -> list[dict]:
     """VMEM working set + measured engine time per Pallas tile."""
     rows = []
     for tile in tiles:
         vmem = su3_matmul.vmem_bytes(tile)
         fits = vmem <= roofline.TPU_V5E.vmem_bytes
-        cfg = EngineConfig(L=8, variant="pallas", layout=layouts.Layout.SOA,
+        cfg = EngineConfig(L=L, dtype=dtype, variant="pallas", layout=layouts.Layout.SOA,
                            tile=tile, iterations=2, warmups=1)
         r = SU3Engine(cfg).run()
         rows.append({
@@ -90,11 +123,116 @@ def layout_sweep(n_sites: int = 4096) -> list[dict]:
     return rows
 
 
-def best_config() -> dict[str, Any]:
-    """The tuned production config: SoA + largest VMEM-fitting tile."""
-    tiles = [r for r in tile_sweep() if r["fits_vmem"] and r["verified"]]
-    best_tile = max(tiles, key=lambda r: r["tile"])
-    return {"layout": "soa", "variant": "pallas", "tile": best_tile["tile"]}
+# ---------------------------------------------------------------------------
+# Persistent cache
+# ---------------------------------------------------------------------------
+
+
+def cache_dir() -> str:
+    return os.environ.get(
+        CACHE_ENV, os.path.join(os.path.expanduser("~"), ".cache", "repro_su3")
+    )
+
+
+def cache_key(
+    *, backend: str, device_kind: str, layout: str, dtype: str, L: int, n_devices: int
+) -> str:
+    return f"{backend}|{device_kind}|{layout}|{dtype}|L{L}|d{n_devices}"
+
+
+def _cache_path(directory: str | None) -> str:
+    return os.path.join(directory or cache_dir(), CACHE_FILE)
+
+
+def load_cache(directory: str | None = None) -> dict[str, Any]:
+    path = _cache_path(directory)
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return {}
+
+
+def store_cache_entry(
+    key: str, entry: dict[str, Any], directory: str | None = None
+) -> None:
+    """Read-modify-write the cache file via an atomic rename."""
+    path = _cache_path(directory)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    cache = load_cache(directory)
+    cache[key] = entry
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(cache, f, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def _device_identity() -> tuple[str, str, int]:
+    devs = jax.devices()
+    return jax.default_backend(), devs[0].device_kind, len(devs)
+
+
+# ---------------------------------------------------------------------------
+# The tuned production config
+# ---------------------------------------------------------------------------
+
+
+def best_config(
+    L: int = 8,
+    dtype: str = "float32",
+    *,
+    cache: bool = True,
+    cache_directory: str | None = None,
+    refresh: bool = False,
+) -> dict[str, Any]:
+    """The tuned production config: SoA + the tile with the best MEASURED GFLOPS.
+
+    Selection is by measured throughput among VMEM-fitting, verified tiles —
+    not the largest fitting tile, which on real devices can sit past the
+    occupancy knee.  The decision is persisted; later calls (any process)
+    with the same (backend, device_kind, layout, dtype, L, n_devices) key do
+    zero measurements.
+    """
+    backend, device_kind, n_devices = _device_identity()
+    key = cache_key(
+        backend=backend, device_kind=device_kind, layout="soa",
+        dtype=dtype, L=L, n_devices=n_devices,
+    )
+    if cache and not refresh:
+        hit = load_cache(cache_directory).get(key)
+        if hit is not None:
+            return dict(hit["config"], cached=True)
+
+    rows = [r for r in tile_sweep(L=L, dtype=dtype) if r["fits_vmem"] and r["verified"]]
+    if not rows:
+        raise RuntimeError("no VMEM-fitting verified tile candidate")
+    winner = max(rows, key=lambda r: r["measured_gflops"])
+    config = {"layout": "soa", "variant": "pallas", "tile": winner["tile"]}
+    if cache:
+        store_cache_entry(
+            key,
+            {"config": config, "measured_gflops": winner["measured_gflops"], "key": key},
+            cache_directory,
+        )
+    return dict(config, cached=False)
+
+
+def tuned_engine_config(
+    L: int = 8, dtype: str = "float32", *, cache_directory: str | None = None, **overrides
+) -> EngineConfig:
+    """EngineConfig built from the (cached) tuned tuple, override-able."""
+    tuned = best_config(L=L, dtype=dtype, cache_directory=cache_directory)
+    base = {
+        "L": L, "dtype": dtype, "layout": layouts.Layout(tuned["layout"]),
+        "variant": tuned["variant"], "tile": tuned["tile"],
+    }
+    base.update(overrides)
+    return EngineConfig(**base)
 
 
 if __name__ == "__main__":

@@ -46,6 +46,7 @@ _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->.*\{")
 _OPERAND_RE = re.compile(r"%([\w\.\-]+)")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
 _WHILE_REFS_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
 _COND_BRANCHES_RE = re.compile(r"(?:true_computation|false_computation|branch_computations=\{[^}]*\}|to_apply)=")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
@@ -364,7 +365,11 @@ class HloCostModel:
                     total += Cost(bytes=instr.result_bytes)
                 continue
             if op in ("call", "async-start"):
-                mc = _CALLS_RE.search(line)
+                # post-opt HLO spells the callee `to_apply=`, older/async
+                # forms `calls=` — accept either (the CPU backend wraps its
+                # parallel pack/unpack fusions in such calls; dropping them
+                # hid all layout-dependent traffic).
+                mc = _CALLS_RE.search(line) or _TO_APPLY_RE.search(line)
                 if mc:
                     total += self._comp_cost(mc.group(1), materializing)
                 continue

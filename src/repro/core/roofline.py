@@ -314,7 +314,10 @@ def analyze_compiled(
     cost = hlo_costs.analyze_hlo(text)
     raw: Mapping[str, float] = {}
     try:
-        raw = compiled.cost_analysis() or {}
+        ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # older jax: [per-device dict]
+            ca = ca[0] if ca else {}
+        raw = ca
     except Exception:
         pass
     return RooflineReport(

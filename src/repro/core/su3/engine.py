@@ -1,66 +1,42 @@
-"""SU3 lattice engine: placement-aware init, timed multiply loop, validation.
+"""SU3 benchmark engine: timed multiply loop + validation over an ExecutionPlan.
 
-The paper's Xeon story in framework form. The three placement policies map
-the paper's §4 findings onto JAX/TPU:
+The paper's Xeon story in framework form.  All layout/kernel/placement wiring
+lives in :mod:`repro.core.su3.plan` — ``SU3Engine`` owns only the measurement
+protocol, which mirrors the su3_bench driver: W warmup + I timed iterations of
+``C = A (x) B`` (paper's -W/-I flags), reporting GF/s (useful flops =
+864/site) and GB/s (layout traffic model).
 
-  ``sharded``       paper's fix (empty constructor + parallel init): data is
-                    materialized *directly sharded* by jit-ing the initializer
-                    with sharded out_shardings — each device first-touches its
-                    own shard, no redistribution traffic ever happens.
-  ``host_scatter``  the failure mode (default constructor touches everything
-                    on socket 0): arrays are materialized on host / device 0
-                    and then redistributed with device_put; the scatter is the
-                    UPI-storm analog and is timed separately.
-  ``replicated``    every device holds the full lattice (what naive
-                    ``device_put`` without sharding gives you at pod scale) —
-                    memory blowup measured, B's policy by design.
+Two stepping modes:
 
-The iteration loop mirrors the benchmark driver: W warmup + I timed
-iterations of ``C = A (x) B`` with the same A and B (paper's -W/-I flags),
-reporting GF/s (useful flops = 864/site) and GB/s (layout traffic model).
+  ``run()``        the classic loop — I separately dispatched single steps,
+                   each timed (paper-faithful; what Tables 2/3 report).
+  ``run_fused(k)`` one fused dispatch chaining k multiplies inside the kernel
+                   (plan.fused_step); per-multiply seconds are reported so the
+                   two modes are directly comparable.  This quantifies the
+                   dispatch/HBM-roundtrip overhead that dominates at small L.
 
 Validation follows su3_bench: with A entries = (1,0) and B entries = (1/3,0),
-every element of C must equal (1,0); we check sum and pointwise.
+every element of C must equal (1,0) — a fixed point of the multiply, so
+chained fused steps validate identically.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
+from typing import Any
+
+import numpy as np
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.su3 import layouts, variants
-from repro.core.su3.layouts import Layout, LatticeShape, TrafficModel
-from repro.kernels import ops as kops
-from repro.kernels import su3_matmul
-
-
-@dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    L: int = 16
-    dtype: str = "float32"  # real word dtype: float32 | bfloat16
-    layout: Layout = Layout.SOA
-    variant: str = "pallas"  # 'pallas' or a name in variants.variant_names()
-    tile: int = 512  # Pallas site-tile (VMEM blocking)
-    placement: str = "sharded"  # sharded | host_scatter | replicated
-    iterations: int = 10
-    warmups: int = 2
-
-    @property
-    def word_bytes(self) -> int:
-        return {"float32": 4, "bfloat16": 2, "float64": 8}[self.dtype]
-
-    @property
-    def complex_dtype(self) -> Any:
-        return jnp.complex64  # planar kernels use cfg.dtype words
-
-    @property
-    def shape(self) -> LatticeShape:
-        return LatticeShape(self.L)
+from repro.core.su3.layouts import TrafficModel
+from repro.core.su3.plan import (  # noqa: F401  (re-exported for compatibility)
+    EngineConfig,
+    ExecutionPlan,
+    build_plan,
+    init_canonical as _init_canonical,
+    make_site_mesh,
+)
 
 
 @dataclasses.dataclass
@@ -69,8 +45,10 @@ class BenchResult:
     n_devices: int
     init_seconds: float
     scatter_seconds: float  # host_scatter redistribution cost (0 otherwise)
-    iter_seconds: list[float]
+    iter_seconds: list[float]  # per-multiply seconds (fused runs pre-divide by k)
     verified: bool
+    fused_k: int = 1  # multiplies chained per dispatch (1 = classic loop)
+    plan_id: str = ""
 
     @property
     def best_seconds(self) -> float:
@@ -111,154 +89,42 @@ class BenchResult:
             "init_s": self.init_seconds,
             "scatter_s": self.scatter_seconds,
             "verified": self.verified,
+            "fused_k": self.fused_k,
+            "plan": self.plan_id,
         }
 
 
-def make_site_mesh(devices: list[jax.Device] | None = None) -> jax.sharding.Mesh:
-    """1-D mesh over all devices; the lattice shards on the 'sites' axis."""
-    devices = devices if devices is not None else jax.devices()
-    return jax.sharding.Mesh(np.array(devices), ("sites",))
-
-
-def _init_canonical(n_sites: int) -> tuple[jax.Array, jax.Array]:
-    """su3_bench's make_lattice/init_link: A entries (1,0), B entries (1/3,0)."""
-    a = jnp.full((n_sites, layouts.LINKS, layouts.SU3, layouts.SU3), 1.0 + 0.0j, jnp.complex64)
-    b = jnp.full((layouts.LINKS, layouts.SU3, layouts.SU3), (1.0 / 3.0) + 0.0j, jnp.complex64)
-    return a, b
-
-
 class SU3Engine:
-    """Paper-faithful benchmark engine with TPU-native layout/placement knobs."""
+    """Paper-faithful benchmark runner over a compiled ExecutionPlan."""
 
     def __init__(self, cfg: EngineConfig, mesh: jax.sharding.Mesh | None = None):
+        self.plan = build_plan(cfg, mesh)
         self.cfg = cfg
-        self.mesh = mesh if mesh is not None else make_site_mesh()
-        self.n_devices = self.mesh.devices.size
-        n = cfg.shape.n_sites
-        # Lattice padded so every device shard is a whole number of tiles.
-        self.padded = ((n + self.n_devices * cfg.tile - 1) // (self.n_devices * cfg.tile)) * (
-            self.n_devices * cfg.tile
-        )
-        self._step = self._build_step()
-
-    # -- physical state ------------------------------------------------------
-
-    def _site_spec(self) -> P:
-        if self.cfg.layout == Layout.AOS:
-            return P("sites", None)  # (sites, 80)
-        if self.cfg.layout == Layout.SOA:
-            return P(None, None, "sites")  # (2, 36, S)
-        return P("sites", None, None, None)  # (tiles, 2, 36, lane)
-
-    def _pack(self, a: jax.Array) -> jax.Array:
-        """Canonical complex (padded_sites, 4, 3, 3) -> physical layout."""
-        wdt = jnp.dtype(self.cfg.dtype)
-        if self.cfg.layout == Layout.AOS:
-            return layouts.pack_aos(a).astype(wdt)
-        if self.cfg.layout == Layout.SOA:
-            return layouts.pack_soa(a).reshape(2, su3_matmul.ROWS, -1).astype(wdt)
-        t = layouts.pack_aosoa(a, lane=self.cfg.tile)
-        return t.reshape(t.shape[0], 2, su3_matmul.ROWS, self.cfg.tile).astype(wdt)
-
-    def _unpack(self, phys: jax.Array) -> jax.Array:
-        n = self.cfg.shape.n_sites
-        if self.cfg.layout == Layout.AOS:
-            return layouts.unpack_aos(phys.astype(jnp.float32))[:n]
-        if self.cfg.layout == Layout.SOA:
-            p = phys.astype(jnp.float32).reshape(2, layouts.LINKS, layouts.SU3, layouts.SU3, -1)
-            return layouts.unpack_soa(p)[:n]
-        t = phys.astype(jnp.float32).reshape(
-            phys.shape[0], 2, layouts.LINKS, layouts.SU3, layouts.SU3, self.cfg.tile
-        )
-        return layouts.unpack_aosoa(t, n)
-
-    # -- placement policies ----------------------------------------------------
+        self.mesh = self.plan.mesh
+        self.n_devices = self.plan.n_devices
+        self.padded = self.plan.padded_sites
+        self._step = self.plan.step
 
     def init_data(self) -> tuple[jax.Array, jax.Array, float, float]:
-        """Returns (a_phys, b_planar, init_seconds, scatter_seconds)."""
-        cfg = self.cfg
-        sharding = NamedSharding(self.mesh, self._site_spec())
-        replicated = NamedSharding(self.mesh, P())
+        return self.plan.init_data()
 
-        def build() -> jax.Array:
-            a, _ = _init_canonical(self.padded)
-            return self._pack(a)
+    def verify(self, c_phys: jax.Array) -> bool:
+        return self.plan.verify(c_phys)
 
-        b_planar = layouts.to_planar(_init_canonical(1)[1]).reshape(2, su3_matmul.ROWS)
-        b_planar = jax.device_put(b_planar.astype(jnp.dtype(cfg.dtype)), replicated)
-
-        t0 = time.perf_counter()
-        scatter_s = 0.0
-        if cfg.placement == "sharded":
-            # Paper's fix: jit the initializer with sharded outputs — every
-            # device first-touches exactly its shard.
-            a_phys = jax.jit(build, out_shardings=sharding)()
-            a_phys.block_until_ready()
-        elif cfg.placement == "host_scatter":
-            # Failure mode: materialize on one device, then redistribute.
-            a_single = jax.jit(build)()  # default device only
-            a_single.block_until_ready()
-            t1 = time.perf_counter()
-            a_phys = jax.device_put(a_single, sharding)
-            a_phys.block_until_ready()
-            scatter_s = time.perf_counter() - t1
-        elif cfg.placement == "replicated":
-            a_phys = jax.jit(build, out_shardings=replicated)()
-            a_phys.block_until_ready()
-        else:
-            raise ValueError(f"unknown placement {cfg.placement!r}")
-        init_s = time.perf_counter() - t0
-        return a_phys, b_planar, init_s, scatter_s
-
-    # -- the kernel step -------------------------------------------------------
-
-    def _build_step(self) -> Callable[[jax.Array, jax.Array], jax.Array]:
-        cfg = self.cfg
-        sharding = NamedSharding(self.mesh, self._site_spec())
-
-        if cfg.variant == "pallas":
-            if cfg.layout == Layout.SOA:
-
-                def step(a_p: jax.Array, b_p: jax.Array) -> jax.Array:
-                    return kops.su3_mult_planar(a_p, b_p, tile=cfg.tile)
-
-            elif cfg.layout == Layout.AOSOA:
-
-                def step(a_t: jax.Array, b_p: jax.Array) -> jax.Array:
-                    a_p = jnp.moveaxis(a_t, 0, -1).reshape(2, su3_matmul.ROWS, -1)
-                    c_p = kops.su3_mult_planar(a_p, b_p, tile=cfg.tile)
-                    c_t = c_p.reshape(2, su3_matmul.ROWS, a_t.shape[0], cfg.tile)
-                    return jnp.moveaxis(c_t, 2, 0)
-
-            else:
-                raise ValueError("pallas variant requires SOA or AOSOA layout")
-        else:
-            fn = variants.get_variant(cfg.variant)
-
-            def step(a_phys: jax.Array, b_p: jax.Array) -> jax.Array:
-                a = self._unpack_padded(a_phys)
-                b = layouts.from_planar(
-                    b_p.astype(jnp.float32).reshape(2, layouts.LINKS, layouts.SU3, layouts.SU3)
-                )
-                c = fn(a, b)
-                return self._pack(c)
-
-        return jax.jit(step, out_shardings=sharding, donate_argnums=())
-
-    def _unpack_padded(self, phys: jax.Array) -> jax.Array:
-        if self.cfg.layout == Layout.AOS:
-            return layouts.unpack_aos(phys.astype(jnp.float32))
-        if self.cfg.layout == Layout.SOA:
-            p = phys.astype(jnp.float32).reshape(2, layouts.LINKS, layouts.SU3, layouts.SU3, -1)
-            return layouts.unpack_soa(p)
-        t = phys.astype(jnp.float32).reshape(
-            phys.shape[0], 2, layouts.LINKS, layouts.SU3, layouts.SU3, self.cfg.tile
+    def _result(self, init_s, scatter_s, times, verified, fused_k=1) -> BenchResult:
+        return BenchResult(
+            config=self.cfg,
+            n_devices=self.n_devices,
+            init_seconds=init_s,
+            scatter_seconds=scatter_s,
+            iter_seconds=times,
+            verified=verified,
+            fused_k=fused_k,
+            plan_id=self.plan.describe(),
         )
-        return layouts.unpack_aosoa(t, phys.shape[0] * self.cfg.tile)
-
-    # -- the benchmark loop ------------------------------------------------------
 
     def run(self) -> BenchResult:
+        """W warmups + I timed single-step dispatches (the paper's loop)."""
         cfg = self.cfg
         a_phys, b_p, init_s, scatter_s = self.init_data()
         for _ in range(cfg.warmups):
@@ -271,20 +137,74 @@ class SU3Engine:
             c_phys.block_until_ready()
             times.append(time.perf_counter() - t0)
         verified = self.verify(c_phys)
-        return BenchResult(
-            config=cfg,
-            n_devices=self.n_devices,
-            init_seconds=init_s,
-            scatter_seconds=scatter_s,
-            iter_seconds=times,
-            verified=verified,
-        )
+        return self._result(init_s, scatter_s, times, verified)
 
-    def verify(self, c_phys: jax.Array) -> bool:
-        """su3_bench check: with A=(1,0), B=(1/3,0) every C element is (1,0)."""
-        c = self._unpack(jax.device_get(c_phys))
-        tol = 1e-2 if self.cfg.dtype == "bfloat16" else 1e-5
-        return bool(
-            jnp.max(jnp.abs(jnp.real(c) - 1.0)) < tol
-            and jnp.max(jnp.abs(jnp.imag(c))) < tol
+    def compare_fused(self, k: int, reps: int = 10) -> dict[str, Any]:
+        """Block-time K dispatched single steps vs ONE fused(K) dispatch.
+
+        Both sides chain C back into A (identical semantics and flop count);
+        medians over ``reps`` blocks keep the statistic stable at small L.
+        This is the honest form of the fused-stepping claim: the fused path
+        removes K-1 dispatches and (on TPU) K-1 HBM roundtrips.
+        """
+        import jax.numpy as jnp
+
+        a_phys, b_p, init_s, scatter_s = self.init_data()
+        step, fstep = self._step, self.plan.fused_step(k)
+        # The fused step donates its argument on TPU: give the fused chain its
+        # own buffer and always rebind (y = fstep(y, ...)), never reuse a
+        # donated array. The dispatched step never donates, so a_phys is safe.
+        y = jnp.copy(a_phys)
+        for _ in range(max(1, self.cfg.warmups)):
+            step(a_phys, b_p).block_until_ready()
+            y = fstep(y, b_p)
+            y.block_until_ready()
+        disp, fused = [], []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            x = a_phys
+            for _ in range(k):
+                x = step(x, b_p)
+            x.block_until_ready()
+            disp.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            y = fstep(y, b_p)
+            y.block_until_ready()
+            fused.append(time.perf_counter() - t0)
+        result = self._result(
+            init_s, scatter_s, [t / k for t in fused], self.verify(y), fused_k=k
         )
+        return {
+            "k": k,
+            "dispatched_s": float(np.median(disp)),
+            "fused_s": float(np.median(fused)),
+            "dispatched_min_s": min(disp),
+            "fused_min_s": min(fused),
+            "fused_speedup": float(np.median(disp) / np.median(fused)),
+            "result": result,
+        }
+
+    def run_fused(self, k: int | None = None, reps: int = 3) -> BenchResult:
+        """One dispatch chaining k multiplies; timed ``reps`` times.
+
+        ``iter_seconds`` holds per-multiply seconds (wall / k) so the result
+        is directly comparable to ``run()``.  The loop rebinds A to the
+        produced C, which is what donation on TPU requires and is a no-op for
+        the benchmark's fixed-point lattice data.
+        """
+        cfg = self.cfg
+        k = cfg.iterations if k is None else k
+        fstep = self.plan.fused_step(k)
+        a_phys, b_p, init_s, scatter_s = self.init_data()
+        x = a_phys
+        for _ in range(max(1, cfg.warmups)):
+            x = fstep(x, b_p)
+            x.block_until_ready()
+        times: list[float] = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            x = fstep(x, b_p)
+            x.block_until_ready()
+            times.append((time.perf_counter() - t0) / k)
+        verified = self.verify(x)
+        return self._result(init_s, scatter_s, times, verified, fused_k=k)

@@ -138,6 +138,116 @@ def unpack_aosoa(
 
 
 # ---------------------------------------------------------------------------
+# LayoutCodec — pack/unpack/shard as a first-class object.
+#
+# Historically the engine re-derived the canonical<->physical conversion (and
+# its padded twin) per layout in three separate if/elif chains; the codec is
+# the single owner of that logic.  A codec knows:
+#   * the physical array produced from canonical complex (S, 4, 3, 3) data,
+#   * how to restore canonical data (optionally sliced to the live sites),
+#   * the PartitionSpec that shards the physical form over a 1-D site mesh,
+#   * the planar "kernel view" (2, 36, S) the Pallas path consumes.
+# ---------------------------------------------------------------------------
+
+PLANAR_ROWS = LINKS * SU3 * SU3  # 36 complex entries per site
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutCodec:
+    """Canonical <-> physical converter for one (layout, tile, word dtype).
+
+    ``tile`` is the AoSoA lane width / Pallas site-tile; AOS and SOA ignore it
+    for shape purposes but carry it so a codec fully identifies the physical
+    form used by an :class:`repro.core.su3.plan.ExecutionPlan`.
+    """
+
+    layout: Layout
+    tile: int = LANE
+    dtype: str = "float32"
+
+    @property
+    def word_dtype(self) -> Any:
+        return jnp.dtype(self.dtype)
+
+    # -- canonical <-> physical ------------------------------------------------
+
+    def pack(self, a: jax.Array) -> jax.Array:
+        """Canonical complex (n_sites, 4, 3, 3) -> physical layout array."""
+        wdt = self.word_dtype
+        if self.layout == Layout.AOS:
+            return pack_aos(a).astype(wdt)  # (S, 80)
+        if self.layout == Layout.SOA:
+            return pack_soa(a).reshape(2, PLANAR_ROWS, -1).astype(wdt)  # (2, 36, S)
+        t = pack_aosoa(a, lane=self.tile)
+        return t.reshape(t.shape[0], 2, PLANAR_ROWS, self.tile).astype(wdt)
+
+    def unpack(self, phys: jax.Array, n_sites: int | None = None) -> jax.Array:
+        """Physical -> canonical complex; slice to ``n_sites`` when given."""
+        f32 = phys.astype(jnp.float32)
+        if self.layout == Layout.AOS:
+            c = unpack_aos(f32)
+        elif self.layout == Layout.SOA:
+            c = unpack_soa(f32.reshape(2, LINKS, SU3, SU3, -1))
+        else:
+            t = f32.reshape(phys.shape[0], 2, LINKS, SU3, SU3, self.tile)
+            c = unpack_aosoa(t, phys.shape[0] * self.tile)
+        return c if n_sites is None else c[:n_sites]
+
+    def pack_b(self, b: jax.Array) -> jax.Array:
+        """Canonical B (4, 3, 3) complex -> planar (2, 36) in the word dtype."""
+        return to_planar(b).reshape(2, PLANAR_ROWS).astype(self.word_dtype)
+
+    def unpack_b(self, b_p: jax.Array) -> jax.Array:
+        return from_planar(b_p.astype(jnp.float32).reshape(2, LINKS, SU3, SU3))
+
+    # -- sharding --------------------------------------------------------------
+
+    def site_spec(self) -> "jax.sharding.PartitionSpec":
+        """PartitionSpec sharding the site axis of the physical form."""
+        P = jax.sharding.PartitionSpec
+        if self.layout == Layout.AOS:
+            return P("sites", None)  # (sites, 80)
+        if self.layout == Layout.SOA:
+            return P(None, None, "sites")  # (2, 36, S)
+        return P("sites", None, None, None)  # (tiles, 2, 36, lane)
+
+    # -- the Pallas kernel's planar view --------------------------------------
+
+    @property
+    def supports_planar_view(self) -> bool:
+        return self.layout in (Layout.SOA, Layout.AOSOA)
+
+    def planar_view(self, phys: jax.Array) -> jax.Array:
+        """Physical -> flattened planar (2, 36, S) without changing dtype.
+
+        Tile-major site order (s = tile_idx * lane + lane_idx), the exact
+        inverse of :meth:`from_planar_view` and consistent with
+        ``pack_aosoa``'s site numbering.  (The pre-codec engine used a
+        lane-major flatten here with a tile-major unflatten — a site
+        permutation masked by the benchmark's uniform lattice data.)
+        """
+        if self.layout == Layout.SOA:
+            return phys
+        if self.layout == Layout.AOSOA:
+            return jnp.moveaxis(phys, 0, 2).reshape(2, PLANAR_ROWS, -1)
+        raise ValueError(f"{self.layout} has no planar kernel view")
+
+    def from_planar_view(self, c_p: jax.Array, like: jax.Array) -> jax.Array:
+        """Planar (2, 36, S) -> physical, shaped like ``like``."""
+        if self.layout == Layout.SOA:
+            return c_p
+        if self.layout == Layout.AOSOA:
+            c_t = c_p.reshape(2, PLANAR_ROWS, like.shape[0], self.tile)
+            return jnp.moveaxis(c_t, 2, 0)
+        raise ValueError(f"{self.layout} has no planar kernel view")
+
+
+def make_codec(layout: Layout, tile: int = LANE, dtype: str = "float32") -> LayoutCodec:
+    """The one construction site for layout codecs."""
+    return LayoutCodec(layout=Layout(layout), tile=tile, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
 # Traffic model — charges each layout the bytes it actually streams.
 # This is the quantitative form of the paper's 288/320 streaming-store point.
 # ---------------------------------------------------------------------------

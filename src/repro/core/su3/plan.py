@@ -1,0 +1,341 @@
+"""ExecutionPlan: the one compiled dispatch path for SU3 work.
+
+The paper's peak numbers come from composing the right *tuple* of
+(data layout, kernel formulation, blocking factor, first-touch placement);
+getting any element wrong silently costs 2x.  This module makes that tuple a
+first-class object instead of re-deriving it ad hoc per call site:
+
+    ┌────────────────────────────────────────────────────────────┐
+    │ EngineConfig (L, dtype, layout, variant, tile, placement)  │
+    └──────────────────────────┬─────────────────────────────────┘
+                               ▼  build_plan() — single construction site
+    ┌────────────────────────────────────────────────────────────┐
+    │ ExecutionPlan                                              │
+    │   codec     LayoutCodec     pack/unpack/planar-view/spec   │
+    │   kernel    KernelEntry     unified registry (XLA+Pallas)  │
+    │   sharding  NamedSharding   placement-aware out_shardings  │
+    │   step      jit(raw_step)   ONE compiled dispatch          │
+    │   fused(k)  jit K-chained   one dispatch, K multiplies     │
+    └──────────────────────────┬─────────────────────────────────┘
+               ┌───────────────┼────────────────────┐
+               ▼               ▼                    ▼
+        SU3Engine       core.autotune        BatchedLatticeRunner
+        (bench loop)    (sweeps + cache)     (B lattices, vmapped)
+
+Everything that used to live in ``SU3Engine._build_step`` / ``_pack`` /
+``_unpack`` / ``_unpack_padded`` plus the backend dispatch in
+``kernels.ops`` and the candidate enumeration in ``core.autotune`` now flows
+through here; benchmarks construct plans (via the thin ``SU3Engine``) rather
+than wiring layouts by hand.
+
+Fused multi-iteration stepping
+------------------------------
+``fused_step(k)`` chains K multiplies (C fed back as A) in ONE dispatch.  On
+the Pallas path the chain runs *inside* the kernel grid step on the resident
+VMEM tile (``k_iters``), so K iterations cost one HBM read + one HBM write
+instead of K of each — the dispatch/HBM-roundtrip overhead that dominates at
+small L.  On XLA variants the chain is a ``fori_loop`` under one jit.  This
+is a TPU-targeted optimization; in interpret mode on CPU it is merely
+no-slower (it still removes K-1 dispatches).
+
+Placement
+---------
+The three policies reproduce the paper's §4 NUMA/first-touch study:
+``sharded`` jits the initializer with sharded out_shardings (every device
+first-touches its own shard), ``host_scatter`` materializes on one device and
+redistributes (the UPI-storm analog, timed separately), ``replicated`` gives
+every device the full lattice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.su3 import layouts, registry
+from repro.core.su3 import variants as _variants  # noqa: F401  (registers XLA kernels)
+from repro.core.su3.layouts import Layout, LatticeShape, LayoutCodec
+from repro.kernels import ops as _kops  # noqa: F401  (registers the Pallas kernel)
+
+PLACEMENTS = ("sharded", "host_scatter", "replicated")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """The tunable tuple. One instance == one ExecutionPlan identity."""
+
+    L: int = 16
+    dtype: str = "float32"  # real word dtype: float32 | bfloat16
+    layout: Layout = Layout.SOA
+    variant: str = "pallas"  # any name in registry.kernel_names()
+    tile: int = 512  # Pallas site-tile (VMEM blocking) / AoSoA lane
+    placement: str = "sharded"  # sharded | host_scatter | replicated
+    iterations: int = 10
+    warmups: int = 2
+
+    @property
+    def word_bytes(self) -> int:
+        return {"float32": 4, "bfloat16": 2, "float64": 8}[self.dtype]
+
+    @property
+    def complex_dtype(self) -> Any:
+        return jnp.complex64  # planar kernels use cfg.dtype words
+
+    @property
+    def shape(self) -> LatticeShape:
+        return LatticeShape(self.L)
+
+
+def make_site_mesh(devices: list[jax.Device] | None = None) -> jax.sharding.Mesh:
+    """1-D mesh over all devices; the lattice shards on the 'sites' axis."""
+    devices = devices if devices is not None else jax.devices()
+    return jax.sharding.Mesh(np.array(devices), ("sites",))
+
+
+def init_canonical(n_sites: int) -> tuple[jax.Array, jax.Array]:
+    """su3_bench's make_lattice/init_link: A entries (1,0), B entries (1/3,0)."""
+    a = jnp.full((n_sites, layouts.LINKS, layouts.SU3, layouts.SU3), 1.0 + 0.0j, jnp.complex64)
+    b = jnp.full((layouts.LINKS, layouts.SU3, layouts.SU3), (1.0 / 3.0) + 0.0j, jnp.complex64)
+    return a, b
+
+
+def make_raw_step(
+    codec: LayoutCodec,
+    kernel: registry.KernelEntry,
+    *,
+    tile: int,
+    k_iters: int = 1,
+    interpret: bool | None = None,
+    alias: bool = False,
+) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """Unjitted physical step (a_phys, b_planar) -> c_phys for any kernel form.
+
+    The one place the kernel-form dispatch happens; ExecutionPlan jits this
+    and core.autotune lowers it for HLO-level byte accounting.
+    """
+    if not kernel.supports_layout(codec.layout):
+        raise ValueError(
+            f"kernel {kernel.name!r} does not support layout {codec.layout.value!r} "
+            f"(supported: {[l.value for l in kernel.layouts]})"
+        )
+    if k_iters > 1 and kernel.form == registry.PLANAR and not kernel.supports_fused:
+        raise ValueError(f"kernel {kernel.name!r} does not support fused iteration")
+
+    if kernel.form == registry.PLANAR:
+        if not codec.supports_planar_view:
+            raise ValueError(
+                f"planar kernel {kernel.name!r} needs a planar-view layout, "
+                f"got {codec.layout.value!r}"
+            )
+
+        def raw_step(a_phys: jax.Array, b_p: jax.Array) -> jax.Array:
+            a_p = codec.planar_view(a_phys)
+            kw: dict[str, Any] = {"tile": tile, "k_iters": k_iters, "alias": alias}
+            if interpret is not None:
+                kw["interpret"] = interpret
+            c_p = kernel.fn(a_p, b_p, **kw)
+            return codec.from_planar_view(c_p, a_phys)
+
+    else:  # canonical complex kernel wrapped by the codec
+
+        def raw_step(a_phys: jax.Array, b_p: jax.Array) -> jax.Array:
+            b = codec.unpack_b(b_p)
+            if k_iters == 1:
+                return codec.pack(kernel.fn(codec.unpack(a_phys), b))
+
+            def body(_: jax.Array, phys: jax.Array) -> jax.Array:
+                return codec.pack(kernel.fn(codec.unpack(phys), b))
+
+            return jax.lax.fori_loop(0, k_iters, body, a_phys)
+
+    return raw_step
+
+
+class ExecutionPlan:
+    """Compiled execution of one EngineConfig tuple on one mesh.
+
+    Construct via :func:`build_plan` (or ``ExecutionPlan.build``) — the single
+    construction site for every layout x variant x placement combination.
+    """
+
+    def __init__(self, cfg: EngineConfig, mesh: jax.sharding.Mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.n_devices = int(mesh.devices.size)
+        if cfg.placement not in PLACEMENTS:
+            raise ValueError(f"unknown placement {cfg.placement!r}; one of {PLACEMENTS}")
+        self.codec = layouts.make_codec(cfg.layout, tile=cfg.tile, dtype=cfg.dtype)
+        self.kernel = registry.get_kernel(cfg.variant)
+        # Lattice padded so every device shard is a whole number of tiles.
+        n = cfg.shape.n_sites
+        chunk = self.n_devices * cfg.tile
+        self.padded_sites = ((n + chunk - 1) // chunk) * chunk
+        self.sharding = NamedSharding(mesh, self.codec.site_spec())
+        self.replicated = NamedSharding(mesh, P())
+        self.raw_step = make_raw_step(self.codec, self.kernel, tile=cfg.tile)
+        self.step = jax.jit(self.raw_step, out_shardings=self.sharding, donate_argnums=())
+        self._fused_steps: dict[int, Callable[[jax.Array, jax.Array], jax.Array]] = {}
+
+    @classmethod
+    def build(cls, cfg: EngineConfig, mesh: jax.sharding.Mesh | None = None) -> "ExecutionPlan":
+        return cls(cfg, mesh if mesh is not None else make_site_mesh())
+
+    # -- fused multi-iteration stepping ---------------------------------------
+
+    def fused_step(self, k: int) -> Callable[[jax.Array, jax.Array], jax.Array]:
+        """One dispatch performing K chained multiplies (C fed back as A).
+
+        ``fused_step(k)(a, b)`` equals ``step`` applied k times sequentially.
+        On TPU the argument is donated and the Pallas C-tile aliases A's
+        buffer, so the chain is a true in-place VMEM-resident update.
+        """
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        if k not in self._fused_steps:
+            on_tpu = jax.default_backend() == "tpu"
+            raw = make_raw_step(
+                self.codec, self.kernel, tile=self.cfg.tile, k_iters=k,
+                alias=self.kernel.form == registry.PLANAR and on_tpu,
+            )
+            self._fused_steps[k] = jax.jit(
+                raw,
+                out_shardings=self.sharding,
+                donate_argnums=(0,) if on_tpu else (),
+            )
+        return self._fused_steps[k]
+
+    # -- placement policies ----------------------------------------------------
+
+    def init_data(self) -> tuple[jax.Array, jax.Array, float, float]:
+        """Returns (a_phys, b_planar, init_seconds, scatter_seconds)."""
+        cfg = self.cfg
+
+        def build() -> jax.Array:
+            a, _ = init_canonical(self.padded_sites)
+            return self.codec.pack(a)
+
+        b_planar = self.codec.pack_b(init_canonical(1)[1])
+        b_planar = jax.device_put(b_planar, self.replicated)
+
+        t0 = time.perf_counter()
+        scatter_s = 0.0
+        if cfg.placement == "sharded":
+            # Paper's fix: jit the initializer with sharded outputs — every
+            # device first-touches exactly its shard.
+            a_phys = jax.jit(build, out_shardings=self.sharding)()
+            a_phys.block_until_ready()
+        elif cfg.placement == "host_scatter":
+            # Failure mode: materialize on one device, then redistribute.
+            a_single = jax.jit(build)()  # default device only
+            a_single.block_until_ready()
+            t1 = time.perf_counter()
+            a_phys = jax.device_put(a_single, self.sharding)
+            a_phys.block_until_ready()
+            scatter_s = time.perf_counter() - t1
+        else:  # replicated
+            a_phys = jax.jit(build, out_shardings=self.replicated)()
+            a_phys.block_until_ready()
+        init_s = time.perf_counter() - t0
+        return a_phys, b_planar, init_s, scatter_s
+
+    # -- views / checks --------------------------------------------------------
+
+    def unpack(self, c_phys: jax.Array) -> jax.Array:
+        """Physical C -> canonical complex, sliced to the live lattice sites."""
+        return self.codec.unpack(c_phys, self.cfg.shape.n_sites)
+
+    def verify(self, c_phys: jax.Array) -> bool:
+        """su3_bench check: with A=(1,0), B=(1/3,0) every C element is (1,0)."""
+        c = self.unpack(jax.device_get(c_phys))
+        tol = 1e-2 if self.cfg.dtype == "bfloat16" else 1e-5
+        return bool(
+            jnp.max(jnp.abs(jnp.real(c) - 1.0)) < tol
+            and jnp.max(jnp.abs(jnp.imag(c))) < tol
+        )
+
+    def describe(self) -> str:
+        """Compact plan identity for benchmark rows / logs."""
+        c = self.cfg
+        return (
+            f"{c.layout.value}/{c.variant}/t{c.tile}/{c.placement}"
+            f"@{self.n_devices}dev/{c.dtype}"
+        )
+
+
+def build_plan(cfg: EngineConfig, mesh: jax.sharding.Mesh | None = None) -> ExecutionPlan:
+    """THE construction site: config tuple -> compiled ExecutionPlan."""
+    return ExecutionPlan.build(cfg, mesh)
+
+
+class BatchedLatticeRunner:
+    """Serve B independent lattices through one vmapped, sharded plan step.
+
+    The "many users" scenario: each request carries its own (A, B) lattice
+    pair; the runner shards the *batch* axis over the mesh (whole lattices per
+    device) and runs every request through the same compiled plan in one
+    dispatch — no per-request compilation or per-layout wiring.
+
+    Batches that do not divide the device count are zero-padded and sliced.
+    """
+
+    def __init__(self, cfg: EngineConfig, mesh: jax.sharding.Mesh | None = None):
+        self.plan = build_plan(cfg, mesh)
+        self.cfg = cfg
+        self.mesh = self.plan.mesh
+        self.n_devices = self.plan.n_devices
+        phys_ndim = 1 + {"aos": 2, "soa": 3, "aosoa": 4}[cfg.layout.value]
+        batch_spec = P(*(("sites",) + (None,) * (phys_ndim - 1)))
+        self._sharding = NamedSharding(self.mesh, batch_spec)
+        self._steps: dict[int, Callable[[jax.Array, jax.Array], jax.Array]] = {}
+
+    def _batched_step(self, k: int) -> Callable[[jax.Array, jax.Array], jax.Array]:
+        if k not in self._steps:
+            raw = make_raw_step(
+                self.plan.codec, self.plan.kernel, tile=self.cfg.tile, k_iters=k
+            )
+            self._steps[k] = jax.jit(jax.vmap(raw), out_shardings=self._sharding)
+        return self._steps[k]
+
+    def pack_batch(self, a: jax.Array) -> jax.Array:
+        """Canonical (B, n_sites, 4, 3, 3) complex -> batched physical form."""
+        if a.shape[1] > self.plan.padded_sites:
+            raise ValueError(
+                f"batch carries {a.shape[1]} sites > plan capacity "
+                f"{self.plan.padded_sites} (L={self.cfg.L}, tile={self.cfg.tile})"
+            )
+        pad = self.plan.padded_sites - a.shape[1]
+        if pad:
+            a = jnp.concatenate(
+                [a, jnp.zeros((a.shape[0], pad) + a.shape[2:], a.dtype)], axis=1
+            )
+        return jax.vmap(self.plan.codec.pack)(a)
+
+    def unpack_batch(self, c_phys: jax.Array, n_sites: int | None = None) -> jax.Array:
+        n = n_sites if n_sites is not None else self.cfg.shape.n_sites
+        return jax.vmap(lambda x: self.plan.codec.unpack(x, n))(c_phys)
+
+    def run(self, a_batch: jax.Array, b_batch: jax.Array, k: int = 1) -> jax.Array:
+        """Batched physical (B, ...) x planar B (B, 2, 36) -> physical C batch."""
+        bsz = a_batch.shape[0]
+        pad = (-bsz) % self.n_devices
+        if pad:
+            zeros = lambda x: jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0
+            )
+            a_batch, b_batch = zeros(a_batch), zeros(b_batch)
+        c = self._batched_step(k)(a_batch, b_batch)
+        return c[:bsz] if pad else c
+
+    def multiply(self, a: jax.Array, b: jax.Array, k: int = 1) -> jax.Array:
+        """Canonical batched entry: a (B, S, 4, 3, 3), b (B, 4, 3, 3) complex."""
+        n_sites = a.shape[1]
+        a_phys = self.pack_batch(a)
+        b_p = jax.vmap(self.plan.codec.pack_b)(b)
+        c_phys = self.run(a_phys, b_p, k=k)
+        return self.unpack_batch(c_phys, n_sites)

@@ -1,0 +1,97 @@
+"""Unified SU3 kernel registry.
+
+Before the ExecutionPlan refactor the repo had *two* kernel namespaces: the
+XLA variant table (``variants._REGISTRY``) and the hardcoded ``"pallas"``
+string special-cased by the engine's step builder.  Both now live here, with
+enough metadata for a plan to validate and wire a kernel without per-kernel
+``if/elif`` chains:
+
+  ``form``
+      ``"canonical"`` — fn(a, b) on canonical complex arrays
+      (a: (S, 4, 3, 3), b: (4, 3, 3)); the plan wraps it with the layout
+      codec's unpack/pack.
+      ``"planar"`` — fn(a_p, b_p, *, tile, k_iters, interpret) on the
+      flattened planar view (a_p: (2, 36, S), b_p: (2, 36)); the plan feeds
+      it the codec's planar view directly (zero-copy for SoA).
+  ``layouts``
+      which physical layouts the kernel can be planned with.
+  ``backends``
+      ``"xla"`` | ``"pallas"`` — what lowers the kernel body.
+  ``supports_fused``
+      whether fn accepts ``k_iters`` and chains K multiplies in one dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable
+
+from repro.core.su3.layouts import Layout
+
+CANONICAL = "canonical"
+PLANAR = "planar"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    name: str
+    fn: Callable
+    layouts: tuple[Layout, ...]
+    backends: tuple[str, ...]
+    form: str = CANONICAL
+    supports_fused: bool = False
+
+    def supports_layout(self, layout: Layout) -> bool:
+        return Layout(layout) in self.layouts
+
+
+_KERNELS: dict[str, KernelEntry] = {}
+
+
+def register_kernel(
+    name: str,
+    *,
+    layouts: Iterable[Layout] = (Layout.AOS, Layout.SOA, Layout.AOSOA),
+    backends: Iterable[str] = ("xla",),
+    form: str = CANONICAL,
+    supports_fused: bool = False,
+) -> Callable[[Callable], Callable]:
+    """Decorator registering ``fn`` as kernel ``name``. Returns fn unchanged."""
+    if form not in (CANONICAL, PLANAR):
+        raise ValueError(f"unknown kernel form {form!r}")
+
+    def deco(fn: Callable) -> Callable:
+        _KERNELS[name] = KernelEntry(
+            name=name,
+            fn=fn,
+            layouts=tuple(Layout(l) for l in layouts),
+            backends=tuple(backends),
+            form=form,
+            supports_fused=supports_fused,
+        )
+        return fn
+
+    return deco
+
+
+def get_kernel(name: str) -> KernelEntry:
+    try:
+        return _KERNELS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown SU3 kernel {name!r}; registered: {sorted(_KERNELS)}"
+        ) from None
+
+
+def kernel_names(
+    *, backend: str | None = None, layout: Layout | None = None, form: str | None = None
+) -> list[str]:
+    out = []
+    for name, entry in _KERNELS.items():
+        if backend is not None and backend not in entry.backends:
+            continue
+        if layout is not None and not entry.supports_layout(layout):
+            continue
+        if form is not None and entry.form != form:
+            continue
+        out.append(name)
+    return sorted(out)

@@ -31,27 +31,32 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.su3 import layouts
+from repro.core.su3 import layouts, registry
+from repro.core.su3.layouts import Layout
 from repro.kernels import ref as kref
 
 Variant = Callable[[jax.Array, jax.Array], jax.Array]
-_REGISTRY: dict[str, Variant] = {}
 
 
-def register(name: str) -> Callable[[Variant], Variant]:
-    def deco(fn: Variant) -> Variant:
-        _REGISTRY[name] = fn
-        return fn
-
-    return deco
+def register(
+    name: str, *, variant_layouts: tuple[Layout, ...] = (Layout.AOS, Layout.SOA, Layout.AOSOA)
+) -> Callable[[Variant], Variant]:
+    """Register an XLA variant in the unified kernel registry (canonical form)."""
+    return registry.register_kernel(
+        name, layouts=variant_layouts, backends=("xla",), form=registry.CANONICAL
+    )
 
 
 def get_variant(name: str) -> Variant:
-    return _REGISTRY[name]
+    entry = registry.get_kernel(name)
+    if entry.form != registry.CANONICAL:
+        raise KeyError(f"{name!r} is not a canonical XLA variant")
+    return entry.fn
 
 
 def variant_names() -> list[str]:
-    return sorted(_REGISTRY)
+    """Names of the canonical (XLA) variants — excludes the Pallas path."""
+    return registry.kernel_names(backend="xla", form=registry.CANONICAL)
 
 
 @register("version0")

@@ -30,7 +30,9 @@ NEG_INF = -1e30
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, sq: int, g: int,
                   causal: bool, scale: float):
     """One (batch-head, q-block) grid step."""
-    q = q_ref[0].astype(jnp.float32) * scale  # (block_qg, d)
+    # size-1 leading axis is read whole and squeezed: bare int ref indexers
+    # hit a discharge-rule bug in jax 0.4.x interpret mode
+    q = q_ref[...][0].astype(jnp.float32) * scale  # (block_qg, d)
     block_qg, d = q.shape
     skv = k_ref.shape[1]
     nk = skv // block_k
@@ -41,8 +43,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, sq: int, g: int,
 
     def body(ik, carry):
         acc, m, l = carry
-        k_blk = pl.load(k_ref, (0, pl.dslice(ik * block_k, block_k), slice(None)))
-        v_blk = pl.load(v_ref, (0, pl.dslice(ik * block_k, block_k), slice(None)))
+        k_blk = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(ik * block_k, block_k), slice(None)))[0]
+        v_blk = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(ik * block_k, block_k), slice(None)))[0]
         s = q @ k_blk.astype(jnp.float32).T  # (block_qg, block_k) on the MXU
         if causal:
             k_pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
@@ -58,7 +60,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, sq: int, g: int,
     m0 = jnp.full((block_qg,), NEG_INF, jnp.float32)
     l0 = jnp.zeros((block_qg,), jnp.float32)
     acc, m, l = jax.lax.fori_loop(0, nk, body, (acc0, m0, l0))
-    o_ref[0] = (acc / jnp.maximum(l[:, None], 1e-37)).astype(o_ref.dtype)
+    o_ref[...] = (acc / jnp.maximum(l[:, None], 1e-37)).astype(o_ref.dtype)[None]
 
 
 @functools.partial(

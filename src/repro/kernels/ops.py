@@ -13,7 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.su3 import layouts
+from repro.core.su3 import layouts, registry
+from repro.core.su3.layouts import Layout
 from repro.kernels import ref as kref
 from repro.kernels import su3_matmul
 
@@ -24,13 +25,32 @@ def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+@registry.register_kernel(
+    "pallas",
+    layouts=(Layout.SOA, Layout.AOSOA),
+    backends=("pallas",),
+    form=registry.PLANAR,
+    supports_fused=True,
+)
 def su3_mult_planar(
-    a_p: jax.Array, b_p: jax.Array, *, tile: int = DEFAULT_TILE, interpret: bool | None = None
+    a_p: jax.Array,
+    b_p: jax.Array,
+    *,
+    tile: int = DEFAULT_TILE,
+    k_iters: int = 1,
+    interpret: bool | None = None,
+    alias: bool = False,
 ) -> jax.Array:
-    """Planar flattened SoA entry point: a_p (2, 36, S), b_p (2, 36)."""
+    """Planar flattened SoA entry point: a_p (2, 36, S), b_p (2, 36).
+
+    ``k_iters`` chains K multiplies in one dispatch (fused iteration stepping);
+    ``alias`` requests in-place C-into-A writes via input_output_aliases.
+    """
     if interpret is None:
         interpret = _use_interpret()
-    return su3_matmul.su3_mult_planar(a_p, b_p, tile=tile, interpret=interpret)
+    return su3_matmul.su3_mult_planar(
+        a_p, b_p, tile=tile, k_iters=k_iters, interpret=interpret, alias=alias
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))

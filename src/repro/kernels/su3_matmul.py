@@ -31,16 +31,19 @@ from jax.experimental import pallas as pl
 
 LINKS, SU3 = 4, 3
 ROWS = LINKS * SU3 * SU3  # 36 complex entries per site
+_UNROLL_MAX = 8  # fused chains up to this K are fully unrolled in-kernel
 
 
 def _flat(j: int, k: int, l: int) -> int:
     return (j * SU3 + k) * SU3 + l
 
 
-def _su3_kernel(a_ref, b_ref, c_ref):
-    """One grid step: C-tile = A-tile (x) B, fully unrolled complex FMAs."""
-    a = a_ref[...]  # (2, 36, tile) in VMEM
-    b = b_ref[...]  # (2, 36)      in VMEM (resident across grid steps)
+def _mult_tile(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C-tile = A-tile (x) B, fully unrolled complex FMAs.
+
+    a: (2, 36, T) planar tile, b: (2, 36) planar B. The shared body of the
+    single-step and fused multi-iteration kernels.
+    """
     ar, ai = a[0], a[1]
     out_r = [None] * ROWS
     out_i = [None] * ROWS
@@ -62,26 +65,57 @@ def _su3_kernel(a_ref, b_ref, c_ref):
                         ci = ci + ar[arow] * bi + ai[arow] * br
                 out_r[_flat(j, k, m)] = cr
                 out_i[_flat(j, k, m)] = ci
-    c = jnp.stack([jnp.stack(out_r, axis=0), jnp.stack(out_i, axis=0)], axis=0)
+    return jnp.stack([jnp.stack(out_r, axis=0), jnp.stack(out_i, axis=0)], axis=0)
+
+
+def _su3_kernel(a_ref, b_ref, c_ref, *, k_iters: int = 1):
+    """One grid step: chain ``k_iters`` multiplies on the resident VMEM tile.
+
+    k_iters=1 is the classic single step C = A (x) B.  k_iters>1 feeds C back
+    as the next A *without leaving VMEM*: one HBM read of the A-tile and one
+    HBM write of the final C-tile amortize over K multiplies — the per-
+    iteration dispatch + HBM roundtrip that dominates at small L disappears.
+    The chaining (rather than recomputing the identical product) keeps the
+    loop un-DCE-able and matches K sequential engine steps fed back C->A.
+    """
+    a = a_ref[...]  # (2, 36, tile) in VMEM
+    b = b_ref[...]  # (2, 36)      in VMEM (resident across grid steps)
+    if k_iters <= _UNROLL_MAX:
+        # unrolled chain: one straight-line FMA stream, no loop-carry
+        # overhead — the compiler sees the whole K-multiply dataflow
+        c = a
+        for _ in range(k_iters):
+            c = _mult_tile(c, b)
+    else:
+        c = jax.lax.fori_loop(0, k_iters, lambda _, x: _mult_tile(x, b), a)
     c_ref[...] = c.astype(c_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile", "k_iters", "interpret", "alias"))
 def su3_mult_planar(
     a: jax.Array,
     b: jax.Array,
     *,
     tile: int = 512,
+    k_iters: int = 1,
     interpret: bool = False,
+    alias: bool = False,
 ) -> jax.Array:
-    """Planar-SoA SU3 multiply via pallas_call. See module docstring for layout."""
+    """Planar-SoA SU3 multiply via pallas_call. See module docstring for layout.
+
+    ``k_iters`` chains K multiplies inside one grid step (fused iteration).
+    ``alias`` writes the C-tile into A's buffer (``input_output_aliases``) so
+    the fused step is a true in-place update; callers that donate A (the
+    engine's fused loop rebinds ``a = step(a, b)``) avoid the defensive copy.
+    """
     assert a.ndim == 3 and a.shape[:2] == (2, ROWS), a.shape
     assert b.shape == (2, ROWS), b.shape
+    assert k_iters >= 1, k_iters
     n_sites = a.shape[2]
     assert n_sites % tile == 0, (n_sites, tile)
     grid = (n_sites // tile,)
     return pl.pallas_call(
-        _su3_kernel,
+        functools.partial(_su3_kernel, k_iters=k_iters),
         grid=grid,
         in_specs=[
             pl.BlockSpec((2, ROWS, tile), lambda i: (0, 0, i)),
@@ -89,6 +123,7 @@ def su3_mult_planar(
         ],
         out_specs=pl.BlockSpec((2, ROWS, tile), lambda i: (0, 0, i)),
         out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        input_output_aliases={0: 0} if alias else {},
         interpret=interpret,
     )(a, b)
 

@@ -23,6 +23,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import ALL_ARCHS, SHAPES, get_config, shape_applicable
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import roofline
@@ -182,7 +183,7 @@ def lower_cell(
     batch_sds = registry.input_specs(cfg, shape)
     b_sh = sharding.batch_shardings(batch_sds, mesh, rules)
 
-    with jax.set_mesh(mesh), act_sharding.use_rules(mesh, rules):
+    with compat.set_mesh(mesh), act_sharding.use_rules(mesh, rules):
         if shape.kind == "train":
             opt_cfg = adamw.AdamWConfig(moment_dtype=policy.moment_dtype)
             m_dt = jnp.dtype(policy.moment_dtype)

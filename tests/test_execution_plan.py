@@ -1,0 +1,176 @@
+"""ExecutionPlan layer: placement equivalence, fused stepping, registry,
+batched lattice serving, and the persistent autotune cache."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.core.su3 import layouts, plan, registry
+from repro.core.su3.engine import EngineConfig, SU3Engine
+from repro.core.su3.layouts import Layout
+from repro.kernels import ref
+
+
+def _random_lattice(key, n_sites):
+    a = jax.random.normal(key, (n_sites, 4, 3, 3, 2))
+    return jax.lax.complex(a[..., 0], a[..., 1])
+
+
+def _random_b(key):
+    b = jax.random.normal(key, (4, 3, 3, 2))
+    return jax.lax.complex(b[..., 0], b[..., 1])
+
+
+# -- placement-policy equivalence --------------------------------------------
+
+
+@pytest.mark.parametrize("variant,layout", [("pallas", Layout.SOA), ("versionX", Layout.AOS)])
+def test_placement_policies_bit_identical(variant, layout):
+    """sharded / host_scatter / replicated must produce bit-identical verified C."""
+    results = {}
+    for placement in plan.PLACEMENTS:
+        cfg = EngineConfig(L=4, layout=layout, variant=variant, placement=placement,
+                           iterations=1, warmups=0, tile=128)
+        p = plan.build_plan(cfg)
+        a_phys, b_p, _, _ = p.init_data()
+        c = p.step(a_phys, b_p)
+        assert p.verify(c), placement
+        results[placement] = np.asarray(jax.device_get(c))
+    base = results["sharded"]
+    for placement, arr in results.items():
+        np.testing.assert_array_equal(arr, base, err_msg=placement)
+
+
+# -- fused multi-iteration stepping ------------------------------------------
+
+
+@pytest.mark.parametrize("variant,layout", [
+    ("pallas", Layout.SOA), ("pallas", Layout.AOSOA), ("versionX", Layout.SOA),
+])
+@pytest.mark.parametrize("k", [2, 4, 12])  # 12 exercises the fori_loop (>_UNROLL_MAX) path
+def test_fused_step_matches_k_sequential(variant, layout, k):
+    cfg = EngineConfig(L=2, layout=layout, variant=variant, tile=16,
+                       iterations=1, warmups=0)
+    p = plan.build_plan(cfg)
+    codec = p.codec
+    a = _random_lattice(jax.random.PRNGKey(3), p.padded_sites)
+    b = _random_b(jax.random.PRNGKey(4))
+    a_phys, b_p = codec.pack(a), codec.pack_b(b)
+    x = a_phys
+    for _ in range(k):
+        x = p.step(x, b_p)
+    fused = p.fused_step(k)(a_phys, b_p)
+    np.testing.assert_allclose(
+        np.asarray(jax.device_get(fused)), np.asarray(jax.device_get(x)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_engine_run_fused_verifies():
+    cfg = EngineConfig(L=4, iterations=3, warmups=1, tile=128)
+    r = SU3Engine(cfg).run_fused(k=3)
+    assert r.verified and r.fused_k == 3
+    assert all(t > 0 for t in r.iter_seconds)
+
+
+# -- registry + plan validation ----------------------------------------------
+
+
+def test_registry_unifies_variants_and_pallas():
+    names = registry.kernel_names()
+    assert "pallas" in names and "versionX" in names and "version_gemm" in names
+    entry = registry.get_kernel("pallas")
+    assert entry.form == registry.PLANAR and entry.supports_fused
+    assert registry.kernel_names(backend="pallas") == ["pallas"]
+    assert "pallas" not in registry.kernel_names(form=registry.CANONICAL)
+
+
+def test_plan_rejects_invalid_combinations():
+    with pytest.raises(ValueError, match="layout"):
+        plan.build_plan(EngineConfig(L=2, layout=Layout.AOS, variant="pallas", tile=16))
+    with pytest.raises(KeyError, match="unknown SU3 kernel"):
+        plan.build_plan(EngineConfig(L=2, variant="nope", tile=16))
+    with pytest.raises(ValueError, match="placement"):
+        plan.build_plan(EngineConfig(L=2, tile=16, placement="socket0"))
+
+
+def test_codec_dedups_unpack_paths():
+    """One codec handles padded and sliced unpack for every layout."""
+    for layout in Layout:
+        codec = layouts.make_codec(layout, tile=16)
+        a = _random_lattice(jax.random.PRNGKey(7), 32)
+        phys = codec.pack(a)
+        np.testing.assert_allclose(
+            np.asarray(codec.unpack(phys, 30)), np.asarray(a[:30]), atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(codec.unpack(phys)), np.asarray(a), atol=1e-6)
+
+
+# -- batched lattice serving --------------------------------------------------
+
+
+def test_batched_lattice_runner_matches_reference():
+    runner = plan.BatchedLatticeRunner(EngineConfig(L=2, tile=16))
+    B, S = 3, 16
+    a = jnp.stack([_random_lattice(jax.random.PRNGKey(i), S) for i in range(B)])
+    b = jnp.stack([_random_b(jax.random.PRNGKey(100 + i)) for i in range(B)])
+    c = runner.multiply(a, b)
+    for i in range(B):
+        np.testing.assert_allclose(
+            np.asarray(c[i]), np.asarray(ref.su3_mult_ref(a[i], b[i])),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+def test_batched_lattice_runner_fused_chain():
+    runner = plan.BatchedLatticeRunner(EngineConfig(L=2, tile=16))
+    B, S = 2, 16
+    a = jnp.stack([_random_lattice(jax.random.PRNGKey(i), S) for i in range(B)])
+    b = jnp.stack([_random_b(jax.random.PRNGKey(50 + i)) for i in range(B)])
+    fused = runner.multiply(a, b, k=3)
+    seq = a
+    for _ in range(3):
+        seq = jnp.stack([ref.su3_mult_ref(seq[i], b[i]) for i in range(B)])
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(seq), rtol=1e-4, atol=1e-4)
+
+
+# -- persistent autotune cache ------------------------------------------------
+
+
+def test_best_config_roundtrips_through_cache(tmp_path, monkeypatch):
+    calls = {"n": 0}
+    real_sweep = autotune.tile_sweep
+
+    def counting_sweep(*a, **kw):
+        calls["n"] += 1
+        return [
+            {"tile": 128, "vmem_kib": 36, "fits_vmem": True,
+             "measured_gflops": 2.0, "verified": True},
+            {"tile": 4096, "vmem_kib": 1154, "fits_vmem": True,
+             "measured_gflops": 1.0, "verified": True},
+        ]
+
+    monkeypatch.setattr(autotune, "tile_sweep", counting_sweep)
+    first = autotune.best_config(L=4, cache_directory=str(tmp_path))
+    assert calls["n"] == 1
+    # measured winner, NOT the largest fitting tile
+    assert first["tile"] == 128 and first["cached"] is False
+    second = autotune.best_config(L=4, cache_directory=str(tmp_path))
+    assert calls["n"] == 1, "second call must do zero measurements"
+    assert second["tile"] == 128 and second["cached"] is True
+    # refresh forces a re-measure
+    autotune.best_config(L=4, cache_directory=str(tmp_path), refresh=True)
+    assert calls["n"] == 2
+    # tuned_engine_config flows the cached tuple into an EngineConfig
+    cfg = autotune.tuned_engine_config(L=4, cache_directory=str(tmp_path), iterations=1)
+    assert cfg.tile == 128 and cfg.variant == "pallas" and cfg.layout == Layout.SOA
+    assert calls["n"] == 2
+    autotune.tile_sweep = real_sweep  # belt-and-braces; monkeypatch also restores
+
+
+def test_cache_key_identity():
+    k = autotune.cache_key(backend="tpu", device_kind="v5e", layout="soa",
+                           dtype="bfloat16", L=16, n_devices=4)
+    assert k == "tpu|v5e|soa|bfloat16|L16|d4"

@@ -31,9 +31,12 @@ def test_train_resume_continues_exactly():
 
 
 def test_train_loss_decreases_dense():
+    # 60 steps is inside the noise band on this config (~±0.03 nats around a
+    # ~0.001/step trend); 160 steps gives a >0.1-nat margin over the Markov
+    # data's learnable structure.
     cfg = get_config("qwen3-4b").reduced()
-    tcfg = TrainConfig(steps=60, seq_len=64, global_batch=4, log_every=30,
-                       opt=AdamWConfig(peak_lr=5e-3, warmup_steps=6, total_steps=60,
+    tcfg = TrainConfig(steps=160, seq_len=64, global_batch=4, log_every=40,
+                       opt=AdamWConfig(peak_lr=5e-3, warmup_steps=6, total_steps=160,
                                        weight_decay=0.0))
     out = train(cfg, tcfg, log=lambda s: None)
     assert out["losses"][-1] < out["losses"][0], out["losses"]
