@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""Diff BENCH_su3.json throughput rows against the previous PR's artifact.
+
+The ROADMAP's regression tripwire: every PR commits a fresh quick-mode
+``BENCH_su3.json``; this tool compares the measured throughput rows of a new
+run against the committed baseline and exits non-zero when any shared row
+regresses by more than the threshold (default 15%).
+
+Rows compared by (table, name):
+  * engine rows        ``GFLOPS`` (best-iteration useful GF/s)
+  * serve rows         ``sustained_gflops_busy`` (useful flops / kernel wall)
+
+Baselines can be a file path or a git blob (``git:REV`` reads
+``REV:BENCH_su3.json``), so the default compares working-tree results
+against the last commit:
+
+    PYTHONPATH=src python scripts/bench_diff.py              # vs git:HEAD
+    python scripts/bench_diff.py --baseline old.json --current new.json
+    python scripts/bench_diff.py --threshold 0.25            # looser gate
+
+A missing baseline (first PR, artifact not committed at REV) is a clean
+exit — there is nothing to regress against.
+
+Note on noise: quick-mode rows on a loaded CPU dev host can swing past 15%
+in either direction (single-iteration L=4 timings are the worst); a flagged
+row that recovers on re-run is timer noise, not a regression.  On the real
+TPU target the variance is far below the threshold.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+DEFAULT_ARTIFACT = "BENCH_su3.json"
+# (metric key, minimum absolute baseline value worth gating on) — rows below
+# the floor are pure timer noise at CPU quick-mode sizes.
+_METRICS = (("GFLOPS", 0.05), ("sustained_gflops_busy", 0.01))
+
+
+def collect_rows(
+    payload: dict, *, apply_floor: bool = True
+) -> dict[tuple[str, str], float]:
+    """-> {(table, row name): throughput} for every measured row.
+
+    The noise floor gates the BASELINE side only: a baseline row below the
+    floor is timer noise not worth diffing, but a *current* row must be
+    collected however small — a collapse from above-floor to ~zero is the
+    exact regression the gate exists to catch.
+    """
+    out: dict[tuple[str, str], float] = {}
+    for table, rows in payload.get("tables", {}).items():
+        if not isinstance(rows, list):
+            continue
+        for row in rows:
+            if not isinstance(row, dict):
+                continue
+            name = row.get("name")
+            if not name:
+                continue
+            for metric, floor in _METRICS:
+                val = row.get(metric)
+                if isinstance(val, (int, float)):
+                    if not apply_floor or val >= floor:
+                        out[(table, str(name))] = float(val)
+                    break  # first present metric decides the row
+    return out
+
+
+def load_baseline(spec: str) -> dict | None:
+    """Baseline payload from a path or ``git:REV`` blob; None when absent."""
+    if spec.startswith("git:"):
+        rev = spec[len("git:"):] or "HEAD"
+        try:
+            text = subprocess.run(
+                ["git", "show", f"{rev}:{DEFAULT_ARTIFACT}"],
+                capture_output=True, text=True, check=True,
+            ).stdout
+        except (subprocess.CalledProcessError, FileNotFoundError):
+            return None
+        return json.loads(text)
+    try:
+        with open(spec) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+
+
+def diff(
+    baseline: dict, current: dict, threshold: float
+) -> tuple[list[dict], list[dict]]:
+    """-> (all compared rows, the regressions among them)."""
+    base_rows = collect_rows(baseline)
+    cur_rows = collect_rows(current, apply_floor=False)
+    compared, regressions = [], []
+    for key in sorted(base_rows.keys() & cur_rows.keys()):
+        base, cur = base_rows[key], cur_rows[key]
+        drop = (base - cur) / base if base > 0 else 0.0
+        entry = {
+            "table": key[0], "name": key[1],
+            "baseline": round(base, 3), "current": round(cur, 3),
+            "delta_pct": round(-drop * 100, 1),
+        }
+        compared.append(entry)
+        if drop > threshold:
+            regressions.append(entry)
+    return compared, regressions
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default=DEFAULT_ARTIFACT,
+                    help="freshly generated artifact (default: %(default)s)")
+    ap.add_argument("--baseline", default="git:HEAD",
+                    help="path or git:REV of the committed artifact "
+                         "(default: %(default)s)")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max tolerated fractional GFLOPS drop "
+                         "(default: %(default)s)")
+    args = ap.parse_args(argv)
+
+    baseline = load_baseline(args.baseline)
+    if baseline is None:
+        print(f"bench_diff: no baseline at {args.baseline!r}; nothing to gate")
+        return 0
+    try:
+        with open(args.current) as f:
+            current = json.load(f)
+    except FileNotFoundError:
+        print(f"bench_diff: current artifact {args.current!r} missing", file=sys.stderr)
+        return 2
+
+    compared, regressions = diff(baseline, current, args.threshold)
+    if not compared:
+        print("bench_diff: no shared measured rows between baseline and current")
+        return 0
+    width = max(len(f"{c['table']}/{c['name']}") for c in compared)
+    for c in compared:
+        flag = "  << REGRESSION" if c in regressions else ""
+        print(f"{c['table'] + '/' + c['name']:<{width}}  "
+              f"{c['baseline']:>10.3f} -> {c['current']:>10.3f} GF/s  "
+              f"({c['delta_pct']:+6.1f}%){flag}")
+    if regressions:
+        print(f"\nbench_diff: {len(regressions)}/{len(compared)} rows regressed "
+              f">{args.threshold:.0%}", file=sys.stderr)
+        return 1
+    print(f"\nbench_diff: OK — {len(compared)} rows within {args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

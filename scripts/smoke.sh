@@ -17,4 +17,9 @@ python -m pytest -x -q
 if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== quick benchmarks (BENCH_su3.json) =="
   python -m benchmarks.run --quick --json BENCH_su3.json
+  echo "== bench diff vs last committed artifact (>15% GFLOPS drop fails) =="
+  # BENCH_DIFF_THRESHOLD loosens the gate on noisy shared dev hosts (see
+  # the noise note in scripts/bench_diff.py); the default is the real bar.
+  python scripts/bench_diff.py --current BENCH_su3.json --baseline git:HEAD \
+    --threshold "${BENCH_DIFF_THRESHOLD:-0.15}"
 fi

@@ -55,7 +55,12 @@ class TuneResult:
 
 
 def hlo_bytes_for_variant(
-    variant: str, layout: layouts.Layout, n_sites: int = 4096, tile: int = 512
+    variant: str,
+    layout: layouts.Layout,
+    n_sites: int = 4096,
+    tile: int = 512,
+    dtype: str = "float32",
+    accum_dtype: str = "",
 ) -> float:
     """Lower the *physical* plan step through XLA; count HLO bytes per site.
 
@@ -64,8 +69,14 @@ def hlo_bytes_for_variant(
     72-word sites — previously the canonical complex operands were lowered
     for every non-Pallas variant and the ``layout`` argument was ignored,
     making the AOS and SOA rows identical.
+
+    ``dtype``/``accum_dtype`` lower the mixed-precision storage plans: a
+    bf16-storage / f32-accumulate plan streams 2-byte operands and results,
+    so its measured bytes/site land well under the f32 plan's even though
+    every FMA runs at f32 (converts are charged at the narrow side — the
+    paper-correct streaming cost).
     """
-    codec = layouts.make_codec(layout, tile=tile, dtype="float32")
+    codec = layouts.make_codec(layout, tile=tile, dtype=dtype, accum_dtype=accum_dtype)
     entry = registry.get_kernel(variant)
     interpret = True if entry.form == registry.PLANAR else None
     step = make_raw_step(codec, entry, tile=tile, interpret=interpret)
@@ -87,14 +98,22 @@ def tile_sweep(
     tiles: tuple[int, ...] = (128, 256, 512, 1024, 2048, 4096),
     L: int = 8,
     dtype: str = "float32",
+    accum_dtype: str = "",
 ) -> list[dict]:
-    """VMEM working set + measured engine time per Pallas tile."""
+    """VMEM working set + measured engine time per Pallas tile.
+
+    The working-set bound honors the sweep's dtypes: bf16 storage halves the
+    resident tile bytes, while a wider accumulate re-inflates them (the
+    upcast tiles are what actually sit in VMEM).
+    """
+    word_b = layouts.WORD_BYTES[dtype]
+    accum_b = layouts.WORD_BYTES[accum_dtype] if accum_dtype else None
     rows = []
     for tile in tiles:
-        vmem = su3_matmul.vmem_bytes(tile)
+        vmem = su3_matmul.vmem_bytes(tile, word_b, accum_b)
         fits = vmem <= roofline.TPU_V5E.vmem_bytes
         cfg = EngineConfig(L=L, dtype=dtype, variant="pallas", layout=layouts.Layout.SOA,
-                           tile=tile, iterations=2, warmups=1)
+                           tile=tile, accum_dtype=accum_dtype, iterations=2, warmups=1)
         r = SU3Engine(cfg).run()
         rows.append({
             "tile": tile, "vmem_kib": vmem // 1024, "fits_vmem": fits,
@@ -103,18 +122,55 @@ def tile_sweep(
     return rows
 
 
-def layout_sweep(n_sites: int = 4096) -> list[dict]:
-    """The paper's AoS->SoA traffic claim, measured at the HLO level."""
+def k_sweep(
+    ks: tuple[int, ...] = (1, 2, 4, 8),
+    L: int = 8,
+    dtype: str = "float32",
+    tile: int = 512,
+    accum_dtype: str = "",
+) -> list[dict]:
+    """Measured per-multiply GFLOPS of the fused chain at each depth K.
+
+    The fused step amortizes one dispatch (and on TPU one HBM roundtrip) over
+    K multiplies, but past some K the chain stops helping — longer in-kernel
+    chains grow the straight-line body (or fall to the fori_loop) without
+    removing any more overhead.  The knee depends on (backend, L), so it is
+    measured, not assumed, and ``best_config`` persists the winner next to
+    the tile.
+    """
     rows = []
-    for variant, layout in (("versionX", layouts.Layout.AOS),
-                            ("versionX", layouts.Layout.SOA),
-                            ("version_gemm", layouts.Layout.SOA),
-                            ("pallas", layouts.Layout.SOA)):
-        tm = layouts.TrafficModel(layout, n_sites, 4)
-        hlo_b = hlo_bytes_for_variant(variant, layout, n_sites)
+    for k in ks:
+        cfg = EngineConfig(L=L, dtype=dtype, variant="pallas", layout=layouts.Layout.SOA,
+                           tile=tile, accum_dtype=accum_dtype, iterations=2, warmups=1)
+        r = SU3Engine(cfg).run_fused(k=k, reps=2)
+        rows.append({
+            "k": k, "measured_gflops": round(r.gflops, 3), "verified": r.verified,
+        })
+    return rows
+
+
+def layout_sweep(n_sites: int = 4096) -> list[dict]:
+    """The paper's AoS->SoA traffic claim, measured at the HLO level.
+
+    The final row is the bf16-storage / f32-accumulate serving plan: same
+    kernel, half the streamed bytes per site, double the bandwidth-bound
+    GFLOPS — the MILC-on-KNL reduced-precision-storage scheme measured at
+    the HLO level rather than assumed.
+    """
+    rows = []
+    for variant, layout, dtype, accum in (
+            ("versionX", layouts.Layout.AOS, "float32", ""),
+            ("versionX", layouts.Layout.SOA, "float32", ""),
+            ("version_gemm", layouts.Layout.SOA, "float32", ""),
+            ("pallas", layouts.Layout.SOA, "float32", ""),
+            ("pallas", layouts.Layout.SOA, "bfloat16", "float32")):
+        tm = layouts.TrafficModel.for_dtype(layout, n_sites, dtype)
+        hlo_b = hlo_bytes_for_variant(variant, layout, n_sites,
+                                      dtype=dtype, accum_dtype=accum)
         bound = roofline.TPU_V5E.hbm_bw * tm.arithmetic_intensity / 1e9
         rows.append({
-            "variant": variant, "layout": layout.value,
+            "variant": variant, "layout": layout.value, "dtype": dtype,
+            "accum_dtype": accum or dtype,
             "model_bytes_per_site": tm.bytes_per_site_rw,
             "hlo_bytes_per_site": round(hlo_b, 1),
             "ai": round(tm.arithmetic_intensity, 3),
@@ -182,37 +238,70 @@ def _device_identity() -> tuple[str, str, int]:
 # ---------------------------------------------------------------------------
 
 
+# keys a cached config must carry to be served without re-measuring; entries
+# written by older builds (no fused_k) or truncated by a crashed writer fall
+# through to a fresh sweep instead of KeyError-ing every caller.
+_REQUIRED_CONFIG_KEYS = frozenset({"layout", "variant", "tile", "fused_k"})
+
+
+def _valid_cache_hit(hit: Any) -> dict[str, Any] | None:
+    """The cached config dict iff the entry is structurally sound."""
+    if not isinstance(hit, dict):
+        return None
+    config = hit.get("config")
+    if not isinstance(config, dict) or not _REQUIRED_CONFIG_KEYS <= config.keys():
+        return None
+    return config
+
+
 def best_config(
     L: int = 8,
     dtype: str = "float32",
     *,
+    accum_dtype: str = "",
     cache: bool = True,
     cache_directory: str | None = None,
     refresh: bool = False,
 ) -> dict[str, Any]:
-    """The tuned production config: SoA + the tile with the best MEASURED GFLOPS.
+    """The tuned production config: SoA + the tile with the best MEASURED GFLOPS
+    + the fused chain depth K with the best measured per-multiply GFLOPS.
 
     Selection is by measured throughput among VMEM-fitting, verified tiles —
     not the largest fitting tile, which on real devices can sit past the
-    occupancy knee.  The decision is persisted; later calls (any process)
-    with the same (backend, device_kind, layout, dtype, L, n_devices) key do
-    zero measurements.
+    occupancy knee.  K is then swept at the winning tile (the knee depends on
+    (backend, L)).  The decision is persisted; later calls (any process) with
+    the same (backend, device_kind, layout, dtype, L, n_devices) key do zero
+    measurements.  Corrupt or partial cache entries (older schema, truncated
+    writes) are treated as misses and re-measured, never crashed on.
+
+    ``accum_dtype`` tunes mixed-precision plans as deployed: the sweeps run
+    the f32-accumulate kernel (different VMEM resident set and fused-K knee
+    than the pure storage dtype), and the cache key carries the accumulate
+    width so bf16-pure and bf16+f32-accum decisions never alias.
     """
     backend, device_kind, n_devices = _device_identity()
+    dtype_key = f"{dtype}+acc-{accum_dtype}" if accum_dtype else dtype
     key = cache_key(
         backend=backend, device_kind=device_kind, layout="soa",
-        dtype=dtype, L=L, n_devices=n_devices,
+        dtype=dtype_key, L=L, n_devices=n_devices,
     )
     if cache and not refresh:
-        hit = load_cache(cache_directory).get(key)
-        if hit is not None:
-            return dict(hit["config"], cached=True)
+        config = _valid_cache_hit(load_cache(cache_directory).get(key))
+        if config is not None:
+            return dict(config, cached=True)
 
-    rows = [r for r in tile_sweep(L=L, dtype=dtype) if r["fits_vmem"] and r["verified"]]
+    rows = [r for r in tile_sweep(L=L, dtype=dtype, accum_dtype=accum_dtype)
+            if r["fits_vmem"] and r["verified"]]
     if not rows:
         raise RuntimeError("no VMEM-fitting verified tile candidate")
     winner = max(rows, key=lambda r: r["measured_gflops"])
-    config = {"layout": "soa", "variant": "pallas", "tile": winner["tile"]}
+    krows = [r for r in k_sweep(L=L, dtype=dtype, tile=winner["tile"],
+                                accum_dtype=accum_dtype) if r["verified"]]
+    kwinner = max(krows, key=lambda r: r["measured_gflops"]) if krows else {"k": 1}
+    config = {
+        "layout": "soa", "variant": "pallas",
+        "tile": winner["tile"], "fused_k": kwinner["k"],
+    }
     if cache:
         store_cache_entry(
             key,
@@ -225,8 +314,15 @@ def best_config(
 def tuned_engine_config(
     L: int = 8, dtype: str = "float32", *, cache_directory: str | None = None, **overrides
 ) -> EngineConfig:
-    """EngineConfig built from the (cached) tuned tuple, override-able."""
-    tuned = best_config(L=L, dtype=dtype, cache_directory=cache_directory)
+    """EngineConfig built from the (cached) tuned tuple, override-able.
+
+    An ``accum_dtype`` override also steers the tuning itself (mixed-
+    precision plans are measured as deployed, under their own cache key).
+    """
+    tuned = best_config(
+        L=L, dtype=dtype, accum_dtype=overrides.get("accum_dtype", ""),
+        cache_directory=cache_directory,
+    )
     base = {
         "L": L, "dtype": dtype, "layout": layouts.Layout(tuned["layout"]),
         "variant": tuned["variant"], "tile": tuned["tile"],
@@ -235,9 +331,25 @@ def tuned_engine_config(
     return EngineConfig(**base)
 
 
+def tuned_fused_k(
+    L: int = 8, dtype: str = "float32", *, accum_dtype: str = "",
+    cache_directory: str | None = None
+) -> int:
+    """The measured-best fused chain depth for (backend, L) — from the cache.
+
+    Serving and benchmarks call this instead of hardcoding K; the first call
+    per device identity pays the sweep, every later process reads the cache.
+    """
+    return int(best_config(L=L, dtype=dtype, accum_dtype=accum_dtype,
+                           cache_directory=cache_directory)["fused_k"])
+
+
 if __name__ == "__main__":
     print("== tile sweep (VMEM blocking) ==")
     for r in tile_sweep():
+        print("  ", r)
+    print("== k sweep (fused chain depth) ==")
+    for r in k_sweep():
         print("  ", r)
     print("== layout sweep (traffic) ==")
     for r in layout_sweep():

@@ -159,15 +159,30 @@ class LayoutCodec:
     ``tile`` is the AoSoA lane width / Pallas site-tile; AOS and SOA ignore it
     for shape purposes but carry it so a codec fully identifies the physical
     form used by an :class:`repro.core.su3.plan.ExecutionPlan`.
+
+    ``accum_dtype`` ("" = same as ``dtype``) records the *compute* width of
+    mixed-precision plans: storage words stream at ``dtype`` (what pack emits
+    and the traffic model charges) while the kernel accumulates at
+    ``accum_dtype`` — the bf16-storage / f32-accumulate serving scheme.
     """
 
     layout: Layout
     tile: int = LANE
     dtype: str = "float32"
+    accum_dtype: str = ""  # "" => accumulate at the storage dtype
 
     @property
     def word_dtype(self) -> Any:
         return jnp.dtype(self.dtype)
+
+    @property
+    def compute_dtype(self) -> str:
+        """The dtype FMAs run at: accum_dtype when set, else the word dtype."""
+        return self.accum_dtype or self.dtype
+
+    @property
+    def is_mixed_precision(self) -> bool:
+        return bool(self.accum_dtype) and self.accum_dtype != self.dtype
 
     # -- canonical <-> physical ------------------------------------------------
 
@@ -242,15 +257,22 @@ class LayoutCodec:
         raise ValueError(f"{self.layout} has no planar kernel view")
 
 
-def make_codec(layout: Layout, tile: int = LANE, dtype: str = "float32") -> LayoutCodec:
+def make_codec(
+    layout: Layout, tile: int = LANE, dtype: str = "float32", accum_dtype: str = ""
+) -> LayoutCodec:
     """The one construction site for layout codecs."""
-    return LayoutCodec(layout=Layout(layout), tile=tile, dtype=dtype)
+    return LayoutCodec(
+        layout=Layout(layout), tile=tile, dtype=dtype, accum_dtype=accum_dtype
+    )
 
 
 # ---------------------------------------------------------------------------
 # Traffic model — charges each layout the bytes it actually streams.
 # This is the quantitative form of the paper's 288/320 streaming-store point.
 # ---------------------------------------------------------------------------
+
+
+WORD_BYTES = {"float32": 4, "bfloat16": 2, "float64": 8}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -260,11 +282,20 @@ class TrafficModel:
     read(A) + write(C); B is cache/VMEM-resident after first read (paper §3.1:
     "B could stay in the cache and can be reused") and charged once, which is
     negligible, so it is excluded exactly as in the paper's AI computation.
+
+    Mixed-precision plans are charged at *storage* width: a bf16-storage /
+    f32-accumulate plan streams 2-byte words over HBM (the accumulate happens
+    on the VMEM-resident tile and never hits memory), so ``word_bytes`` is
+    always the storage dtype's width.
     """
 
     layout: Layout
     n_sites: int
-    word_bytes: int  # 4 for fp32, 2 for bf16, 8 for fp64
+    word_bytes: int  # 4 for fp32, 2 for bf16, 8 for fp64 — STORAGE width
+
+    @classmethod
+    def for_dtype(cls, layout: Layout, n_sites: int, dtype: str) -> "TrafficModel":
+        return cls(layout, n_sites, WORD_BYTES[dtype])
 
     @property
     def words_per_site(self) -> int:

@@ -71,17 +71,27 @@ class EngineConfig:
     """The tunable tuple. One instance == one ExecutionPlan identity."""
 
     L: int = 16
-    dtype: str = "float32"  # real word dtype: float32 | bfloat16
+    dtype: str = "float32"  # real STORAGE word dtype: float32 | bfloat16
     layout: Layout = Layout.SOA
     variant: str = "pallas"  # any name in registry.kernel_names()
     tile: int = 512  # Pallas site-tile (VMEM blocking) / AoSoA lane
     placement: str = "sharded"  # sharded | host_scatter | replicated
     iterations: int = 10
     warmups: int = 2
+    accum_dtype: str = ""  # "" = accumulate at dtype; "float32" = bf16-storage plans
 
     @property
     def word_bytes(self) -> int:
-        return {"float32": 4, "bfloat16": 2, "float64": 8}[self.dtype]
+        return layouts.WORD_BYTES[self.dtype]
+
+    @property
+    def compute_dtype(self) -> str:
+        """The dtype the FMA chain runs at (storage dtype unless overridden)."""
+        return self.accum_dtype or self.dtype
+
+    @property
+    def is_mixed_precision(self) -> bool:
+        return bool(self.accum_dtype) and self.accum_dtype != self.dtype
 
     @property
     def complex_dtype(self) -> Any:
@@ -117,7 +127,10 @@ def make_raw_step(
     """Unjitted physical step (a_phys, b_planar) -> c_phys for any kernel form.
 
     The one place the kernel-form dispatch happens; ExecutionPlan jits this
-    and core.autotune lowers it for HLO-level byte accounting.
+    and core.autotune lowers it for HLO-level byte accounting.  The codec's
+    ``accum_dtype`` (mixed-precision storage plans) flows to planar kernels
+    that own their upcast; canonical kernels accumulate in float32 by
+    construction (the codec unpacks to complex64).
     """
     if not kernel.supports_layout(codec.layout):
         raise ValueError(
@@ -126,6 +139,11 @@ def make_raw_step(
         )
     if k_iters > 1 and kernel.form == registry.PLANAR and not kernel.supports_fused:
         raise ValueError(f"kernel {kernel.name!r} does not support fused iteration")
+    if codec.is_mixed_precision and not kernel.supports_accum_dtype():
+        raise ValueError(
+            f"kernel {kernel.name!r} cannot accumulate at {codec.accum_dtype!r} "
+            f"over {codec.dtype!r} storage (no accum_dtype support)"
+        )
 
     if kernel.form == registry.PLANAR:
         if not codec.supports_planar_view:
@@ -137,6 +155,8 @@ def make_raw_step(
         def raw_step(a_phys: jax.Array, b_p: jax.Array) -> jax.Array:
             a_p = codec.planar_view(a_phys)
             kw: dict[str, Any] = {"tile": tile, "k_iters": k_iters, "alias": alias}
+            if codec.is_mixed_precision:
+                kw["accum_dtype"] = codec.accum_dtype
             if interpret is not None:
                 kw["interpret"] = interpret
             c_p = kernel.fn(a_p, b_p, **kw)
@@ -170,7 +190,9 @@ class ExecutionPlan:
         self.n_devices = int(mesh.devices.size)
         if cfg.placement not in PLACEMENTS:
             raise ValueError(f"unknown placement {cfg.placement!r}; one of {PLACEMENTS}")
-        self.codec = layouts.make_codec(cfg.layout, tile=cfg.tile, dtype=cfg.dtype)
+        self.codec = layouts.make_codec(
+            cfg.layout, tile=cfg.tile, dtype=cfg.dtype, accum_dtype=cfg.accum_dtype
+        )
         self.kernel = registry.get_kernel(cfg.variant)
         # Lattice padded so every device shard is a whole number of tiles.
         n = cfg.shape.n_sites
@@ -262,9 +284,10 @@ class ExecutionPlan:
     def describe(self) -> str:
         """Compact plan identity for benchmark rows / logs."""
         c = self.cfg
+        acc = f"+acc-{c.accum_dtype}" if c.is_mixed_precision else ""
         return (
             f"{c.layout.value}/{c.variant}/t{c.tile}/{c.placement}"
-            f"@{self.n_devices}dev/{c.dtype}"
+            f"@{self.n_devices}dev/{c.dtype}{acc}"
         )
 
 

@@ -19,6 +19,12 @@ enough metadata for a plan to validate and wire a kernel without per-kernel
       ``"xla"`` | ``"pallas"`` — what lowers the kernel body.
   ``supports_fused``
       whether fn accepts ``k_iters`` and chains K multiplies in one dispatch.
+  ``supports_accum``
+      whether fn accepts ``accum_dtype`` and can accumulate at a wider
+      precision than the storage words it streams (bf16-storage/f32-accumulate
+      plans).  Canonical-form kernels get this for free — the layout codec
+      unpacks to float32 complex before they run — so the flag only gates the
+      planar path, where the kernel itself owns the upcast.
 """
 from __future__ import annotations
 
@@ -39,9 +45,15 @@ class KernelEntry:
     backends: tuple[str, ...]
     form: str = CANONICAL
     supports_fused: bool = False
+    supports_accum: bool = False
 
     def supports_layout(self, layout: Layout) -> bool:
         return Layout(layout) in self.layouts
+
+    def supports_accum_dtype(self) -> bool:
+        """Mixed-precision capable: planar kernels must opt in; canonical
+        kernels always accumulate in float32 (the codec unpacks to c64)."""
+        return self.supports_accum or self.form == CANONICAL
 
 
 _KERNELS: dict[str, KernelEntry] = {}
@@ -54,6 +66,7 @@ def register_kernel(
     backends: Iterable[str] = ("xla",),
     form: str = CANONICAL,
     supports_fused: bool = False,
+    supports_accum: bool = False,
 ) -> Callable[[Callable], Callable]:
     """Decorator registering ``fn`` as kernel ``name``. Returns fn unchanged."""
     if form not in (CANONICAL, PLANAR):
@@ -67,6 +80,7 @@ def register_kernel(
             backends=tuple(backends),
             form=form,
             supports_fused=supports_fused,
+            supports_accum=supports_accum,
         )
         return fn
 

@@ -31,6 +31,7 @@ def _use_interpret() -> bool:
     backends=("pallas",),
     form=registry.PLANAR,
     supports_fused=True,
+    supports_accum=True,
 )
 def su3_mult_planar(
     a_p: jax.Array,
@@ -40,16 +41,20 @@ def su3_mult_planar(
     k_iters: int = 1,
     interpret: bool | None = None,
     alias: bool = False,
+    accum_dtype: str | None = None,
 ) -> jax.Array:
     """Planar flattened SoA entry point: a_p (2, 36, S), b_p (2, 36).
 
     ``k_iters`` chains K multiplies in one dispatch (fused iteration stepping);
-    ``alias`` requests in-place C-into-A writes via input_output_aliases.
+    ``alias`` requests in-place C-into-A writes via input_output_aliases;
+    ``accum_dtype`` accumulates the FMA chain at a wider precision than the
+    streamed storage words (bf16-storage / f32-accumulate serving plans).
     """
     if interpret is None:
         interpret = _use_interpret()
     return su3_matmul.su3_mult_planar(
-        a_p, b_p, tile=tile, k_iters=k_iters, interpret=interpret, alias=alias
+        a_p, b_p, tile=tile, k_iters=k_iters, interpret=interpret, alias=alias,
+        accum_dtype=accum_dtype,
     )
 
 

@@ -68,7 +68,7 @@ def _mult_tile(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.stack([jnp.stack(out_r, axis=0), jnp.stack(out_i, axis=0)], axis=0)
 
 
-def _su3_kernel(a_ref, b_ref, c_ref, *, k_iters: int = 1):
+def _su3_kernel(a_ref, b_ref, c_ref, *, k_iters: int = 1, accum_dtype: str | None = None):
     """One grid step: chain ``k_iters`` multiplies on the resident VMEM tile.
 
     k_iters=1 is the classic single step C = A (x) B.  k_iters>1 feeds C back
@@ -77,9 +77,18 @@ def _su3_kernel(a_ref, b_ref, c_ref, *, k_iters: int = 1):
     iteration dispatch + HBM roundtrip that dominates at small L disappears.
     The chaining (rather than recomputing the identical product) keeps the
     loop un-DCE-able and matches K sequential engine steps fed back C->A.
+
+    ``accum_dtype`` widens the VREG working precision: the A/B tiles are
+    upcast once on VMEM load, every FMA in the chain accumulates at that
+    width, and the final C-tile narrows back to the storage dtype on the way
+    out.  HBM traffic stays at storage width (the MILC-on-KNL reduced-
+    precision-storage scheme: stream bf16, accumulate f32).
     """
     a = a_ref[...]  # (2, 36, tile) in VMEM
     b = b_ref[...]  # (2, 36)      in VMEM (resident across grid steps)
+    if accum_dtype is not None:
+        a = a.astype(accum_dtype)
+        b = b.astype(accum_dtype)
     if k_iters <= _UNROLL_MAX:
         # unrolled chain: one straight-line FMA stream, no loop-carry
         # overhead — the compiler sees the whole K-multiply dataflow
@@ -91,7 +100,9 @@ def _su3_kernel(a_ref, b_ref, c_ref, *, k_iters: int = 1):
     c_ref[...] = c.astype(c_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "k_iters", "interpret", "alias"))
+@functools.partial(
+    jax.jit, static_argnames=("tile", "k_iters", "interpret", "alias", "accum_dtype")
+)
 def su3_mult_planar(
     a: jax.Array,
     b: jax.Array,
@@ -100,6 +111,7 @@ def su3_mult_planar(
     k_iters: int = 1,
     interpret: bool = False,
     alias: bool = False,
+    accum_dtype: str | None = None,
 ) -> jax.Array:
     """Planar-SoA SU3 multiply via pallas_call. See module docstring for layout.
 
@@ -107,6 +119,8 @@ def su3_mult_planar(
     ``alias`` writes the C-tile into A's buffer (``input_output_aliases``) so
     the fused step is a true in-place update; callers that donate A (the
     engine's fused loop rebinds ``a = step(a, b)``) avoid the defensive copy.
+    ``accum_dtype`` upcasts the resident tiles for the FMA chain (e.g. bf16
+    storage with float32 accumulation) while streaming storage-width bytes.
     """
     assert a.ndim == 3 and a.shape[:2] == (2, ROWS), a.shape
     assert b.shape == (2, ROWS), b.shape
@@ -115,7 +129,7 @@ def su3_mult_planar(
     assert n_sites % tile == 0, (n_sites, tile)
     grid = (n_sites // tile,)
     return pl.pallas_call(
-        functools.partial(_su3_kernel, k_iters=k_iters),
+        functools.partial(_su3_kernel, k_iters=k_iters, accum_dtype=accum_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((2, ROWS, tile), lambda i: (0, 0, i)),
@@ -128,7 +142,12 @@ def su3_mult_planar(
     )(a, b)
 
 
-def vmem_bytes(tile: int, word_bytes: int = 4) -> int:
+def vmem_bytes(tile: int, word_bytes: int = 4, accum_word_bytes: int | None = None) -> int:
     """Working-set estimate for one grid step (A, C tiles + B) — the quantity
-    the paper bounded by the register file and we bound by VMEM (~16 MiB)."""
-    return (2 * 2 * ROWS * tile + 2 * ROWS) * word_bytes
+    the paper bounded by the register file and we bound by VMEM (~16 MiB).
+
+    With mixed-precision accumulation the resident tiles live at the *wider*
+    of storage and accumulation width once upcast, so that bounds the set.
+    """
+    w = max(word_bytes, accum_word_bytes or word_bytes)
+    return (2 * 2 * ROWS * tile + 2 * ROWS) * w

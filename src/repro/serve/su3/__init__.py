@@ -1,0 +1,30 @@
+"""repro.serve.su3 — dynamic-batching SU3 lattice serving.
+
+Public surface:
+
+  ServiceConfig / SU3Service   the traffic-handling front door over the
+                               warm ExecutionPlan pool (bf16-storage plans
+                               via dtype="bfloat16", accum_dtype="float32")
+  BatcherConfig / DynamicBatcher / ServeRequest / CoalescedBatch
+                               the (L, k)-bucketed coalescing queue
+  ServiceMetrics               latency/throughput/occupancy accounting
+"""
+from repro.serve.su3.batcher import (
+    BatcherConfig,
+    CoalescedBatch,
+    DynamicBatcher,
+    ServeRequest,
+)
+from repro.serve.su3.metrics import ServiceMetrics, request_flops
+from repro.serve.su3.service import ServiceConfig, SU3Service
+
+__all__ = [
+    "BatcherConfig",
+    "CoalescedBatch",
+    "DynamicBatcher",
+    "ServeRequest",
+    "ServiceMetrics",
+    "ServiceConfig",
+    "SU3Service",
+    "request_flops",
+]

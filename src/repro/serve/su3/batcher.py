@@ -1,0 +1,165 @@
+"""Dynamic request batching for SU3 lattice serving.
+
+The serving analog of the paper's layout lesson: throughput is decided by
+what you fix *before* the hot loop runs.  For traffic, that is the batch
+shape — every distinct (lattice size, chain depth, batch size) triple is a
+separate compiled dispatch, so an unmanaged request stream recompiles
+constantly and runs batch-of-one.  The batcher makes the batch shape a
+controlled, warm quantity:
+
+  * **bucketing** — arriving requests are queued per ``(L, k)`` bucket
+    (lattice size x chain depth); only shape-compatible requests coalesce
+    into one vmapped dispatch.
+  * **warm batch sizes** — a coalesced batch is padded up to the nearest
+    size in ``warm_batch_sizes``, so the jit cache holds a handful of
+    compiled batch shapes instead of one per observed batch size.  The
+    padding cost is explicit: ``CoalescedBatch.occupancy`` is the live
+    fraction, and the metrics charge padded slots as overhead.
+  * **admission control** — ``submit`` rejects when the total queued depth
+    would exceed ``max_queue_depth`` (backpressure to the caller), bounding
+    queue-growth latency instead of letting p99 run away under overload.
+
+The batcher is a plain steppable object — no threads, no event loop — so it
+drops into a synchronous replay harness (benchmarks/serve_traffic.py), an
+asyncio front-end (``SU3Service.arun``), or a test with the same semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any
+
+BucketKey = tuple[int, int]  # (L, chain depth k)
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One user's lattice multiply: C = A (x) B chained ``k`` times."""
+
+    req_id: int
+    a: Any  # canonical complex (n_sites, 4, 3, 3)
+    b: Any  # canonical complex (4, 3, 3)
+    L: int
+    k: int
+    arrival_s: float = 0.0  # perf_counter timestamp at admission
+
+    @property
+    def n_sites(self) -> int:
+        return self.L**4
+
+    @property
+    def bucket(self) -> BucketKey:
+        return (self.L, self.k)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatcherConfig:
+    max_batch: int = 8  # hard cap on requests coalesced into one dispatch
+    warm_batch_sizes: tuple[int, ...] = (1, 2, 4, 8)  # pad-to sizes (jit cache keys)
+    max_queue_depth: int = 64  # admission control: reject submits beyond this
+
+    def __post_init__(self) -> None:
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_queue_depth < 1:
+            raise ValueError(
+                f"max_queue_depth must be >= 1, got {self.max_queue_depth} "
+                f"(0 would reject every submit and livelock arun retries)"
+            )
+        if not self.warm_batch_sizes or sorted(self.warm_batch_sizes) != list(
+            self.warm_batch_sizes
+        ):
+            raise ValueError(
+                f"warm_batch_sizes must be ascending and non-empty, "
+                f"got {self.warm_batch_sizes}"
+            )
+        if self.max_batch > self.warm_batch_sizes[-1]:
+            raise ValueError(
+                f"max_batch={self.max_batch} exceeds the largest warm batch "
+                f"size {self.warm_batch_sizes[-1]}: batches above it would "
+                f"dispatch at never-warmed sizes, recompiling per observed "
+                f"batch size"
+            )
+
+    def padded_size(self, n: int) -> int:
+        """Nearest warm batch size >= n (n itself past the largest warm size)."""
+        for w in self.warm_batch_sizes:
+            if w >= n:
+                return w
+        return n
+
+
+@dataclasses.dataclass
+class CoalescedBatch:
+    """Shape-compatible requests headed for one vmapped dispatch."""
+
+    key: BucketKey
+    requests: list[ServeRequest]
+    padded_size: int
+
+    @property
+    def L(self) -> int:
+        return self.key[0]
+
+    @property
+    def k(self) -> int:
+        return self.key[1]
+
+    @property
+    def occupancy(self) -> float:
+        """Live fraction of the dispatched batch (1.0 = no padding waste)."""
+        return len(self.requests) / self.padded_size
+
+    @property
+    def pad(self) -> int:
+        return self.padded_size - len(self.requests)
+
+
+class DynamicBatcher:
+    """Steppable coalescing queue with per-(L, k) buckets and backpressure."""
+
+    def __init__(self, cfg: BatcherConfig | None = None):
+        self.cfg = cfg if cfg is not None else BatcherConfig()
+        # bucket -> FIFO of requests; OrderedDict keeps bucket creation order
+        # as the tiebreak when head-request arrival times are equal.
+        self._buckets: "OrderedDict[BucketKey, list[ServeRequest]]" = OrderedDict()
+        self._depth = 0
+
+    def __len__(self) -> int:
+        return self._depth
+
+    @property
+    def depth(self) -> int:
+        return self._depth
+
+    def bucket_depths(self) -> dict[BucketKey, int]:
+        return {k: len(v) for k, v in self._buckets.items() if v}
+
+    def submit(self, req: ServeRequest) -> bool:
+        """Admit a request; False under backpressure (queue budget exhausted)."""
+        if self._depth >= self.cfg.max_queue_depth:
+            return False
+        if not req.arrival_s:
+            req.arrival_s = time.perf_counter()
+        self._buckets.setdefault(req.bucket, []).append(req)
+        self._depth += 1
+        return True
+
+    def next_batch(self) -> CoalescedBatch | None:
+        """Coalesce up to ``max_batch`` requests from the most urgent bucket.
+
+        Urgency is head-of-line arrival time (oldest waiting request first),
+        so no bucket starves under mixed traffic: a lone L=2 request queued
+        behind a stream of L=4 batches is picked as soon as it is oldest.
+        """
+        live = [(key, q) for key, q in self._buckets.items() if q]
+        if not live:
+            return None
+        key, queue = min(live, key=lambda kv: kv[1][0].arrival_s)
+        take = queue[: self.cfg.max_batch]
+        self._buckets[key] = queue[len(take):]
+        self._depth -= len(take)
+        return CoalescedBatch(
+            key=key, requests=take, padded_size=self.cfg.padded_size(len(take))
+        )

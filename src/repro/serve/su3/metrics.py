@@ -1,0 +1,127 @@
+"""Serving metrics: the sustained-throughput view of the SU3 kernel.
+
+The paper reports best-iteration GFLOPS of a dedicated loop; a service is
+judged differently — by *sustained* useful throughput and tail latency under
+a traffic mix.  This module owns that accounting so the service and the
+traffic benchmark report identical quantities:
+
+  latency      per-request wall seconds from admission to completion
+               (p50/p95/p99 — the tail is what queueing and padding cost);
+  gflops       useful flops only (864 x sites x chain depth per request,
+               the paper's flop model) over busy time (kernel walls) and
+               over total wall — padded slots are NOT credited;
+  occupancy    live fraction of dispatched batch slots — the price of warm
+               batch-size padding, averaged over dispatches;
+  queue depth  sampled at every admission and dispatch — the backpressure
+               signal admission control acts on.
+
+Everything exports as one flat dict (``snapshot()``) so benchmark rows,
+logs, and tests consume the same schema.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+FLOPS_PER_SITE = 864  # 4 links x 3x3x3 complex MACs x 8 real flops (paper §3.1)
+
+
+def request_flops(n_sites: int, k: int) -> float:
+    """Useful flops of one request: k chained multiplies over the lattice."""
+    return float(FLOPS_PER_SITE) * n_sites * k
+
+
+@dataclasses.dataclass
+class ServiceMetrics:
+    """Mutable counters; ``snapshot()`` is the exported read-only view."""
+
+    started_s: float = dataclasses.field(default_factory=time.perf_counter)
+    admitted: int = 0
+    rejected: int = 0
+    completed: int = 0
+    dispatches: int = 0
+    padded_slots: int = 0
+    live_slots: int = 0
+    busy_s: float = 0.0
+    useful_flops: float = 0.0
+    latencies_s: list = dataclasses.field(default_factory=list)
+    occupancies: list = dataclasses.field(default_factory=list)
+    queue_depths: list = dataclasses.field(default_factory=list)
+    compiles: int = 0  # cold (first-shape) dispatches, charged to busy_s too
+
+    def reset(self) -> None:
+        """Zero every counter and restart the wall clock (post-warmup)."""
+        self.__init__()
+
+    # -- recording -----------------------------------------------------------
+
+    def record_admit(self, queue_depth: int) -> None:
+        self.admitted += 1
+        self.queue_depths.append(queue_depth)
+
+    def record_reject(self) -> None:
+        self.rejected += 1
+
+    def record_dispatch(
+        self, *, live: int, padded: int, step_s: float, flops: float, cold: bool = False
+    ) -> None:
+        self.dispatches += 1
+        self.live_slots += live
+        self.padded_slots += padded - live
+        self.busy_s += step_s
+        self.useful_flops += flops
+        self.occupancies.append(live / padded if padded else 0.0)
+        if cold:
+            self.compiles += 1
+
+    def record_completion(self, latency_s: float) -> None:
+        self.completed += 1
+        self.latencies_s.append(latency_s)
+
+    def record_queue_depth(self, depth: int) -> None:
+        self.queue_depths.append(depth)
+
+    # -- export --------------------------------------------------------------
+
+    def _pct(self, q: float) -> float:
+        return float(np.percentile(self.latencies_s, q)) if self.latencies_s else 0.0
+
+    def snapshot(self) -> dict:
+        wall = time.perf_counter() - self.started_s
+        total_slots = self.live_slots + self.padded_slots
+        return {
+            "admitted": self.admitted,
+            "rejected": self.rejected,
+            "completed": self.completed,
+            "dispatches": self.dispatches,
+            "compiles": self.compiles,
+            "latency_p50_ms": round(self._pct(50) * 1e3, 3),
+            "latency_p95_ms": round(self._pct(95) * 1e3, 3),
+            "latency_p99_ms": round(self._pct(99) * 1e3, 3),
+            "latency_mean_ms": round(
+                float(np.mean(self.latencies_s)) * 1e3, 3
+            ) if self.latencies_s else 0.0,
+            "sustained_gflops_busy": round(
+                self.useful_flops / self.busy_s / 1e9, 3
+            ) if self.busy_s else 0.0,
+            "sustained_gflops_wall": round(
+                self.useful_flops / wall / 1e9, 3
+            ) if wall else 0.0,
+            "mean_batch_occupancy": round(
+                float(np.mean(self.occupancies)), 3
+            ) if self.occupancies else 0.0,
+            "mean_live_batch": round(
+                self.live_slots / self.dispatches, 3
+            ) if self.dispatches else 0.0,
+            "padded_slot_fraction": round(
+                self.padded_slots / total_slots, 3
+            ) if total_slots else 0.0,
+            "queue_depth_max": max(self.queue_depths) if self.queue_depths else 0,
+            "queue_depth_mean": round(
+                float(np.mean(self.queue_depths)), 3
+            ) if self.queue_depths else 0.0,
+            "busy_s": round(self.busy_s, 4),
+            "wall_s": round(wall, 4),
+        }

@@ -1,0 +1,293 @@
+"""SU3Service: the plan layer behind a traffic-handling front door.
+
+Composition (everything below the service already exists in the plan layer;
+the service adds the queueing discipline and the warm-pool policy):
+
+    submit(a, b, k)                      arun(a, b, k)  [asyncio face]
+          │                                   │
+          ▼                                   ▼
+    DynamicBatcher — (L, k) buckets, warm-size padding, admission control
+          │  next_batch()  one CoalescedBatch per step()
+          ▼
+    warm pool: {(L, dtype, layout, tile) -> BatchedLatticeRunner}
+          │  built through the persistent autotune cache: the FIRST request
+          │  for an (L, dtype) pays compile + tile/K sweep, every later
+          │  request (and every later process) hits the tuned warm plan
+          ▼
+    one vmapped, sharded, (optionally bf16-storage/f32-accumulate) dispatch
+          │
+          ▼
+    split + unpad per request  ->  results keyed by request id
+
+The chain depth ``k`` defaults to the autotuned fused depth for the request's
+(backend, L) — ``autotune.tuned_fused_k`` — so callers that don't care get
+the measured-best dispatch amortization instead of a hardcoded constant.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.core.su3.layouts import Layout
+from repro.core.su3.plan import BatchedLatticeRunner, EngineConfig
+from repro.serve.su3.batcher import BatcherConfig, DynamicBatcher, ServeRequest
+from repro.serve.su3.metrics import ServiceMetrics, request_flops
+
+DEFAULT_TILE = 128  # small enough that every L >= 2 bucket is a few tiles
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """The serving tuple: storage/compute dtypes, layout, tuning, batching."""
+
+    dtype: str = "float32"  # storage dtype of every plan in the pool
+    accum_dtype: str = ""  # "float32" + dtype="bfloat16" = bf16 serving plans
+    layout: Layout = Layout.SOA
+    autotune: bool = True  # build runner configs through the persistent cache
+    tile: int = 0  # explicit tile when autotune=False (0 = DEFAULT_TILE)
+    default_k: int = 0  # chain depth when a request leaves k unset; 0 = tuned
+    batcher: BatcherConfig = dataclasses.field(default_factory=BatcherConfig)
+    cache_directory: str | None = None  # autotune cache override (tests)
+
+    def __post_init__(self) -> None:
+        # the pool serves the planar Pallas kernel; AOS has no planar view,
+        # so reject it here instead of inside the first user request
+        if Layout(self.layout) not in (Layout.SOA, Layout.AOSOA):
+            raise ValueError(
+                f"serving pool requires a planar-view layout (soa/aosoa), "
+                f"got {Layout(self.layout).value!r}"
+            )
+        # best_config sweeps (and cache-keys) SoA plans only — applying its
+        # tile/fused_k to another layout would serve never-measured numbers
+        # under a mislabeled cache entry
+        if self.autotune and Layout(self.layout) != Layout.SOA:
+            raise ValueError(
+                "the autotune cache tunes SoA plans only; serve "
+                f"{Layout(self.layout).value!r} with autotune=False and an "
+                "explicit tile"
+            )
+
+
+class SU3Service:
+    """Dynamic-batching SU3 lattice serving over a warm ExecutionPlan pool."""
+
+    def __init__(self, cfg: ServiceConfig | None = None, mesh: Any = None):
+        self.cfg = cfg if cfg is not None else ServiceConfig()
+        self.mesh = mesh
+        self.batcher = DynamicBatcher(self.cfg.batcher)
+        self.metrics = ServiceMetrics()
+        self._pool: dict[tuple, BatchedLatticeRunner] = {}
+        self._ecfg: dict[int, EngineConfig] = {}  # L -> resolved plan tuple
+        self._tuned_k: dict[int, int] = {}
+        self._results: dict[int, jax.Array] = {}
+        self._awaited: set[int] = set()  # ids owned by pending arun callers
+        self._seen_shapes: set[tuple] = set()
+        self._next_id = 0
+
+    # -- warm pool -----------------------------------------------------------
+
+    def _engine_config(self, L: int) -> EngineConfig:
+        """Resolved plan tuple for L, memoized — the autotune path otherwise
+        re-reads the JSON cache file on every dispatch."""
+        if L not in self._ecfg:
+            cfg = self.cfg
+            if cfg.autotune:
+                self._ecfg[L] = autotune.tuned_engine_config(
+                    L=L, dtype=cfg.dtype, cache_directory=cfg.cache_directory,
+                    layout=cfg.layout, accum_dtype=cfg.accum_dtype,
+                )
+            else:
+                self._ecfg[L] = EngineConfig(
+                    L=L, dtype=cfg.dtype, layout=cfg.layout,
+                    tile=cfg.tile or DEFAULT_TILE, accum_dtype=cfg.accum_dtype,
+                )
+        return self._ecfg[L]
+
+    def runner_for(self, L: int) -> BatchedLatticeRunner:
+        """The warm runner for lattice size L (built + tuned on first use)."""
+        ecfg = self._engine_config(L)
+        key = (L, ecfg.dtype, ecfg.layout.value, ecfg.tile)
+        runner = self._pool.get(key)
+        if runner is None:
+            runner = BatchedLatticeRunner(ecfg, self.mesh)
+            self._pool[key] = runner
+        return runner
+
+    def pool_keys(self) -> list[tuple]:
+        return sorted(self._pool)
+
+    def default_k_for(self, L: int) -> int:
+        """Request chain depth when unspecified: configured or autotuned."""
+        if self.cfg.default_k:
+            return self.cfg.default_k
+        if not self.cfg.autotune:
+            return 1
+        if L not in self._tuned_k:
+            self._tuned_k[L] = autotune.tuned_fused_k(
+                L=L, dtype=self.cfg.dtype, accum_dtype=self.cfg.accum_dtype,
+                cache_directory=self.cfg.cache_directory,
+            )
+        return self._tuned_k[L]
+
+    def warm(self, Ls: tuple[int, ...], ks: tuple[int, ...] = (1,),
+             batch_sizes: tuple[int, ...] = ()) -> None:
+        """Pre-build runners (and optionally compile dispatch shapes).
+
+        Serving cold-start control: first-touch compiles happen here instead
+        of inside a user request's latency.
+        """
+        for L in Ls:
+            runner = self.runner_for(L)
+            n_sites = L**4
+            for bsz in batch_sizes:
+                a = jnp.zeros((bsz, n_sites, 4, 3, 3), jnp.complex64)
+                b = jnp.zeros((bsz, 4, 3, 3), jnp.complex64)
+                for k in ks:
+                    runner.multiply(a, b, k=k).block_until_ready()
+                    self._seen_shapes.add(self._shape_key(runner, L, k, bsz))
+
+    @staticmethod
+    def _shape_key(runner: BatchedLatticeRunner, L: int, k: int, bsz: int) -> tuple:
+        """Compiled-shape identity: the runner pads the batch up to a device
+        multiple, so that post-pad size — not the request count — is what
+        the jit cache keys on."""
+        return (L, k, bsz + (-bsz) % runner.n_devices)
+
+    # -- request intake ------------------------------------------------------
+
+    @staticmethod
+    def _infer_L(a: jax.Array) -> int:
+        n_sites = a.shape[0]
+        L = round(n_sites ** 0.25)
+        if L**4 != n_sites or a.shape[1:] != (4, 3, 3):
+            raise ValueError(
+                f"request lattice must be (L**4, 4, 3, 3) canonical complex, "
+                f"got {a.shape}"
+            )
+        return L
+
+    def submit(self, a: jax.Array, b: jax.Array, k: int | None = None) -> int | None:
+        """Queue one lattice multiply; returns a request id, or None when the
+        queue budget is exhausted (backpressure — caller retries later)."""
+        L = self._infer_L(a)
+        depth = len(self.batcher)
+        req = ServeRequest(
+            req_id=self._next_id, a=a, b=b, L=L,
+            k=k if k is not None else self.default_k_for(L),
+            arrival_s=time.perf_counter(),
+        )
+        if not self.batcher.submit(req):
+            self.metrics.record_reject()
+            return None
+        self._next_id += 1
+        self.metrics.record_admit(depth + 1)
+        return req.req_id
+
+    # -- dispatch ------------------------------------------------------------
+
+    def step(self) -> int:
+        """Dispatch ONE coalesced batch; returns completed request count.
+
+        Pads the batch to the warm size with zero lattices, runs the whole
+        bucket through one vmapped (fused-k) plan dispatch, then splits and
+        unpads results back per request id.
+        """
+        batch = self.batcher.next_batch()
+        if batch is None:
+            return 0
+        reqs = batch.requests
+        runner = self.runner_for(batch.L)
+        n_sites = batch.L**4
+        a = jnp.stack([r.a for r in reqs])
+        b = jnp.stack([r.b for r in reqs])
+        if batch.pad:
+            a = jnp.concatenate(
+                [a, jnp.zeros((batch.pad,) + a.shape[1:], a.dtype)], axis=0
+            )
+            b = jnp.concatenate(
+                [b, jnp.zeros((batch.pad,) + b.shape[1:], b.dtype)], axis=0
+            )
+        shape_key = self._shape_key(runner, batch.L, batch.k, batch.padded_size)
+        cold = shape_key not in self._seen_shapes
+        t0 = time.perf_counter()
+        c = runner.multiply(a, b, k=batch.k)
+        c.block_until_ready()
+        step_s = time.perf_counter() - t0
+        self._seen_shapes.add(shape_key)
+        self.metrics.record_dispatch(
+            live=len(reqs), padded=batch.padded_size, step_s=step_s,
+            flops=request_flops(n_sites, batch.k) * len(reqs), cold=cold,
+        )
+        done_s = time.perf_counter()
+        for i, r in enumerate(reqs):
+            self._results[r.req_id] = c[i]
+            self.metrics.record_completion(done_s - r.arrival_s)
+        self.metrics.record_queue_depth(len(self.batcher))
+        return len(reqs)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> int:
+        """Step until the queue empties; returns total completed requests."""
+        total = 0
+        for _ in range(max_steps):
+            done = self.step()
+            if done == 0:
+                return total
+            total += done
+        raise RuntimeError(f"queue not drained after {max_steps} steps")
+
+    # -- results -------------------------------------------------------------
+
+    def has_result(self, req_id: int) -> bool:
+        return req_id in self._results
+
+    def pop_result(self, req_id: int) -> jax.Array:
+        """The canonical complex C lattice for a completed request (once)."""
+        return self._results.pop(req_id)
+
+    def pop_ready(self) -> dict[int, jax.Array]:
+        """All completed results, cleared from the service (delivery drain).
+
+        A caller that steps the service itself (replay harnesses, pollers)
+        must drain results this way or via ``pop_result`` — undelivered C
+        lattices are device arrays and accumulate for the service lifetime.
+        Results owned by a pending :meth:`arun` coroutine are left in place;
+        only that coroutine delivers them.
+        """
+        if not self._awaited:
+            out, self._results = self._results, {}
+            return out
+        out = {rid: c for rid, c in self._results.items() if rid not in self._awaited}
+        for rid in out:
+            del self._results[rid]
+        return out
+
+    # -- asyncio face --------------------------------------------------------
+
+    async def arun(self, a: jax.Array, b: jax.Array, k: int | None = None) -> jax.Array:
+        """Submit and await one request from an asyncio front-end.
+
+        Concurrent ``arun`` coroutines submitted in the same scheduler tick
+        coalesce into one dispatch — whichever coroutine steps first serves
+        the whole bucket.  Backpressure surfaces as cooperative retry: a
+        rejected submit yields to the loop (letting other coroutines drain
+        the queue) and tries again.
+        """
+        req_id = self.submit(a, b, k)
+        while req_id is None:
+            await asyncio.sleep(0)
+            self.step()
+            req_id = self.submit(a, b, k)
+        self._awaited.add(req_id)  # shield from a concurrent pop_ready drain
+        try:
+            while not self.has_result(req_id):
+                await asyncio.sleep(0)
+                self.step()
+            return self.pop_result(req_id)
+        finally:
+            self._awaited.discard(req_id)

@@ -1,0 +1,56 @@
+"""scripts/bench_diff.py: row collection, floor semantics, regression gate."""
+import importlib.util
+import os
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_diff",
+    os.path.join(os.path.dirname(__file__), "..", "scripts", "bench_diff.py"),
+)
+bench_diff = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_diff)
+
+
+def _payload(rows_by_table):
+    return {"schema": "su3-bench-rows/v1", "tables": rows_by_table}
+
+
+def test_collect_rows_gathers_engine_and_serve_metrics():
+    payload = _payload({
+        "table2_variants": [
+            {"name": "row_a", "GFLOPS": 1.5},
+            {"name": "row_noise", "GFLOPS": 0.01},  # below engine floor
+            {"no_name": True, "GFLOPS": 9.9},
+        ],
+        "serve": [{"name": "serve_open_loop", "sustained_gflops_busy": 0.2}],
+        "table1_roofline": [{"name": "analytic", "bw_bound_gf": 141.8}],
+    })
+    rows = bench_diff.collect_rows(payload)
+    assert rows == {
+        ("table2_variants", "row_a"): 1.5,
+        ("serve", "serve_open_loop"): 0.2,
+    }
+    # current-side collection keeps sub-floor rows (collapse detection)
+    no_floor = bench_diff.collect_rows(payload, apply_floor=False)
+    assert no_floor[("table2_variants", "row_noise")] == 0.01
+
+
+def test_diff_flags_collapse_below_the_noise_floor():
+    baseline = _payload({"t": [{"name": "r", "GFLOPS": 2.0}]})
+    collapsed = _payload({"t": [{"name": "r", "GFLOPS": 0.03}]})  # ~98% drop
+    compared, regressions = bench_diff.diff(baseline, collapsed, 0.15)
+    assert len(compared) == 1 and len(regressions) == 1
+    assert regressions[0]["delta_pct"] < -90
+
+
+def test_diff_within_threshold_passes_and_noise_baseline_skipped():
+    baseline = _payload({"t": [
+        {"name": "steady", "GFLOPS": 1.0},
+        {"name": "noise", "GFLOPS": 0.01},  # sub-floor baseline: not gated
+    ]})
+    current = _payload({"t": [
+        {"name": "steady", "GFLOPS": 0.9},  # -10% < 15% threshold
+        {"name": "noise", "GFLOPS": 0.001},
+    ]})
+    compared, regressions = bench_diff.diff(baseline, current, 0.15)
+    assert [c["name"] for c in compared] == ["steady"]
+    assert regressions == []

@@ -6,7 +6,6 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import autotune
 from repro.core.su3 import layouts, plan, registry
 from repro.core.su3.engine import EngineConfig, SU3Engine
 from repro.core.su3.layouts import Layout
@@ -136,41 +135,46 @@ def test_batched_lattice_runner_fused_chain():
     np.testing.assert_allclose(np.asarray(fused), np.asarray(seq), rtol=1e-4, atol=1e-4)
 
 
-# -- persistent autotune cache ------------------------------------------------
+# -- mixed-precision (bf16-storage / f32-accumulate) plans ---------------------
+# (persistent autotune cache coverage lives in tests/test_autotune_cache.py)
 
 
-def test_best_config_roundtrips_through_cache(tmp_path, monkeypatch):
-    calls = {"n": 0}
-    real_sweep = autotune.tile_sweep
-
-    def counting_sweep(*a, **kw):
-        calls["n"] += 1
-        return [
-            {"tile": 128, "vmem_kib": 36, "fits_vmem": True,
-             "measured_gflops": 2.0, "verified": True},
-            {"tile": 4096, "vmem_kib": 1154, "fits_vmem": True,
-             "measured_gflops": 1.0, "verified": True},
-        ]
-
-    monkeypatch.setattr(autotune, "tile_sweep", counting_sweep)
-    first = autotune.best_config(L=4, cache_directory=str(tmp_path))
-    assert calls["n"] == 1
-    # measured winner, NOT the largest fitting tile
-    assert first["tile"] == 128 and first["cached"] is False
-    second = autotune.best_config(L=4, cache_directory=str(tmp_path))
-    assert calls["n"] == 1, "second call must do zero measurements"
-    assert second["tile"] == 128 and second["cached"] is True
-    # refresh forces a re-measure
-    autotune.best_config(L=4, cache_directory=str(tmp_path), refresh=True)
-    assert calls["n"] == 2
-    # tuned_engine_config flows the cached tuple into an EngineConfig
-    cfg = autotune.tuned_engine_config(L=4, cache_directory=str(tmp_path), iterations=1)
-    assert cfg.tile == 128 and cfg.variant == "pallas" and cfg.layout == Layout.SOA
-    assert calls["n"] == 2
-    autotune.tile_sweep = real_sweep  # belt-and-braces; monkeypatch also restores
+def test_bf16_accum_plan_matches_f32_and_verifies():
+    a = _random_lattice(jax.random.PRNGKey(11), 16)
+    b = _random_b(jax.random.PRNGKey(12))
+    p32 = plan.build_plan(EngineConfig(L=2, tile=16))
+    p16 = plan.build_plan(
+        EngineConfig(L=2, tile=16, dtype="bfloat16", accum_dtype="float32")
+    )
+    c32 = np.asarray(p32.codec.unpack(p32.step(p32.codec.pack(a), p32.codec.pack_b(b))))
+    c16 = np.asarray(p16.codec.unpack(p16.step(p16.codec.pack(a), p16.codec.pack_b(b))))
+    rel = np.max(np.abs(c16 - c32)) / np.max(np.abs(c32))
+    assert rel < 1e-2  # storage rounding only; the FMA chain accumulated in f32
+    # canonical verification + fused chain through the mixed plan
+    a_phys, b_p, _, _ = p16.init_data()
+    assert p16.verify(p16.step(a_phys, b_p))
+    assert p16.verify(p16.fused_step(3)(a_phys, b_p))
+    assert p16.cfg.is_mixed_precision and p16.cfg.word_bytes == 2
 
 
-def test_cache_key_identity():
-    k = autotune.cache_key(backend="tpu", device_kind="v5e", layout="soa",
-                           dtype="bfloat16", L=16, n_devices=4)
-    assert k == "tpu|v5e|soa|bfloat16|L16|d4"
+def test_mixed_precision_requires_kernel_accum_support():
+    name = "_planar_no_accum_test"
+    registry.register_kernel(
+        name, layouts=(Layout.SOA,), backends=("pallas",),
+        form=registry.PLANAR, supports_fused=True,
+    )(lambda a_p, b_p, **kw: a_p)
+    try:
+        with pytest.raises(ValueError, match="accumulate"):
+            plan.build_plan(EngineConfig(
+                L=2, tile=16, variant=name,
+                dtype="bfloat16", accum_dtype="float32",
+            ))
+    finally:
+        registry._KERNELS.pop(name, None)
+    # canonical kernels accumulate in f32 by construction: no error
+    p = plan.build_plan(EngineConfig(
+        L=2, tile=16, variant="versionX",
+        dtype="bfloat16", accum_dtype="float32",
+    ))
+    a_phys, b_p, _, _ = p.init_data()
+    assert p.verify(p.step(a_phys, b_p))

@@ -1,0 +1,280 @@
+"""Serving subsystem: dynamic batcher, SU3Service, metrics, bf16 plans."""
+import asyncio
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.core.su3.layouts import Layout
+from repro.kernels import ref
+from repro.serve.su3 import (
+    BatcherConfig,
+    DynamicBatcher,
+    ServeRequest,
+    ServiceConfig,
+    ServiceMetrics,
+    SU3Service,
+)
+
+S2 = 16  # L=2 lattice sites
+
+
+def _rand_a(seed, n_sites=S2):
+    a = jax.random.normal(jax.random.PRNGKey(seed), (n_sites, 4, 3, 3, 2))
+    return jax.lax.complex(a[..., 0], a[..., 1])
+
+
+def _rand_b(seed):
+    b = jax.random.normal(jax.random.PRNGKey(seed), (4, 3, 3, 2))
+    return jax.lax.complex(b[..., 0], b[..., 1])
+
+
+def _req(i, L=2, k=1, arrival=0.0):
+    return ServeRequest(req_id=i, a=None, b=None, L=L, k=k, arrival_s=arrival or i + 1.0)
+
+
+def _svc(**kw):
+    cfg = dict(autotune=False, tile=16)
+    cfg.update(kw)
+    return SU3Service(ServiceConfig(**cfg))
+
+
+# -- batcher -------------------------------------------------------------------
+
+
+def test_batcher_buckets_by_L_and_k():
+    b = DynamicBatcher(BatcherConfig(max_batch=8, warm_batch_sizes=(1, 2, 4, 8)))
+    for i, (L, k) in enumerate([(2, 1), (2, 2), (4, 1), (2, 1)]):
+        assert b.submit(_req(i, L=L, k=k))
+    assert len(b) == 4
+    assert b.bucket_depths() == {(2, 1): 2, (2, 2): 1, (4, 1): 1}
+    batch = b.next_batch()  # oldest head: req 0 in bucket (2, 1)
+    assert batch.key == (2, 1) and [r.req_id for r in batch.requests] == [0, 3]
+    assert len(b) == 2
+
+
+def test_batcher_oldest_bucket_first_no_starvation():
+    b = DynamicBatcher(BatcherConfig(max_batch=8, warm_batch_sizes=(1, 8)))
+    b.submit(_req(0, L=4, k=1, arrival=1.0))
+    b.submit(_req(1, L=2, k=1, arrival=2.0))
+    b.submit(_req(2, L=4, k=1, arrival=3.0))
+    assert b.next_batch().key == (4, 1)  # head req 0 is oldest
+    assert b.next_batch().key == (2, 1)  # now req 1 is oldest
+
+
+def test_batcher_pads_to_warm_size_and_reports_occupancy():
+    cfg = BatcherConfig(max_batch=8, warm_batch_sizes=(1, 2, 4, 8))
+    b = DynamicBatcher(cfg)
+    for i in range(3):
+        b.submit(_req(i))
+    batch = b.next_batch()
+    assert batch.padded_size == 4 and batch.pad == 1
+    assert batch.occupancy == pytest.approx(0.75)
+    assert cfg.padded_size(9) == 9  # past the largest warm size: exact
+
+
+def test_batcher_max_batch_caps_coalescing():
+    b = DynamicBatcher(BatcherConfig(max_batch=2, warm_batch_sizes=(1, 2)))
+    for i in range(5):
+        b.submit(_req(i))
+    sizes = []
+    while (batch := b.next_batch()) is not None:
+        sizes.append(len(batch.requests))
+    assert sizes == [2, 2, 1]
+
+
+def test_batcher_backpressure():
+    b = DynamicBatcher(BatcherConfig(max_queue_depth=2))
+    assert b.submit(_req(0)) and b.submit(_req(1))
+    assert not b.submit(_req(2))  # budget exhausted -> rejected
+    b.next_batch()
+    assert b.submit(_req(2))  # drained -> admits again
+
+
+def test_batcher_config_validation():
+    with pytest.raises(ValueError, match="max_batch"):
+        BatcherConfig(max_batch=0)
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        BatcherConfig(max_queue_depth=0)  # would reject every submit
+    with pytest.raises(ValueError, match="warm_batch_sizes"):
+        BatcherConfig(warm_batch_sizes=(4, 2))
+    with pytest.raises(ValueError, match="largest warm batch"):
+        BatcherConfig(max_batch=16, warm_batch_sizes=(1, 2, 4, 8))
+
+
+# -- service -------------------------------------------------------------------
+
+
+def test_service_results_match_reference_mixed_k():
+    svc = _svc()
+    reqs = []
+    for i, k in enumerate([1, 2, 1, 3]):
+        a, b = _rand_a(i), _rand_b(100 + i)
+        reqs.append((svc.submit(a, b, k=k), a, b, k))
+    assert svc.run_until_drained() == 4
+    for rid, a, b, k in reqs:
+        c = svc.pop_result(rid)
+        expect = a
+        for _ in range(k):
+            expect = ref.su3_mult_ref(expect, b)
+        np.testing.assert_allclose(
+            np.asarray(c), np.asarray(expect), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_service_coalesces_same_bucket_into_one_dispatch():
+    svc = _svc()
+    for i in range(4):
+        svc.submit(_rand_a(i), _rand_b(i), k=1)
+    svc.run_until_drained()
+    snap = svc.metrics.snapshot()
+    assert snap["dispatches"] == 1 and snap["mean_live_batch"] == 4.0
+    assert snap["completed"] == 4
+
+
+def test_service_backpressure_and_metrics():
+    svc = _svc(batcher=BatcherConfig(max_queue_depth=2))
+    a, b = _rand_a(0), _rand_b(0)
+    assert svc.submit(a, b, k=1) is not None
+    assert svc.submit(a, b, k=1) is not None
+    assert svc.submit(a, b, k=1) is None  # backpressure
+    svc.run_until_drained()
+    snap = svc.metrics.snapshot()
+    assert snap["rejected"] == 1 and snap["admitted"] == 2
+    assert snap["queue_depth_max"] == 2
+
+
+def test_service_rejects_malformed_lattice():
+    svc = _svc()
+    with pytest.raises(ValueError, match="canonical"):
+        svc.submit(jnp.zeros((17, 4, 3, 3), jnp.complex64), _rand_b(0))
+
+
+def test_service_config_rejects_non_planar_layout():
+    with pytest.raises(ValueError, match="planar"):
+        ServiceConfig(layout=Layout.AOS)
+    # the autotune cache only holds SoA-measured tuples
+    with pytest.raises(ValueError, match="SoA plans only"):
+        ServiceConfig(layout=Layout.AOSOA, autotune=True)
+    assert ServiceConfig(layout=Layout.AOSOA, autotune=False).layout == Layout.AOSOA
+
+
+def test_service_pop_ready_drains_all_results():
+    svc = _svc()
+    ids = [svc.submit(_rand_a(i), _rand_b(i), k=1) for i in range(3)]
+    svc.run_until_drained()
+    ready = svc.pop_ready()
+    assert sorted(ready) == sorted(ids)
+    assert svc.pop_ready() == {}  # drained: nothing retained
+    assert not any(svc.has_result(rid) for rid in ids)
+
+
+def test_pop_ready_leaves_awaited_results_for_arun():
+    """A poller draining via pop_ready must not steal an arun's result."""
+
+    async def go():
+        svc = _svc()
+        pending = asyncio.ensure_future(svc.arun(_rand_a(0), _rand_b(0), k=1))
+        drained = {}
+        for _ in range(50):
+            await asyncio.sleep(0)
+            svc.step()
+            drained.update(svc.pop_ready())
+            if pending.done():
+                break
+        return await pending, drained
+
+    c, drained = asyncio.run(go())
+    assert drained == {}  # the awaited result was delivered by arun, not stolen
+    np.testing.assert_allclose(
+        np.asarray(c), np.asarray(ref.su3_mult_ref(_rand_a(0), _rand_b(0))),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_service_warm_precompiles_shapes():
+    svc = _svc()
+    svc.warm((2,), ks=(1,), batch_sizes=(4,))
+    svc.metrics.reset()
+    for i in range(4):
+        svc.submit(_rand_a(i), _rand_b(i), k=1)
+    svc.run_until_drained()
+    assert svc.metrics.snapshot()["compiles"] == 0  # shape was warmed
+
+
+def test_service_bf16_storage_within_1e2_of_f32():
+    """The acceptance bar: bf16-storage/f32-accumulate vs the f32 path."""
+    f32, bf16 = _svc(), _svc(dtype="bfloat16", accum_dtype="float32")
+    pairs = [(_rand_a(i), _rand_b(50 + i)) for i in range(3)]
+    ids32 = [f32.submit(a, b, k=2) for a, b in pairs]
+    ids16 = [bf16.submit(a, b, k=2) for a, b in pairs]
+    f32.run_until_drained()
+    bf16.run_until_drained()
+    for i32, i16 in zip(ids32, ids16):
+        c32 = np.asarray(f32.pop_result(i32))
+        c16 = np.asarray(bf16.pop_result(i16))
+        rel = np.max(np.abs(c16 - c32)) / max(np.max(np.abs(c32)), 1.0)
+        assert rel < 1e-2
+    # the bf16 pool runs genuinely mixed-precision plans
+    plan16 = bf16.runner_for(2).plan
+    assert plan16.cfg.dtype == "bfloat16" and plan16.cfg.accum_dtype == "float32"
+    assert "+acc-float32" in plan16.describe()
+
+
+def test_bf16_plan_streams_fewer_hlo_bytes_than_f32():
+    f32 = autotune.hlo_bytes_for_variant("pallas", Layout.SOA, n_sites=256, tile=64)
+    bf16 = autotune.hlo_bytes_for_variant(
+        "pallas", Layout.SOA, n_sites=256, tile=64,
+        dtype="bfloat16", accum_dtype="float32",
+    )
+    assert bf16 < f32
+    # canonical variants show the clean 2x storage drop
+    xf32 = autotune.hlo_bytes_for_variant("versionX", Layout.SOA, n_sites=256, tile=64)
+    xbf16 = autotune.hlo_bytes_for_variant(
+        "versionX", Layout.SOA, n_sites=256, tile=64, dtype="bfloat16"
+    )
+    assert xbf16 < 0.92 * xf32
+
+
+def test_service_async_face_coalesces():
+    async def go():
+        svc = _svc()
+        outs = await asyncio.gather(
+            *[svc.arun(_rand_a(i), _rand_b(i), k=1) for i in range(4)]
+        )
+        return svc, outs
+
+    svc, outs = asyncio.run(go())
+    assert len(outs) == 4
+    assert svc.metrics.snapshot()["dispatches"] == 1  # one gather tick, one batch
+    for i, c in enumerate(outs):
+        np.testing.assert_allclose(
+            np.asarray(c), np.asarray(ref.su3_mult_ref(_rand_a(i), _rand_b(i))),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+# -- metrics -------------------------------------------------------------------
+
+
+def test_metrics_snapshot_schema_and_percentiles():
+    m = ServiceMetrics()
+    for depth in (1, 2, 3):
+        m.record_admit(depth)
+    m.record_dispatch(live=3, padded=4, step_s=0.5, flops=864e6 * 3)
+    for lat in (0.010, 0.020, 0.100):
+        m.record_completion(lat)
+    snap = m.snapshot()
+    assert snap["admitted"] == 3 and snap["completed"] == 3
+    assert snap["latency_p50_ms"] == pytest.approx(20.0)
+    assert snap["latency_p99_ms"] == pytest.approx(100.0, rel=0.05)
+    assert snap["mean_batch_occupancy"] == pytest.approx(0.75)
+    assert snap["padded_slot_fraction"] == pytest.approx(0.25)
+    assert snap["sustained_gflops_busy"] == pytest.approx(864e6 * 3 / 0.5 / 1e9)
+    assert snap["queue_depth_max"] == 3
+    m.reset()
+    empty = m.snapshot()
+    assert empty["completed"] == 0 and empty["latency_p99_ms"] == 0.0
