@@ -15,6 +15,15 @@ echo "== tier-1 suite =="
 python -m pytest -x -q
 
 if [[ "${1:-}" != "--no-bench" ]]; then
+  echo "== fig7 multi-controller dryrun (2 controllers, divergence gate) =="
+  # Two identical controller processes run the strong-scaling curve through
+  # the real (host, device) MeshSpec plan path; the launcher exits non-zero
+  # if any point's result lattice diverges from the single-host reference
+  # on any controller.
+  python -m repro.launch.dryrun --su3-fig7 \
+    --L 4 --device-counts 1,2 --hosts 2 --controllers 2 --iterations 1 \
+    > /dev/null
+
   echo "== quick benchmarks (BENCH_su3.json) =="
   python -m benchmarks.run --quick --json BENCH_su3.json
   echo "== bench diff vs last committed artifact (>15% GFLOPS drop fails) =="

@@ -2,6 +2,23 @@
 
 The container pins jax 0.4.x while the code targets current jax; every
 new-API touchpoint goes through here so call sites stay clean.
+
+Retirement ledger — each shim names the jax version that obsoletes it.
+Audited against the pinned container version (jax 0.4.37, 2026-07): none of
+the new APIs exist there (`jax.shard_map`, `jax.set_mesh`,
+`jax.sharding.use_mesh`, `jax.sharding.AxisType` are all absent), so every
+shim below is still live.  When the container pin crosses a shim's
+"obsolete at" version, delete the shim and inline the new API at its call
+sites (grep for ``compat.<name>``).
+
+Related shims that live OUTSIDE this module (same ledger discipline):
+
+* ``repro.launch.mesh._mk`` — omits ``axis_types`` on 0.4.x; obsolete at
+  jax >= 0.5.x (``jax.sharding.AxisType``).
+* ``repro.models.common.grad_safe_barrier`` — custom-vjp wrapper because
+  0.4.x ``jax.lax.optimization_barrier`` has no batching/transpose rules
+  under autodiff; obsolete once the pin reaches a jax where
+  ``optimization_barrier`` is differentiable (0.5.x line).
 """
 from __future__ import annotations
 
@@ -15,7 +32,12 @@ def shard_map(
     f: Callable, *, mesh: jax.sharding.Mesh, in_specs: Any, out_specs: Any,
     check_vma: bool = True,
 ) -> Callable:
-    """jax.shard_map (new) / jax.experimental.shard_map (0.4.x; check_rep)."""
+    """jax.shard_map (new) / jax.experimental.shard_map (0.4.x; check_rep).
+
+    Obsolete at: jax >= 0.6.0, where ``jax.shard_map`` is a top-level API
+    and the ``check_rep`` kwarg was renamed ``check_vma``.  On 0.4.x the
+    experimental module with the old kwarg spelling is the only path.
+    """
     if hasattr(jax, "shard_map"):
         return jax.shard_map(
             f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
@@ -28,8 +50,11 @@ def shard_map(
 def set_mesh(mesh: jax.sharding.Mesh):
     """jax.set_mesh (new) / sharding.use_mesh (mid) / no-op ctx (0.4.x).
 
-    On 0.4.x there is no ambient-mesh API; callers there always pass explicit
-    NamedShardings built from the same mesh, so a null context is equivalent.
+    Obsolete at: jax >= 0.7.0, where ``jax.set_mesh`` is the stable ambient-
+    mesh API (``jax.sharding.use_mesh`` covered the 0.5.x–0.6.x interim).
+    On 0.4.x there is no ambient-mesh API at all; callers there always pass
+    explicit NamedShardings built from the same mesh, so a null context is
+    equivalent.
     """
     if hasattr(jax, "set_mesh"):
         return jax.set_mesh(mesh)

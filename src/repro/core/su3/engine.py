@@ -95,9 +95,14 @@ class BenchResult:
 
 
 class SU3Engine:
-    """Paper-faithful benchmark runner over a compiled ExecutionPlan."""
+    """Paper-faithful benchmark runner over a compiled ExecutionPlan.
 
-    def __init__(self, cfg: EngineConfig, mesh: jax.sharding.Mesh | None = None):
+    ``mesh`` may be a concrete ``jax.sharding.Mesh``, a
+    ``repro.launch.mesh.MeshSpec`` (multi-host plans — how the fig7
+    multi-controller dryrun drives the engine), or None (1-D site mesh).
+    """
+
+    def __init__(self, cfg: EngineConfig, mesh: "jax.sharding.Mesh | Any" = None):
         self.plan = build_plan(cfg, mesh)
         self.cfg = cfg
         self.mesh = self.plan.mesh

@@ -217,14 +217,30 @@ class LayoutCodec:
 
     # -- sharding --------------------------------------------------------------
 
-    def site_spec(self) -> "jax.sharding.PartitionSpec":
-        """PartitionSpec sharding the site axis of the physical form."""
+    def site_spec(
+        self, site_axes: tuple[str, ...] = ("sites",)
+    ) -> "jax.sharding.PartitionSpec":
+        """PartitionSpec sharding the physical site axis over ``site_axes``.
+
+        Args:
+            site_axes: mesh axis names the site dimension shards over, major
+                first — ``("sites",)`` on the legacy 1-D mesh,
+                ``("hosts", "devices")`` on a (host, device) mesh (see
+                ``repro.distributed.sharding.lattice_site_axes``).
+
+        Returns:
+            The layout's PartitionSpec with every non-site dimension
+            replicated: ``(sites, 80)`` for AOS, ``(2, 36, S)`` for SOA
+            (site axis last), ``(tiles, 2, 36, lane)`` for AoSoA (the tile
+            axis is the site axis).
+        """
         P = jax.sharding.PartitionSpec
+        ax = site_axes if len(site_axes) > 1 else site_axes[0]
         if self.layout == Layout.AOS:
-            return P("sites", None)  # (sites, 80)
+            return P(ax, None)  # (sites, 80)
         if self.layout == Layout.SOA:
-            return P(None, None, "sites")  # (2, 36, S)
-        return P("sites", None, None, None)  # (tiles, 2, 36, lane)
+            return P(None, None, ax)  # (2, 36, S)
+        return P(ax, None, None, None)  # (tiles, 2, 36, lane)
 
     # -- the Pallas kernel's planar view --------------------------------------
 

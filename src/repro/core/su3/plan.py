@@ -45,6 +45,23 @@ The three policies reproduce the paper's §4 NUMA/first-touch study:
 first-touches its own shard), ``host_scatter`` materializes on one device and
 redistributes (the UPI-storm analog, timed separately), ``replicated`` gives
 every device the full lattice.
+
+Multi-host meshes
+-----------------
+``build_plan`` accepts a :class:`repro.launch.mesh.MeshSpec` (or a concrete
+2-D mesh with ``("hosts", "devices")`` axes) in place of the legacy 1-D site
+mesh.  The site dimension then shards host-major over BOTH axes (rules in
+``repro.distributed.sharding``), so every host owns one contiguous slab of
+sites, and:
+
+* ``sharded`` placement materializes each host's slab *on that host* via
+  ``jax.make_array_from_callback`` — the fleet-scale form of the paper's
+  NUMA-aware object creation (no host ever touches another host's sites);
+* ``step`` / ``fused_step`` jit with the same sharding as ``out_shardings``,
+  so the K-chained multiply never leaves the devices that hold the shard —
+  the chain is device-local end to end (the multiply is site-local; the halo
+  model in ``distributed.sharding.halo_spec`` prices what a stencil kernel
+  would add).
 """
 from __future__ import annotations
 
@@ -61,7 +78,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.su3 import layouts, registry
 from repro.core.su3 import variants as _variants  # noqa: F401  (registers XLA kernels)
 from repro.core.su3.layouts import Layout, LatticeShape, LayoutCodec
+from repro.distributed import sharding as dist_sharding
 from repro.kernels import ops as _kops  # noqa: F401  (registers the Pallas kernel)
+from repro.launch.mesh import MeshSpec
 
 PLACEMENTS = ("sharded", "host_scatter", "replicated")
 
@@ -108,11 +127,108 @@ def make_site_mesh(devices: list[jax.Device] | None = None) -> jax.sharding.Mesh
     return jax.sharding.Mesh(np.array(devices), ("sites",))
 
 
+def resolve_mesh(
+    mesh: jax.sharding.Mesh | MeshSpec | None,
+) -> jax.sharding.Mesh:
+    """Normalize a plan's mesh argument to a concrete ``jax.sharding.Mesh``.
+
+    Args:
+        mesh: ``None`` (legacy 1-D site mesh over all devices), a concrete
+            mesh (used as-is), or a :class:`~repro.launch.mesh.MeshSpec`
+            (resolved to its (host, device) mesh).
+    """
+    if mesh is None:
+        return make_site_mesh()
+    if isinstance(mesh, MeshSpec):
+        return mesh.resolve()
+    return mesh
+
+
 def init_canonical(n_sites: int) -> tuple[jax.Array, jax.Array]:
     """su3_bench's make_lattice/init_link: A entries (1,0), B entries (1/3,0)."""
     a = jnp.full((n_sites, layouts.LINKS, layouts.SU3, layouts.SU3), 1.0 + 0.0j, jnp.complex64)
     b = jnp.full((layouts.LINKS, layouts.SU3, layouts.SU3), (1.0 / 3.0) + 0.0j, jnp.complex64)
     return a, b
+
+
+# -- per-host first-touch init (multi-host sharded placement) -----------------
+#
+# The canonical benchmark lattice is uniform, so a shard's physical values can
+# be built directly in host memory without ever materializing the global
+# array: each host constructs exactly its slab (numpy, host-local — the
+# "first touch") and jax assembles the global array from the per-shard
+# pieces.  Only AOS carries site-position-dependent words (the metadata
+# block), which is offset to global ids so the result is bit-identical to the
+# single-host jit initializer.
+
+_SITE_DIM = {Layout.AOS: 0, Layout.SOA: 2, Layout.AOSOA: 0}  # phys site axis
+
+
+def _uniform_phys_shard(
+    codec: LayoutCodec, n_sites: int, site_offset: int
+) -> np.ndarray:
+    """The packed physical form of ``n_sites`` canonical A=(1,0) sites.
+
+    ``site_offset`` is the shard's global first-site id (AOS metadata words
+    carry global ids; the gauge field is position-independent).
+    """
+    wdt = np.dtype(codec.word_dtype)
+    if codec.layout == Layout.AOS:
+        out = np.zeros((n_sites, layouts.SITE_WORDS_AOS), np.float32)
+        out[:, 0:layouts.GAUGE_WORDS:2] = 1.0  # re words; im words stay 0
+        idx = np.arange(site_offset, site_offset + n_sites, dtype=np.float32)
+        for col in range(5):  # x, y, z, t, index — pack_aos carries idx in all
+            out[:, layouts.GAUGE_WORDS + col] = idx
+        out[:, layouts.GAUGE_WORDS + 5] = idx % 2  # parity
+        return out.astype(wdt)
+    if codec.layout == Layout.SOA:
+        out = np.zeros((2, layouts.PLANAR_ROWS, n_sites), np.float32)
+        out[0] = 1.0  # re plane
+        return out.astype(wdt)
+    n_tiles = n_sites // codec.tile
+    out = np.zeros((n_tiles, 2, layouts.PLANAR_ROWS, codec.tile), np.float32)
+    out[:, 0] = 1.0
+    return out.astype(wdt)
+
+
+def first_touch_init(
+    codec: LayoutCodec, sharding: NamedSharding, padded_sites: int
+) -> jax.Array:
+    """Materialize the canonical lattice shard-by-shard, each on its owner.
+
+    Every addressable shard is built host-locally (numpy) and placed on the
+    device that owns it — no global array, no cross-host transfer, no
+    redistribution.  This is the multi-host analogue of the paper's
+    first-touch fix: in a real multi-controller run each process executes the
+    callback only for its own shards.
+
+    Args:
+        codec: the plan's layout codec (decides the physical form).
+        sharding: the plan's lattice NamedSharding (site axis over the mesh).
+        padded_sites: global site count, already padded to the mesh.
+
+    Returns:
+        The global physical A array, sharded per ``sharding``, bit-identical
+        to ``jit(pack ∘ init_canonical, out_shardings=sharding)()``.
+    """
+    aval = jax.eval_shape(
+        codec.pack,
+        jax.ShapeDtypeStruct(
+            (padded_sites, layouts.LINKS, layouts.SU3, layouts.SU3), jnp.complex64
+        ),
+    )
+    site_dim = _SITE_DIM[codec.layout]
+    sites_per_index = codec.tile if codec.layout == Layout.AOSOA else 1
+
+    def build_shard(index: tuple[slice, ...] | None) -> np.ndarray:
+        sl = (index or (slice(None),) * len(aval.shape))[site_dim]
+        lo = sl.start or 0
+        hi = sl.stop if sl.stop is not None else aval.shape[site_dim]
+        return _uniform_phys_shard(
+            codec, (hi - lo) * sites_per_index, lo * sites_per_index
+        )
+
+    return jax.make_array_from_callback(aval.shape, sharding, build_shard)
 
 
 def make_raw_step(
@@ -182,12 +298,29 @@ class ExecutionPlan:
 
     Construct via :func:`build_plan` (or ``ExecutionPlan.build``) — the single
     construction site for every layout x variant x placement combination.
+
+    Attributes:
+        codec: :class:`~repro.core.su3.layouts.LayoutCodec` — canonical
+            (S, 4, 3, 3) complex <-> physical layout conversions.
+        kernel: the resolved :class:`~repro.core.su3.registry.KernelEntry`.
+        mesh: the concrete mesh; 1-D ``("sites",)`` or 2-D
+            ``("hosts", "devices")``.
+        site_axes: mesh axes the site dimension shards over (host-major).
+        is_multi_host: mesh carries a host axis of size > 1.
+        padded_sites: global site count padded so every device shard is a
+            whole number of Pallas tiles.
+        sharding / replicated: the lattice / scalar NamedShardings.
+        step: jitted ``(a_phys, b_planar) -> c_phys`` — ONE dispatch, output
+            sharded like the input (the chain stays device-local).
     """
 
-    def __init__(self, cfg: EngineConfig, mesh: jax.sharding.Mesh):
+    def __init__(self, cfg: EngineConfig, mesh: jax.sharding.Mesh | MeshSpec):
         self.cfg = cfg
+        mesh = resolve_mesh(mesh)
         self.mesh = mesh
         self.n_devices = int(mesh.devices.size)
+        self.site_axes = dist_sharding.lattice_site_axes(mesh)
+        self.is_multi_host = dist_sharding.lattice_is_multi_host(mesh)
         if cfg.placement not in PLACEMENTS:
             raise ValueError(f"unknown placement {cfg.placement!r}; one of {PLACEMENTS}")
         self.codec = layouts.make_codec(
@@ -198,15 +331,33 @@ class ExecutionPlan:
         n = cfg.shape.n_sites
         chunk = self.n_devices * cfg.tile
         self.padded_sites = ((n + chunk - 1) // chunk) * chunk
-        self.sharding = NamedSharding(mesh, self.codec.site_spec())
+        self.sharding = NamedSharding(
+            mesh, dist_sharding.lattice_site_spec(self.codec, mesh)
+        )
         self.replicated = NamedSharding(mesh, P())
         self.raw_step = make_raw_step(self.codec, self.kernel, tile=cfg.tile)
         self.step = jax.jit(self.raw_step, out_shardings=self.sharding, donate_argnums=())
         self._fused_steps: dict[int, Callable[[jax.Array, jax.Array], jax.Array]] = {}
 
     @classmethod
-    def build(cls, cfg: EngineConfig, mesh: jax.sharding.Mesh | None = None) -> "ExecutionPlan":
-        return cls(cfg, mesh if mesh is not None else make_site_mesh())
+    def build(
+        cls, cfg: EngineConfig, mesh: jax.sharding.Mesh | MeshSpec | None = None
+    ) -> "ExecutionPlan":
+        return cls(cfg, resolve_mesh(mesh))
+
+    @property
+    def n_hosts(self) -> int:
+        """Host-axis size of the mesh (1 on the legacy 1-D site mesh)."""
+        if dist_sharding.LATTICE_HOST_AXIS in self.mesh.axis_names:
+            return int(self.mesh.shape[dist_sharding.LATTICE_HOST_AXIS])
+        return 1
+
+    def halo(self) -> dist_sharding.HaloSpec:
+        """Boundary geometry of this plan's per-host shards (see
+        :func:`repro.distributed.sharding.halo_spec`); n_shards = n_hosts."""
+        return dist_sharding.HaloSpec(
+            L=self.cfg.L, n_shards=self.n_hosts, word_bytes=self.cfg.word_bytes
+        )
 
     # -- fused multi-iteration stepping ---------------------------------------
 
@@ -235,7 +386,20 @@ class ExecutionPlan:
     # -- placement policies ----------------------------------------------------
 
     def init_data(self) -> tuple[jax.Array, jax.Array, float, float]:
-        """Returns (a_phys, b_planar, init_seconds, scatter_seconds)."""
+        """Build the benchmark lattice under the plan's placement policy.
+
+        Returns:
+            ``(a_phys, b_planar, init_seconds, scatter_seconds)`` — the
+            physical A lattice (sharded per the policy), the replicated
+            planar B ``(2, 36)``, wall seconds of initialization, and the
+            redistribution seconds (``host_scatter`` only; 0.0 otherwise).
+
+        On a multi-host mesh the ``sharded`` policy goes through
+        :func:`first_touch_init`: each host materializes only its contiguous
+        site slab, host-locally — the fleet form of the paper's NUMA-aware
+        object creation.  Single-host meshes keep the jit-with-sharded-
+        outputs form (same result, bit-identical).
+        """
         cfg = self.cfg
 
         def build() -> jax.Array:
@@ -248,9 +412,15 @@ class ExecutionPlan:
         t0 = time.perf_counter()
         scatter_s = 0.0
         if cfg.placement == "sharded":
-            # Paper's fix: jit the initializer with sharded outputs — every
-            # device first-touches exactly its shard.
-            a_phys = jax.jit(build, out_shardings=self.sharding)()
+            if self.is_multi_host:
+                # Fleet form of the paper's fix: each host builds exactly its
+                # slab of sites in host memory and places it on its own
+                # devices — no global materialization, no redistribution.
+                a_phys = first_touch_init(self.codec, self.sharding, self.padded_sites)
+            else:
+                # Paper's fix: jit the initializer with sharded outputs —
+                # every device first-touches exactly its shard.
+                a_phys = jax.jit(build, out_shardings=self.sharding)()
             a_phys.block_until_ready()
         elif cfg.placement == "host_scatter":
             # Failure mode: materialize on one device, then redistribute.
@@ -282,17 +452,35 @@ class ExecutionPlan:
         )
 
     def describe(self) -> str:
-        """Compact plan identity for benchmark rows / logs."""
+        """Compact plan identity for benchmark rows / logs.
+
+        Single-host strings are unchanged from the 1-D-mesh era (bench rows
+        stay comparable); multi-host plans append the host count.
+        """
         c = self.cfg
         acc = f"+acc-{c.accum_dtype}" if c.is_mixed_precision else ""
+        hosts = f"x{self.n_hosts}h" if self.is_multi_host else ""
         return (
             f"{c.layout.value}/{c.variant}/t{c.tile}/{c.placement}"
-            f"@{self.n_devices}dev/{c.dtype}{acc}"
+            f"@{self.n_devices}dev{hosts}/{c.dtype}{acc}"
         )
 
 
-def build_plan(cfg: EngineConfig, mesh: jax.sharding.Mesh | None = None) -> ExecutionPlan:
-    """THE construction site: config tuple -> compiled ExecutionPlan."""
+def build_plan(
+    cfg: EngineConfig, mesh: jax.sharding.Mesh | MeshSpec | None = None
+) -> ExecutionPlan:
+    """THE construction site: config tuple -> compiled ExecutionPlan.
+
+    Args:
+        cfg: the tunable tuple (layout, variant, tile, placement, dtypes, L).
+        mesh: ``None`` (1-D site mesh over every local device), a concrete
+            ``jax.sharding.Mesh``, or a :class:`~repro.launch.mesh.MeshSpec`
+            describing a (host, device) topology.
+
+    Returns:
+        A compiled :class:`ExecutionPlan` whose ``step`` / ``fused_step(k)``
+        dispatch with the lattice sharded over the mesh's site axes.
+    """
     return ExecutionPlan.build(cfg, mesh)
 
 
@@ -305,15 +493,24 @@ class BatchedLatticeRunner:
     dispatch — no per-request compilation or per-layout wiring.
 
     Batches that do not divide the device count are zero-padded and sliced.
+
+    On a (host, device) mesh the *batch* axis shards over the same site axes
+    (whole lattices per device, host-major) — one host's requests stay on
+    that host's devices, which is what the serving layer's locality routing
+    relies on.
     """
 
-    def __init__(self, cfg: EngineConfig, mesh: jax.sharding.Mesh | None = None):
+    def __init__(
+        self, cfg: EngineConfig, mesh: jax.sharding.Mesh | MeshSpec | None = None
+    ):
         self.plan = build_plan(cfg, mesh)
         self.cfg = cfg
         self.mesh = self.plan.mesh
         self.n_devices = self.plan.n_devices
         phys_ndim = 1 + {"aos": 2, "soa": 3, "aosoa": 4}[cfg.layout.value]
-        batch_spec = P(*(("sites",) + (None,) * (phys_ndim - 1)))
+        axes = self.plan.site_axes
+        batch_axis = axes if len(axes) > 1 else axes[0]
+        batch_spec = P(*((batch_axis,) + (None,) * (phys_ndim - 1)))
         self._sharding = NamedSharding(self.mesh, batch_spec)
         self._steps: dict[int, Callable[[jax.Array, jax.Array], jax.Array]] = {}
 

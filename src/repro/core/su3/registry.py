@@ -39,6 +39,24 @@ PLANAR = "planar"
 
 @dataclasses.dataclass(frozen=True)
 class KernelEntry:
+    """One registered SU3 kernel plus the metadata a plan validates against.
+
+    Attributes:
+        name: registry key (``EngineConfig.variant``).
+        fn: the kernel callable.  Canonical form:
+            ``fn(a, b) -> c`` with ``a/c: (S, 4, 3, 3)`` complex64 and
+            ``b: (4, 3, 3)`` complex64.  Planar form:
+            ``fn(a_p, b_p, *, tile, k_iters, alias, interpret?,
+            accum_dtype?) -> c_p`` with ``a_p/c_p: (2, 36, S)`` and
+            ``b_p: (2, 36)`` real words in the storage dtype.
+        layouts: physical layouts the kernel can be planned with.
+        backends: ``"xla"`` / ``"pallas"`` — what lowers the body.
+        form: ``"canonical"`` or ``"planar"`` (module constants).
+        supports_fused: fn accepts ``k_iters`` and chains K multiplies in
+            one dispatch.
+        supports_accum: fn accepts ``accum_dtype`` (planar mixed-precision).
+    """
+
     name: str
     fn: Callable
     layouts: tuple[Layout, ...]
@@ -48,6 +66,8 @@ class KernelEntry:
     supports_accum: bool = False
 
     def supports_layout(self, layout: Layout) -> bool:
+        """Whether this kernel can be planned with ``layout`` (accepts the
+        enum or its string value)."""
         return Layout(layout) in self.layouts
 
     def supports_accum_dtype(self) -> bool:
@@ -68,7 +88,22 @@ def register_kernel(
     supports_fused: bool = False,
     supports_accum: bool = False,
 ) -> Callable[[Callable], Callable]:
-    """Decorator registering ``fn`` as kernel ``name``. Returns fn unchanged."""
+    """Decorator registering ``fn`` as kernel ``name``; returns fn unchanged.
+
+    Args:
+        name: registry key; later registrations under the same name replace
+            earlier ones (tests use this for stand-ins).
+        layouts: physical layouts the kernel accepts (default: all three).
+        backends: lowering backends (``"xla"`` and/or ``"pallas"``).
+        form: ``CANONICAL`` (codec-wrapped complex) or ``PLANAR`` (direct
+            planar view) — see :class:`KernelEntry` for the fn signatures.
+        supports_fused: fn accepts ``k_iters`` (in-kernel chained multiply).
+        supports_accum: fn accepts ``accum_dtype`` (planar kernels that own
+            their upcast; canonical kernels get mixed precision for free).
+
+    Raises:
+        ValueError: on an unknown ``form``.
+    """
     if form not in (CANONICAL, PLANAR):
         raise ValueError(f"unknown kernel form {form!r}")
 
@@ -88,6 +123,11 @@ def register_kernel(
 
 
 def get_kernel(name: str) -> KernelEntry:
+    """The registered entry for ``name``.
+
+    Raises:
+        KeyError: naming the known kernels, when ``name`` is unregistered.
+    """
     try:
         return _KERNELS[name]
     except KeyError:
@@ -99,6 +139,13 @@ def get_kernel(name: str) -> KernelEntry:
 def kernel_names(
     *, backend: str | None = None, layout: Layout | None = None, form: str | None = None
 ) -> list[str]:
+    """Sorted registered kernel names, optionally filtered.
+
+    Args:
+        backend: keep kernels lowered by this backend (``"xla"``/``"pallas"``).
+        layout: keep kernels plannable with this physical layout.
+        form: keep kernels of this form (``CANONICAL``/``PLANAR``).
+    """
     out = []
     for name, entry in _KERNELS.items():
         if backend is not None and backend not in entry.backends:

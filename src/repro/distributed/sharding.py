@@ -1,4 +1,5 @@
-"""Logical-axis sharding resolver: DP / FSDP / TP / EP / SP as rules.
+"""Logical-axis sharding resolver: DP / FSDP / TP / EP / SP as rules — plus
+the SU3 lattice's site/halo sharding rules.
 
 Every param carries logical axis names (models.common.ParamSpec); this module
 maps them onto mesh axes with divisibility fallbacks — a dim that does not
@@ -9,6 +10,17 @@ This is the paper's placement lesson at datacenter scale: *every* array in
 the system (params, optimizer moments, activations, KV caches, SSM states)
 has an explicit placement decided here — nothing is ever "first-touched"
 onto the wrong device and silently redistributed.
+
+The lattice section at the bottom (``lattice_site_axes`` /
+``lattice_site_spec`` / ``host_site_ranges`` / ``halo_spec``) is the same
+lesson for the SU3 mesh: the site dimension shards host-major over the
+(host, device) mesh so each host owns one contiguous site block, and the
+halo model quantifies what a *stencil* kernel (Dslash-style neighbor access,
+arXiv:1411.2087) would have to exchange across those block boundaries.  The
+su3_bench multiply itself is site-local — no halo traffic moves today — but
+the boundary geometry is what makes routing-by-locality and the (future)
+stencil kernels priceable, so it is a first-class rule here rather than
+folklore.
 """
 from __future__ import annotations
 
@@ -215,3 +227,156 @@ def state_shardings(
             )
         )
     return jax.tree_util.tree_unflatten(jax.tree.structure(state_spec_tree), out)
+
+
+# ---------------------------------------------------------------------------
+# SU3 lattice: site sharding over (host, device) meshes + halo/boundary rules
+# ---------------------------------------------------------------------------
+
+# Imported lazily-by-name to keep this module importable without the SU3
+# stack; the constants are small and stable.
+LATTICE_SITE_AXIS = "sites"  # legacy 1-D mesh axis
+LATTICE_HOST_AXIS = "hosts"
+LATTICE_DEVICE_AXIS = "devices"
+
+_GAUGE_WORDS_PER_SITE = 72  # 4 links x 3x3 complex = 36 c64 entries = 72 words
+
+
+def lattice_site_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The mesh axes the lattice site dimension shards over, in major order.
+
+    * legacy 1-D mesh      -> ``("sites",)``
+    * (host, device) mesh  -> ``("hosts", "devices")`` — host-major, so one
+      host's sites are contiguous (the invariant first-touch init and the
+      halo model below rely on)
+    * anything else        -> every mesh axis, in mesh order (an explicit
+      choice: an SU3 plan handed a foreign mesh flattens it).
+    """
+    names = tuple(mesh.axis_names)
+    if LATTICE_SITE_AXIS in names:
+        return (LATTICE_SITE_AXIS,)
+    if LATTICE_HOST_AXIS in names and LATTICE_DEVICE_AXIS in names:
+        return (LATTICE_HOST_AXIS, LATTICE_DEVICE_AXIS)
+    return names
+
+
+def lattice_site_spec(codec: Any, mesh: Mesh) -> P:
+    """PartitionSpec sharding ``codec``'s physical site axis over ``mesh``.
+
+    Args:
+        codec: a ``repro.core.su3.layouts.LayoutCodec`` (anything with a
+            ``site_spec(site_axes)`` method).
+        mesh: 1-D site mesh or (host, device) mesh.
+
+    Returns:
+        The codec's physical-layout PartitionSpec with the site dimension
+        assigned to :func:`lattice_site_axes`.
+    """
+    return codec.site_spec(lattice_site_axes(mesh))
+
+
+def lattice_is_multi_host(mesh: Mesh) -> bool:
+    """True when ``mesh`` carries a host axis of size > 1."""
+    return (
+        LATTICE_HOST_AXIS in mesh.axis_names
+        and int(mesh.shape[LATTICE_HOST_AXIS]) > 1
+    )
+
+
+def host_site_ranges(n_sites: int, mesh: Mesh) -> list[tuple[int, int]]:
+    """Per-host contiguous site ranges ``[(lo, hi), ...]`` under the lattice
+    sharding.
+
+    ``n_sites`` must divide evenly over the host axis (plans pad the lattice
+    to a whole number of per-device tiles, which guarantees it).  On a 1-D /
+    single-host mesh this is one range covering everything.
+    """
+    hosts = (
+        int(mesh.shape[LATTICE_HOST_AXIS])
+        if LATTICE_HOST_AXIS in mesh.axis_names
+        else 1
+    )
+    if n_sites % hosts:
+        raise ValueError(
+            f"{n_sites} sites do not divide over {hosts} hosts; pad the "
+            f"lattice (plans do this) before asking for host ranges"
+        )
+    per = n_sites // hosts
+    return [(h * per, (h + 1) * per) for h in range(hosts)]
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloSpec:
+    """Boundary geometry of one host's lattice shard.
+
+    The L^4 lattice is sharded along the outermost (t) dimension, so a host
+    shard of ``sites_per_host`` sites is a slab of ``sites_per_host / L**3``
+    t-slices; its boundary toward each neighbor is one L^3 face.  A stencil
+    kernel with nearest-neighbor access (Dslash-like) exchanges both faces
+    per application — that is the halo traffic priced here.  The su3_bench
+    multiply is site-local and moves none of it; the spec exists so routing
+    and future stencil plans can reason about the boundary *before* any
+    kernel is written (the paper's measure-the-napkin-first method).
+
+    Attributes:
+        L: lattice extent (the lattice is L^4 sites).
+        n_shards: how many contiguous site slabs the lattice splits into
+            (the mesh's host-axis size).
+        word_bytes: storage word width (4 = f32, 2 = bf16 storage plans).
+    """
+
+    L: int
+    n_shards: int
+    word_bytes: int = 4
+
+    @property
+    def sites_per_shard(self) -> int:
+        return self.L**4 // self.n_shards
+
+    @property
+    def face_sites(self) -> int:
+        """Sites in one boundary face of a slab (an L^3 time-slice)."""
+        return self.L**3
+
+    @property
+    def boundary_sites(self) -> int:
+        """Sites on a shard's surface: two faces (periodic lattice), or zero
+        when the lattice is unsharded."""
+        return 0 if self.n_shards == 1 else 2 * self.face_sites
+
+    @property
+    def interior_fraction(self) -> float:
+        """Fraction of a shard's sites that touch no boundary — the locality
+        argument for routing work to the host that holds the shard."""
+        if self.sites_per_shard == 0:
+            return 0.0
+        return max(0.0, 1.0 - self.boundary_sites / self.sites_per_shard)
+
+    @property
+    def halo_bytes_per_exchange(self) -> int:
+        """Bytes one shard sends per stencil application: gauge field of both
+        faces at storage width (72 words/site — metadata never travels)."""
+        return self.boundary_sites * _GAUGE_WORDS_PER_SITE * self.word_bytes
+
+    def as_dict(self) -> dict[str, Any]:
+        return {
+            "L": self.L,
+            "n_shards": self.n_shards,
+            "sites_per_shard": self.sites_per_shard,
+            "boundary_sites": self.boundary_sites,
+            "interior_fraction": round(self.interior_fraction, 4),
+            "halo_bytes_per_exchange": self.halo_bytes_per_exchange,
+        }
+
+
+def halo_spec(L: int, mesh: Mesh, word_bytes: int = 4) -> HaloSpec:
+    """The halo/boundary spec of an L^4 lattice sharded over ``mesh``'s host
+    axis (n_shards=1 on single-host meshes: no boundary, no halo)."""
+    hosts = (
+        int(mesh.shape[LATTICE_HOST_AXIS])
+        if LATTICE_HOST_AXIS in mesh.axis_names
+        else 1
+    )
+    if L**4 % hosts:
+        raise ValueError(f"L={L} lattice does not shard over {hosts} hosts")
+    return HaloSpec(L=L, n_shards=hosts, word_bytes=word_bytes)

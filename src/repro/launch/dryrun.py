@@ -10,13 +10,28 @@ os.environ["XLA_FLAGS"] = os.environ.get("REPRO_XLA_FLAGS", "--xla_force_host_pl
 #     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
 #     PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single  # 40 cells
 #
+# SU3 fig7 multi-controller dry-run: ONE launch, N identical controller
+# processes, each running the full strong-scaling curve through the real
+# (host, device) MeshSpec plan path over forced host-platform devices; the
+# launcher fails on any divergence between controllers or from the d1
+# single-host reference.  (jaxlib's CPU backend cannot run cross-process
+# computations, so the controllers are replicas of the same SPMD program —
+# the multi-controller *protocol* under simulation, byte-checked.)
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun --su3-fig7 \
+#         --L 4 --device-counts 1,2 --hosts 2 --controllers 2
+#
 # (Module docstring sacrificed to keep the XLA_FLAGS lines first, per the
 # dry-run contract; `from __future__` must follow a docstring if present.)
 
 import argparse
 import dataclasses
+import hashlib
 import json
 import pathlib
+import subprocess
+import sys
+import tempfile
 import time
 from typing import Any
 
@@ -328,6 +343,173 @@ def run_cell(
     return out
 
 
+# ---------------------------------------------------------------------------
+# SU3 fig7: strong scaling as ONE multi-controller dry-run launch
+# ---------------------------------------------------------------------------
+
+
+def _su3_result_digest(plan, seed: int) -> str:
+    """sha256 of the canonical C lattice from a seeded random (A, B) pair.
+
+    The SU3 multiply is site-local, so the live-site bytes are identical
+    across every mesh/sharding of the same program — any difference between
+    controllers or device counts is a real divergence (sharding permutation,
+    init bug, nondeterminism), which is exactly what the launcher gates on.
+
+    The RNG draw covers exactly the L**4 live sites (NOT ``padded_sites``,
+    which varies with the device count and would shift the stream, making
+    legitimately-identical results digest differently); padding is
+    deterministic zeros and ``plan.unpack`` slices back to the live sites
+    before hashing.
+    """
+    import numpy as np
+
+    n = plan.cfg.shape.n_sites
+    rng = np.random.default_rng(seed)
+    shape = (n, 4, 3, 3)
+    a = (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype("complex64")
+    b = (rng.standard_normal((4, 3, 3)) + 1j * rng.standard_normal((4, 3, 3))).astype("complex64")
+    a = np.concatenate(
+        [a, np.zeros((plan.padded_sites - n, 4, 3, 3), "complex64")], axis=0
+    )
+    c_phys = plan.step(plan.codec.pack(jnp.asarray(a)), plan.codec.pack_b(jnp.asarray(b)))
+    c = np.asarray(jax.device_get(plan.unpack(c_phys)))  # live sites only
+    return hashlib.sha256(c.tobytes()).hexdigest()
+
+
+def su3_fig7_rows(
+    L: int,
+    device_counts: tuple[int, ...],
+    hosts: int,
+    seed: int = 0,
+    iterations: int = 3,
+) -> tuple[list[dict], dict[str, str]]:
+    """The fig7 strong-scaling curve over (host, device) MeshSpec plans.
+
+    Runs in ONE process whose forced device pool covers ``max(device_counts)``;
+    every point slices its mesh from that pool through
+    :class:`repro.launch.mesh.MeshSpec` — the real ``build_plan`` multi-host
+    path, not a per-point child process.
+
+    Returns:
+        ``(rows, digests)`` — benchmark rows named ``fig7_{placement}_d{n}``
+        (schema-compatible with the historical fig7 rows, plus ``hosts`` and
+        halo fields) and ``{point_name: result_sha256}`` for the launcher's
+        divergence gate.
+    """
+    from repro.core.su3.engine import EngineConfig as SU3EngineConfig, SU3Engine
+    from repro.launch.mesh import MeshSpec
+
+    rows: list[dict] = []
+    digests: dict[str, str] = {}
+    for n in device_counts:
+        h = min(hosts, n)
+        spec = MeshSpec(hosts=h, devices_per_host=n // h)
+        for placement in ("sharded", "host_scatter"):
+            cfg = SU3EngineConfig(
+                L=L, variant="versionX", placement=placement,
+                iterations=iterations, warmups=1, tile=128,
+            )
+            eng = SU3Engine(cfg, spec)
+            row = eng.run().row()
+            row["name"] = f"fig7_{placement}_d{n}"
+            row["hosts"] = h
+            row.update(eng.plan.halo().as_dict() if L**4 % max(h, 1) == 0 else {})
+            rows.append(row)
+            if placement == "sharded":
+                digests[f"d{n}"] = _su3_result_digest(eng.plan, seed)
+    return rows, digests
+
+
+def _su3_fig7_worker(args: argparse.Namespace) -> None:
+    """One controller: compute the curve + digests, write them to a JSON."""
+    counts = tuple(int(x) for x in args.device_counts.split(","))
+    rows, digests = su3_fig7_rows(
+        args.L, counts, args.hosts, seed=args.seed, iterations=args.iterations
+    )
+    payload = {
+        "rank": args.rank,
+        "n_devices_visible": len(jax.devices()),
+        "rows": rows,
+        "digests": digests,
+    }
+    pathlib.Path(args.out).write_text(json.dumps(payload, default=str))
+
+
+def su3_fig7_launch(
+    L: int,
+    device_counts: tuple[int, ...],
+    hosts: int,
+    controllers: int,
+    seed: int = 0,
+    iterations: int = 3,
+    timeout: int = 600,
+) -> list[dict]:
+    """Launch ``controllers`` identical fig7 workers; gate on divergence.
+
+    Every worker runs the full curve (the multi-controller SPMD discipline:
+    same program, same data, every rank).  The launcher then requires
+
+      * within each controller: every device count's result digest equals
+        that controller's d1 (single-host) digest;
+      * across controllers: all digest tables identical.
+
+    Raises SystemExit(1) on divergence.  Returns controller 0's rows, each
+    stamped with ``controllers``.
+    """
+    counts = ",".join(str(c) for c in device_counts)
+    max_dev = max(device_counts)
+    outs = []
+    procs = []
+    tmpdir = tempfile.mkdtemp(prefix="su3_fig7_")
+    env = dict(os.environ)
+    env["REPRO_XLA_FLAGS"] = f"--xla_force_host_platform_device_count={max_dev}"
+    env.setdefault("PYTHONPATH", str(pathlib.Path(__file__).resolve().parents[2]))
+    for rank in range(controllers):
+        out = pathlib.Path(tmpdir) / f"controller_{rank}.json"
+        outs.append(out)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--su3-fig7-worker", "--rank", str(rank), "--out", str(out),
+             "--L", str(L), "--device-counts", counts, "--hosts", str(hosts),
+             "--seed", str(seed), "--iterations", str(iterations)],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        ))
+    payloads = []
+    for rank, proc in enumerate(procs):
+        try:
+            _, err = proc.communicate(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            raise SystemExit(f"su3-fig7 controller {rank} timed out")
+        if proc.returncode != 0:
+            raise SystemExit(
+                f"su3-fig7 controller {rank} failed:\n{err[-2000:]}"
+            )
+        payloads.append(json.loads(outs[rank].read_text()))
+
+    reference = payloads[0]["digests"]
+    single_host = reference.get(f"d{min(device_counts)}")
+    failures = []
+    for p in payloads:
+        for point, digest in p["digests"].items():
+            if digest != single_host:
+                failures.append(
+                    f"controller {p['rank']} {point}: {digest[:12]} != "
+                    f"single-host {str(single_host)[:12]}"
+                )
+        if p["digests"] != reference:
+            failures.append(f"controller {p['rank']} digest table diverges from rank 0")
+    if failures:
+        for f in failures:
+            print(f"[DIVERGENCE] {f}", file=sys.stderr)
+        raise SystemExit(1)
+    rows = payloads[0]["rows"]
+    for row in rows:
+        row["controllers"] = controllers
+    return rows
+
+
 def _mesh_for(label: str) -> jax.sharding.Mesh:
     n = len(jax.devices())
     if label == "multi":
@@ -355,7 +537,33 @@ def main() -> None:
                     choices=("float32", "bfloat16"))
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--tag", default="", help="suffix for the result JSON")
+    # SU3 fig7 multi-controller dry-run
+    ap.add_argument("--su3-fig7", action="store_true",
+                    help="launch the SU3 strong-scaling curve as one "
+                         "multi-controller dry-run (divergence-gated)")
+    ap.add_argument("--su3-fig7-worker", action="store_true",
+                    help=argparse.SUPPRESS)  # internal: one controller rank
+    ap.add_argument("--rank", type=int, default=0)
+    ap.add_argument("--out", default="")
+    ap.add_argument("--L", type=int, default=8)
+    ap.add_argument("--device-counts", default="1,2,4")
+    ap.add_argument("--hosts", type=int, default=2)
+    ap.add_argument("--controllers", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--iterations", type=int, default=3)
     args = ap.parse_args()
+
+    if args.su3_fig7_worker:
+        _su3_fig7_worker(args)
+        return
+    if args.su3_fig7:
+        counts = tuple(int(x) for x in args.device_counts.split(","))
+        rows = su3_fig7_launch(
+            args.L, counts, args.hosts, args.controllers,
+            seed=args.seed, iterations=args.iterations,
+        )
+        print(json.dumps(rows, default=str))
+        return
 
     mesh_labels = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     cells: list[tuple[str, str]] = []

@@ -7,12 +7,17 @@ Public surface:
                                via dtype="bfloat16", accum_dtype="float32")
   BatcherConfig / DynamicBatcher / ServeRequest / CoalescedBatch
                                the (L, k)-bucketed coalescing queue
+  LocalityRouter / InflightChain
+                               host-locality routing and continuous-batching
+                               chain admission (multi-host serving)
   ServiceMetrics               latency/throughput/occupancy accounting
 """
 from repro.serve.su3.batcher import (
     BatcherConfig,
     CoalescedBatch,
     DynamicBatcher,
+    InflightChain,
+    LocalityRouter,
     ServeRequest,
 )
 from repro.serve.su3.metrics import ServiceMetrics, request_flops
@@ -22,6 +27,8 @@ __all__ = [
     "BatcherConfig",
     "CoalescedBatch",
     "DynamicBatcher",
+    "InflightChain",
+    "LocalityRouter",
     "ServeRequest",
     "ServiceMetrics",
     "ServiceConfig",

@@ -22,6 +22,20 @@ controlled, warm quantity:
 The batcher is a plain steppable object — no threads, no event loop — so it
 drops into a synchronous replay harness (benchmarks/serve_traffic.py), an
 asyncio front-end (``SU3Service.arun``), or a test with the same semantics.
+
+Two scheduling policies layered on top (both host-side bookkeeping only —
+no jax in this module):
+
+  * **locality routing** — :class:`LocalityRouter` pins each lattice size L
+    to one host, sticky after first sight: the host that paid the compile +
+    tile sweep for an L's warm runner keeps serving that L (the serving
+    analog of the paper's first-touch rule — work follows the warm data).
+  * **continuous batching** — :class:`InflightChain` tracks the slots of a
+    chain that is being *re-dispatched one iteration at a time*: requests
+    with the same L join at any iteration boundary (mid-chain admission)
+    instead of waiting for the whole chain to drain; a request for another
+    L can never join (the lattice shapes differ) and queues for its own
+    chain.
 """
 from __future__ import annotations
 
@@ -163,3 +177,191 @@ class DynamicBatcher:
         return CoalescedBatch(
             key=key, requests=take, padded_size=self.cfg.padded_size(len(take))
         )
+
+    # -- continuous-batching admission views ----------------------------------
+
+    def queued_Ls(self) -> list[int]:
+        """Distinct lattice sizes with waiting requests, oldest-head first."""
+        heads: dict[int, float] = {}
+        for (L, _k), q in self._buckets.items():
+            if q:
+                heads[L] = min(heads.get(L, q[0].arrival_s), q[0].arrival_s)
+        return sorted(heads, key=heads.__getitem__)
+
+    def next_for_L(self, L: int, max_n: int) -> list[ServeRequest]:
+        """Pop up to ``max_n`` oldest waiting requests of lattice size ``L``,
+        across every chain depth k.
+
+        Continuous batching admits by *shape* compatibility only — a chain
+        in flight for L can absorb requests of any k (each slot tracks its
+        own remaining iterations), so the (L, k) buckets merge here by
+        arrival order.  Returns ``[]`` when nothing of size L waits.
+        """
+        if max_n < 1:
+            return []
+        out: list[ServeRequest] = []
+        while len(out) < max_n:
+            candidates = [
+                (key, q) for key, q in self._buckets.items() if q and key[0] == L
+            ]
+            if not candidates:
+                break
+            key, queue = min(candidates, key=lambda kv: kv[1][0].arrival_s)
+            out.append(queue.pop(0))
+            self._depth -= 1
+        return out
+
+
+class LocalityRouter:
+    """Sticky (lattice size -> host) routing for a host-sharded warm pool.
+
+    The first request for a lattice size L is assigned to the least-loaded
+    host (by cumulative admitted flops); every later L request follows it.
+    That host's pool holds L's warm ``BatchedLatticeRunner`` — the compile
+    and tile/K sweeps were paid there, its devices hold the warm dispatch
+    shapes — so routing by locality means never re-warming an L on a second
+    host while the first sits idle (the serving analog of the paper's
+    "work runs where the data was first touched").
+
+    Host-side bookkeeping only; safe under any request mix.
+    """
+
+    def __init__(self, n_hosts: int):
+        if n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+        self.n_hosts = n_hosts
+        self._home: dict[int, int] = {}  # L -> host
+        self._load: list[float] = [0.0] * n_hosts  # cumulative admitted flops
+
+    def host_for(self, L: int) -> int:
+        """The home host for lattice size L (assigned on first sight).
+
+        Assignment charges the chosen host a nominal placement load (one
+        multiply's flops, 864·L⁴) immediately — otherwise a burst of
+        first-sight Ls with no traffic in between (``SU3Service.warm``
+        pre-building several sizes) would all see every host at zero load
+        and pile onto host 0, pinning the whole pool there forever.
+        """
+        if L not in self._home:
+            host = min(range(self.n_hosts), key=self._load.__getitem__)
+            self._home[L] = host
+            self._load[host] += 864.0 * L**4  # nominal placement charge
+        return self._home[L]
+
+    def peek(self, L: int) -> int | None:
+        """L's home host, or None if L has never been routed."""
+        return self._home.get(L)
+
+    def record_load(self, host: int, flops: float) -> None:
+        """Charge admitted work to ``host`` (steers future first-sight Ls)."""
+        self._load[host] += flops
+
+    def assignments(self) -> dict[int, int]:
+        """Snapshot of the sticky (L -> host) table."""
+        return dict(self._home)
+
+    def loads(self) -> list[float]:
+        return list(self._load)
+
+
+@dataclasses.dataclass
+class InflightChain:
+    """Slot bookkeeping of one continuously-batched chain (one L, one host).
+
+    The chain's lattice batch is dispatched ONE iteration at a time; between
+    iterations (`advance`) this object decides who occupies the slots:
+
+      * ``admit`` places a same-L request into a free slot with its own
+        remaining-iteration count — mid-chain admission at an iteration
+        boundary, the continuous-batching move;
+      * a request for a different L is *rejected* (``can_admit`` False):
+        its lattice shape is incompatible with the in-flight batch and it
+        must queue for its own chain;
+      * ``advance`` decrements every live slot and frees the finished ones.
+
+    Array state (the physical lattice batch) lives with the service; this is
+    the scheduling half, testable without a device.
+    """
+
+    L: int
+    slots: int
+    iterations_run: int = 0
+    _req: list[ServeRequest | None] = dataclasses.field(default_factory=list)
+    _remaining: list[int] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if self.slots < 1:
+            raise ValueError(f"chain needs >= 1 slot, got {self.slots}")
+        self._req = [None] * self.slots
+        self._remaining = [0] * self.slots
+
+    # -- occupancy -------------------------------------------------------------
+
+    @property
+    def live(self) -> int:
+        """Slots currently carrying a request."""
+        return sum(1 for r in self._req if r is not None)
+
+    @property
+    def occupancy(self) -> float:
+        return self.live / self.slots
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self._req) if r is None]
+
+    def requests(self) -> list[ServeRequest]:
+        return [r for r in self._req if r is not None]
+
+    # -- admission -------------------------------------------------------------
+
+    def can_admit(self, req: ServeRequest) -> bool:
+        """Shape-compatible (same L) and a slot is free."""
+        return req.L == self.L and self.live < self.slots
+
+    def admit(self, req: ServeRequest) -> int:
+        """Seat ``req`` in a free slot; returns the slot index.
+
+        Raises ValueError on an incompatible lattice size — the caller must
+        check :meth:`can_admit` (or catch) and queue the request for its own
+        chain instead.
+        """
+        if req.L != self.L:
+            raise ValueError(
+                f"request L={req.L} cannot join an in-flight L={self.L} chain "
+                f"(incompatible lattice shape); it must wait for its own chain"
+            )
+        for i, r in enumerate(self._req):
+            if r is None:
+                self._req[i] = req
+                self._remaining[i] = req.k
+                return i
+        raise ValueError(f"chain L={self.L} is full ({self.slots} slots)")
+
+    @property
+    def midchain(self) -> bool:
+        """True once the chain has advanced at least one iteration — a later
+        admit is a mid-chain admit (the case batch-per-step cannot serve)."""
+        return self.iterations_run > 0
+
+    # -- advancement -----------------------------------------------------------
+
+    def advance(self) -> list[tuple[int, ServeRequest]]:
+        """Account one executed iteration; returns [(slot, request)] finished.
+
+        Call AFTER the iteration's dispatch: every live slot consumed one
+        multiply; slots reaching zero remaining iterations complete and
+        free.  A chain that fully drains resets to fresh (``midchain``
+        False): an admit into a retained-but-empty chain is exactly a new
+        batch start, not a mid-chain join, and must not be counted as one.
+        """
+        done: list[tuple[int, ServeRequest]] = []
+        for i, r in enumerate(self._req):
+            if r is None:
+                continue
+            self._remaining[i] -= 1
+            if self._remaining[i] <= 0:
+                done.append((i, r))
+                self._req[i] = None
+                self._remaining[i] = 0
+        self.iterations_run = 0 if self.live == 0 else self.iterations_run + 1
+        return done

@@ -50,6 +50,9 @@ class ServiceMetrics:
     occupancies: list = dataclasses.field(default_factory=list)
     queue_depths: list = dataclasses.field(default_factory=list)
     compiles: int = 0  # cold (first-shape) dispatches, charged to busy_s too
+    midchain_admits: int = 0  # continuous mode: requests seated into an
+    # already-running chain (the admissions batch-per-step cannot make)
+    host_dispatches: dict = dataclasses.field(default_factory=dict)  # host -> n
 
     def reset(self) -> None:
         """Zero every counter and restart the wall clock (post-warmup)."""
@@ -65,16 +68,28 @@ class ServiceMetrics:
         self.rejected += 1
 
     def record_dispatch(
-        self, *, live: int, padded: int, step_s: float, flops: float, cold: bool = False
+        self, *, live: int, padded: int, step_s: float, flops: float,
+        cold: bool = False, host: int = 0,
     ) -> None:
+        """Account one device dispatch.
+
+        ``live``/``padded`` are request slots (continuous mode charges each
+        per-iteration dispatch at its chain's slot count, so occupancy is
+        directly comparable with batch-per-step at the same warm size);
+        ``host`` attributes the dispatch to a pool shard.
+        """
         self.dispatches += 1
         self.live_slots += live
         self.padded_slots += padded - live
         self.busy_s += step_s
         self.useful_flops += flops
         self.occupancies.append(live / padded if padded else 0.0)
+        self.host_dispatches[host] = self.host_dispatches.get(host, 0) + 1
         if cold:
             self.compiles += 1
+
+    def record_midchain_admits(self, n: int = 1) -> None:
+        self.midchain_admits += n
 
     def record_completion(self, latency_s: float) -> None:
         self.completed += 1
@@ -118,6 +133,8 @@ class ServiceMetrics:
             "padded_slot_fraction": round(
                 self.padded_slots / total_slots, 3
             ) if total_slots else 0.0,
+            "midchain_admits": self.midchain_admits,
+            "host_dispatches": {str(h): n for h, n in sorted(self.host_dispatches.items())},
             "queue_depth_max": max(self.queue_depths) if self.queue_depths else 0,
             "queue_depth_mean": round(
                 float(np.mean(self.queue_depths)), 3

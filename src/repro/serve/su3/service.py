@@ -4,15 +4,18 @@ Composition (everything below the service already exists in the plan layer;
 the service adds the queueing discipline and the warm-pool policy):
 
     submit(a, b, k)                      arun(a, b, k)  [asyncio face]
-          │                                   │
-          ▼                                   ▼
-    DynamicBatcher — (L, k) buckets, warm-size padding, admission control
-          │  next_batch()  one CoalescedBatch per step()
+          │ LocalityRouter — sticky L -> host (work follows the warm data)
           ▼
-    warm pool: {(L, dtype, layout, tile) -> BatchedLatticeRunner}
-          │  built through the persistent autotune cache: the FIRST request
-          │  for an (L, dtype) pays compile + tile/K sweep, every later
-          │  request (and every later process) hits the tuned warm plan
+    per-host DynamicBatcher — (L, k) buckets, warm-size padding, admission
+          │  next_batch()  one CoalescedBatch per step()        [batch mode]
+          │  next_for_L()  iteration-boundary admission     [continuous mode]
+          ▼
+    host-sharded warm pool:
+          {(host, L, dtype, layout, tile) -> BatchedLatticeRunner}
+          │  each host's runners plan against THAT host's submesh
+          │  (MeshSpec.host_submesh) and are built through the persistent
+          │  autotune cache: the FIRST request for an (L, dtype) pays
+          │  compile + tile/K sweep, every later request hits the warm plan
           ▼
     one vmapped, sharded, (optionally bf16-storage/f32-accumulate) dispatch
           │
@@ -22,6 +25,22 @@ the service adds the queueing discipline and the warm-pool policy):
 The chain depth ``k`` defaults to the autotuned fused depth for the request's
 (backend, L) — ``autotune.tuned_fused_k`` — so callers that don't care get
 the measured-best dispatch amortization instead of a hardcoded constant.
+
+Dispatch modes
+--------------
+``batch-per-step`` (default): one ``step()`` call dispatches one coalesced
+(L, k) bucket through one fused-k vmapped call.  Requests arriving while a
+chain runs wait for the next ``step()``.
+
+``continuous`` (``ServiceConfig(continuous=True)``): each (host, L) keeps an
+:class:`~repro.serve.su3.batcher.InflightChain` whose lattice batch is
+re-dispatched ONE iteration at a time; at every iteration boundary, waiting
+same-L requests are admitted into free slots (mid-chain admission — each
+slot carries its own remaining-iteration count, so mixed k coexists in one
+chain).  A request for a different L is shape-incompatible with the
+in-flight batch and queues for its own chain.  Under open-loop load this
+keeps the dispatched slots fuller than batch-per-step — measured by
+``benchmarks/serve_traffic.py``'s continuous-vs-batch row.
 """
 from __future__ import annotations
 
@@ -36,7 +55,14 @@ import jax.numpy as jnp
 from repro.core import autotune
 from repro.core.su3.layouts import Layout
 from repro.core.su3.plan import BatchedLatticeRunner, EngineConfig
-from repro.serve.su3.batcher import BatcherConfig, DynamicBatcher, ServeRequest
+from repro.launch.mesh import MeshSpec
+from repro.serve.su3.batcher import (
+    BatcherConfig,
+    DynamicBatcher,
+    InflightChain,
+    LocalityRouter,
+    ServeRequest,
+)
 from repro.serve.su3.metrics import ServiceMetrics, request_flops
 
 DEFAULT_TILE = 128  # small enough that every L >= 2 bucket is a few tiles
@@ -44,7 +70,31 @@ DEFAULT_TILE = 128  # small enough that every L >= 2 bucket is a few tiles
 
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
-    """The serving tuple: storage/compute dtypes, layout, tuning, batching."""
+    """The serving tuple: storage/compute dtypes, layout, tuning, batching,
+    host topology, and dispatch mode.
+
+    Attributes:
+        dtype: storage dtype of every plan in the pool.
+        accum_dtype: ``"float32"`` with ``dtype="bfloat16"`` = bf16-storage /
+            f32-accumulate serving plans.
+        layout: physical lattice layout (planar-view layouts only).
+        autotune: build runner configs through the persistent cache.
+        tile: explicit Pallas tile when ``autotune=False`` (0 = DEFAULT_TILE).
+        default_k: chain depth when a request leaves k unset; 0 = autotuned.
+        batcher: per-host queue discipline (each host gets its own
+            DynamicBatcher with this config — admission control is per host).
+        cache_directory: autotune cache override (tests).
+        hosts: shard the warm pool over this many hosts; each host's runners
+            plan on its :meth:`~repro.launch.mesh.MeshSpec.host_submesh` and
+            requests route to an L's home host (sticky locality routing).
+            On a device pool smaller than the host count, hosts
+            oversubscribe the local devices — the routing/batching semantics
+            are identical, only physical placement collapses (simulation).
+        continuous: continuous-batching dispatch (iteration-boundary
+            admission into in-flight chains) instead of batch-per-step.
+        chain_slots: slots per in-flight chain (continuous mode);
+            0 = the batcher's ``padded_size(max_batch)``.
+    """
 
     dtype: str = "float32"  # storage dtype of every plan in the pool
     accum_dtype: str = ""  # "float32" + dtype="bfloat16" = bf16 serving plans
@@ -54,6 +104,9 @@ class ServiceConfig:
     default_k: int = 0  # chain depth when a request leaves k unset; 0 = tuned
     batcher: BatcherConfig = dataclasses.field(default_factory=BatcherConfig)
     cache_directory: str | None = None  # autotune cache override (tests)
+    hosts: int = 1  # shard the warm pool across this many hosts
+    continuous: bool = False  # iteration-boundary admission dispatch
+    chain_slots: int = 0  # continuous-chain slots; 0 = padded max_batch
 
     def __post_init__(self) -> None:
         # the pool serves the planar Pallas kernel; AOS has no planar view,
@@ -72,15 +125,77 @@ class ServiceConfig:
                 f"{Layout(self.layout).value!r} with autotune=False and an "
                 "explicit tile"
             )
+        if self.hosts < 1:
+            raise ValueError(f"hosts must be >= 1, got {self.hosts}")
+        if self.chain_slots < 0:
+            raise ValueError(f"chain_slots must be >= 0, got {self.chain_slots}")
+
+
+class _ChainArrays:
+    """Device-array half of one in-flight chain (scheduling half:
+    :class:`~repro.serve.su3.batcher.InflightChain`).
+
+    Holds the physical lattice batch ``a_phys (slots, ...)`` and planar B
+    batch ``b_p (slots, 2, 36)``; free slots carry zero lattices (they step
+    harmlessly and are charged as padding by the metrics).
+    """
+
+    def __init__(self, runner: BatchedLatticeRunner, slots: int):
+        self.runner = runner
+        zero_canon = jnp.zeros(
+            (slots, runner.plan.padded_sites, 4, 3, 3), jnp.complex64
+        )
+        self.a_phys = jax.vmap(runner.plan.codec.pack)(zero_canon)
+        self.b_p = jnp.zeros(
+            (slots, 2, 36), runner.plan.codec.word_dtype
+        )
+
+    def seat(self, slot: int, a: jax.Array, b: jax.Array) -> None:
+        """Pack one request's canonical (A, B) into ``slot``."""
+        a_one = self.runner.pack_batch(a[None])[0]
+        b_one = self.runner.plan.codec.pack_b(b)
+        self.a_phys = self.a_phys.at[slot].set(a_one)
+        self.b_p = self.b_p.at[slot].set(b_one)
+
+    def advance(self) -> None:
+        """One vmapped physical multiply over every slot (k=1)."""
+        self.a_phys = self.runner.run(self.a_phys, self.b_p, k=1)
+
+    def result(self, slot: int, n_sites: int) -> jax.Array:
+        """Canonical complex C of ``slot``, sliced to the live sites."""
+        return self.runner.plan.codec.unpack(self.a_phys[slot], n_sites)
+
+    def clear(self, slot: int) -> None:
+        """Zero a freed slot (its stale lattice would otherwise keep
+        stepping and confuse a later occupant's first iteration)."""
+        self.a_phys = self.a_phys.at[slot].set(jnp.zeros_like(self.a_phys[slot]))
+        self.b_p = self.b_p.at[slot].set(jnp.zeros_like(self.b_p[slot]))
 
 
 class SU3Service:
-    """Dynamic-batching SU3 lattice serving over a warm ExecutionPlan pool."""
+    """Dynamic-batching SU3 lattice serving over a warm ExecutionPlan pool.
+
+    Args:
+        cfg: the :class:`ServiceConfig` serving tuple.
+        mesh: optional explicit mesh every runner plans against (single-host
+            only; mutually exclusive with ``cfg.hosts > 1``, where each
+            host's runners plan on their own submesh).
+    """
 
     def __init__(self, cfg: ServiceConfig | None = None, mesh: Any = None):
         self.cfg = cfg if cfg is not None else ServiceConfig()
+        if self.cfg.hosts > 1 and mesh is not None:
+            raise ValueError(
+                "pass EITHER an explicit mesh (single-host pool) OR "
+                "hosts > 1 (per-host submeshes derived from MeshSpec)"
+            )
         self.mesh = mesh
-        self.batcher = DynamicBatcher(self.cfg.batcher)
+        self.mesh_spec = MeshSpec(hosts=self.cfg.hosts)
+        self.router = LocalityRouter(self.cfg.hosts)
+        self._batchers = [
+            DynamicBatcher(self.cfg.batcher) for _ in range(self.cfg.hosts)
+        ]
+        self.batcher = self._batchers[0]  # host 0; aggregate depth: queued()
         self.metrics = ServiceMetrics()
         self._pool: dict[tuple, BatchedLatticeRunner] = {}
         self._ecfg: dict[int, EngineConfig] = {}  # L -> resolved plan tuple
@@ -89,6 +204,9 @@ class SU3Service:
         self._awaited: set[int] = set()  # ids owned by pending arun callers
         self._seen_shapes: set[tuple] = set()
         self._next_id = 0
+        self._rr_host = 0  # round-robin cursor over hosts for step()
+        # continuous mode: (host, L) -> (InflightChain, _ChainArrays)
+        self._chains: dict[tuple[int, int], tuple[InflightChain, _ChainArrays]] = {}
 
     # -- warm pool -----------------------------------------------------------
 
@@ -109,17 +227,36 @@ class SU3Service:
                 )
         return self._ecfg[L]
 
-    def runner_for(self, L: int) -> BatchedLatticeRunner:
-        """The warm runner for lattice size L (built + tuned on first use)."""
+    def _host_mesh(self, host: int) -> Any:
+        """The mesh host ``host``'s runners plan against."""
+        if self.cfg.hosts == 1:
+            return self.mesh  # explicit mesh or None (all local devices)
+        return self.mesh_spec.host_submesh(host)
+
+    def runner_for(self, L: int, host: int | None = None) -> BatchedLatticeRunner:
+        """The warm runner for lattice size L on its home host.
+
+        Args:
+            L: lattice extent (requests carry L**4 sites).
+            host: explicit host override; default = the router's sticky
+                home for L (assigned least-loaded-first on first sight).
+
+        Returns:
+            The host-local :class:`BatchedLatticeRunner` (built + autotuned
+            on first use; warm afterwards).
+        """
+        if host is None:
+            host = self.router.host_for(L)
         ecfg = self._engine_config(L)
-        key = (L, ecfg.dtype, ecfg.layout.value, ecfg.tile)
+        key = (host, L, ecfg.dtype, ecfg.layout.value, ecfg.tile)
         runner = self._pool.get(key)
         if runner is None:
-            runner = BatchedLatticeRunner(ecfg, self.mesh)
+            runner = BatchedLatticeRunner(ecfg, self._host_mesh(host))
             self._pool[key] = runner
         return runner
 
     def pool_keys(self) -> list[tuple]:
+        """Sorted warm-pool keys: ``(host, L, dtype, layout, tile)``."""
         return sorted(self._pool)
 
     def default_k_for(self, L: int) -> int:
@@ -135,12 +272,19 @@ class SU3Service:
             )
         return self._tuned_k[L]
 
+    def _chain_slots(self) -> int:
+        return self.cfg.chain_slots or self.cfg.batcher.padded_size(
+            self.cfg.batcher.max_batch
+        )
+
     def warm(self, Ls: tuple[int, ...], ks: tuple[int, ...] = (1,),
              batch_sizes: tuple[int, ...] = ()) -> None:
         """Pre-build runners (and optionally compile dispatch shapes).
 
         Serving cold-start control: first-touch compiles happen here instead
-        of inside a user request's latency.
+        of inside a user request's latency.  In continuous mode this also
+        compiles the (chain_slots, k=1) iteration shape each chain
+        re-dispatches.
         """
         for L in Ls:
             runner = self.runner_for(L)
@@ -151,6 +295,13 @@ class SU3Service:
                 for k in ks:
                     runner.multiply(a, b, k=k).block_until_ready()
                     self._seen_shapes.add(self._shape_key(runner, L, k, bsz))
+            if self.cfg.continuous:
+                arrays = _ChainArrays(runner, self._chain_slots())
+                arrays.advance()
+                arrays.a_phys.block_until_ready()
+                self._seen_shapes.add(
+                    self._shape_key(runner, L, 1, self._chain_slots())
+                )
 
     @staticmethod
     def _shape_key(runner: BatchedLatticeRunner, L: int, k: int, bsz: int) -> tuple:
@@ -172,37 +323,81 @@ class SU3Service:
             )
         return L
 
+    def queued(self) -> int:
+        """Total waiting requests across every host's batcher."""
+        return sum(len(b) for b in self._batchers)
+
     def submit(self, a: jax.Array, b: jax.Array, k: int | None = None) -> int | None:
-        """Queue one lattice multiply; returns a request id, or None when the
-        queue budget is exhausted (backpressure — caller retries later)."""
+        """Queue one lattice multiply on its home host's batcher.
+
+        Args:
+            a: canonical complex lattice ``(L**4, 4, 3, 3)``.
+            b: canonical complex link matrix set ``(4, 3, 3)``.
+            k: chain depth (``C = A⊗B`` applied k times); None = the
+                autotuned default for (backend, L).
+
+        Returns:
+            A request id, or None when the home host's queue budget is
+            exhausted (backpressure — caller retries later).
+        """
         L = self._infer_L(a)
-        depth = len(self.batcher)
+        host = self.router.host_for(L)
+        depth = self.queued()
         req = ServeRequest(
             req_id=self._next_id, a=a, b=b, L=L,
             k=k if k is not None else self.default_k_for(L),
             arrival_s=time.perf_counter(),
         )
-        if not self.batcher.submit(req):
+        if not self._batchers[host].submit(req):
             self.metrics.record_reject()
             return None
+        self.router.record_load(host, request_flops(req.n_sites, req.k))
         self._next_id += 1
         self.metrics.record_admit(depth + 1)
         return req.req_id
 
     # -- dispatch ------------------------------------------------------------
 
-    def step(self) -> int:
-        """Dispatch ONE coalesced batch; returns completed request count.
+    def _work_pending(self) -> bool:
+        if any(len(b) for b in self._batchers):
+            return True
+        return any(chain.live for chain, _ in self._chains.values())
 
-        Pads the batch to the warm size with zero lattices, runs the whole
-        bucket through one vmapped (fused-k) plan dispatch, then splits and
-        unpads results back per request id.
+    def pending(self) -> bool:
+        """True while any request waits in a queue or rides an in-flight
+        chain — the loop condition for external step() drivers."""
+        return self._work_pending()
+
+    def step(self) -> int:
+        """Advance the service by one scheduling turn; returns completed
+        request count.
+
+        Batch-per-step mode: dispatch ONE coalesced (L, k) batch from the
+        next non-empty host (round-robin).  Continuous mode: admit waiting
+        requests into that host's in-flight chains at this iteration
+        boundary, then advance each of its live chains by ONE iteration.
         """
-        batch = self.batcher.next_batch()
+        for _ in range(self.cfg.hosts):
+            host = self._rr_host
+            self._rr_host = (self._rr_host + 1) % self.cfg.hosts
+            if self.cfg.continuous:
+                if len(self._batchers[host]) or any(
+                    h == host and chain.live
+                    for (h, _L), (chain, _a) in self._chains.items()
+                ):
+                    return self._step_continuous(host)
+            else:
+                if len(self._batchers[host]):
+                    return self._step_batch(host)
+        return 0
+
+    def _step_batch(self, host: int) -> int:
+        """One coalesced fused-k dispatch for ``host`` (batch-per-step)."""
+        batch = self._batchers[host].next_batch()
         if batch is None:
             return 0
         reqs = batch.requests
-        runner = self.runner_for(batch.L)
+        runner = self.runner_for(batch.L, host)
         n_sites = batch.L**4
         a = jnp.stack([r.a for r in reqs])
         b = jnp.stack([r.b for r in reqs])
@@ -223,22 +418,86 @@ class SU3Service:
         self.metrics.record_dispatch(
             live=len(reqs), padded=batch.padded_size, step_s=step_s,
             flops=request_flops(n_sites, batch.k) * len(reqs), cold=cold,
+            host=host,
         )
         done_s = time.perf_counter()
         for i, r in enumerate(reqs):
             self._results[r.req_id] = c[i]
             self.metrics.record_completion(done_s - r.arrival_s)
-        self.metrics.record_queue_depth(len(self.batcher))
+        self.metrics.record_queue_depth(self.queued())
         return len(reqs)
 
+    def _step_continuous(self, host: int) -> int:
+        """One iteration boundary for ``host``: admit, then advance each of
+        its chains by one multiply."""
+        batcher = self._batchers[host]
+        slots = self._chain_slots()
+
+        # 1) admission — existing chains first (mid-chain admits), then new
+        #    chains for queued Ls that have none.  A request whose L differs
+        #    from a chain's is never seated in it (InflightChain.admit
+        #    enforces the shape incompatibility); it reaches its own chain
+        #    here.
+        for L in batcher.queued_Ls():
+            chain_key = (host, L)
+            if chain_key not in self._chains:
+                runner = self.runner_for(L, host)
+                self._chains[chain_key] = (
+                    InflightChain(L=L, slots=slots),
+                    _ChainArrays(runner, slots),
+                )
+            chain, arrays = self._chains[chain_key]
+            free = slots - chain.live
+            if not free:
+                continue
+            admitted = batcher.next_for_L(L, free)
+            for req in admitted:
+                slot = chain.admit(req)
+                arrays.seat(slot, req.a, req.b)
+            if admitted and chain.midchain:
+                self.metrics.record_midchain_admits(len(admitted))
+
+        # 2) advance every live chain of this host by ONE iteration
+        completed = 0
+        queued_Ls = set(batcher.queued_Ls())
+        for (h, L) in [key for key in self._chains if key[0] == host]:
+            chain, arrays = self._chains[(h, L)]
+            if not chain.live:
+                if L not in queued_Ls:
+                    # dead chain with nothing queued: drop it (its compiled
+                    # shape stays warm in the jit cache)
+                    del self._chains[(h, L)]
+                continue
+            runner = arrays.runner
+            n_sites = L**4
+            shape_key = self._shape_key(runner, L, 1, slots)
+            cold = shape_key not in self._seen_shapes
+            live = chain.live
+            t0 = time.perf_counter()
+            arrays.advance()
+            arrays.a_phys.block_until_ready()
+            step_s = time.perf_counter() - t0
+            self._seen_shapes.add(shape_key)
+            self.metrics.record_dispatch(
+                live=live, padded=slots, step_s=step_s,
+                flops=request_flops(n_sites, 1) * live, cold=cold, host=host,
+            )
+            done_s = time.perf_counter()
+            for slot, req in chain.advance():
+                self._results[req.req_id] = arrays.result(slot, n_sites)
+                arrays.clear(slot)
+                self.metrics.record_completion(done_s - req.arrival_s)
+                completed += 1
+        self.metrics.record_queue_depth(self.queued())
+        return completed
+
     def run_until_drained(self, max_steps: int = 10_000) -> int:
-        """Step until the queue empties; returns total completed requests."""
+        """Step until queues AND in-flight chains empty; returns completed."""
         total = 0
         for _ in range(max_steps):
-            done = self.step()
-            if done == 0:
+            if not self._work_pending():
                 return total
-            total += done
+            total += self.step()
         raise RuntimeError(f"queue not drained after {max_steps} steps")
 
     # -- results -------------------------------------------------------------

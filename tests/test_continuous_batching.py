@@ -1,0 +1,216 @@
+"""Continuous-batching dispatch: InflightChain admission edge cases
+(mid-chain admit, incompatible L rejected), L-wide queue popping, service
+correctness under mixed chain depths, and the host-sharded pool."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.kernels import ref
+from repro.serve.su3 import (
+    BatcherConfig,
+    DynamicBatcher,
+    InflightChain,
+    ServeRequest,
+    ServiceConfig,
+    SU3Service,
+)
+
+
+def _rand_a(seed, n_sites=16):
+    a = jax.random.normal(jax.random.PRNGKey(seed), (n_sites, 4, 3, 3, 2))
+    return jax.lax.complex(a[..., 0], a[..., 1])
+
+
+def _rand_b(seed):
+    b = jax.random.normal(jax.random.PRNGKey(seed), (4, 3, 3, 2))
+    return jax.lax.complex(b[..., 0], b[..., 1])
+
+
+def _req(i, L=2, k=1, arrival=0.0):
+    return ServeRequest(req_id=i, a=None, b=None, L=L, k=k, arrival_s=arrival or i + 1.0)
+
+
+def _svc(**kw):
+    cfg = dict(autotune=False, tile=16, continuous=True)
+    cfg.update(kw)
+    return SU3Service(ServiceConfig(**cfg))
+
+
+# -- InflightChain scheduling (no device needed) ------------------------------
+
+
+def test_chain_admits_same_L_any_k_until_full():
+    chain = InflightChain(L=2, slots=2)
+    assert chain.can_admit(_req(0, k=1))
+    s0 = chain.admit(_req(0, k=1))
+    s1 = chain.admit(_req(1, k=4))  # different k coexists in one chain
+    assert {s0, s1} == {0, 1} and chain.live == 2
+    assert not chain.can_admit(_req(2))  # full
+    with pytest.raises(ValueError, match="full"):
+        chain.admit(_req(2))
+
+
+def test_chain_rejects_incompatible_L():
+    chain = InflightChain(L=2, slots=4)
+    chain.admit(_req(0, L=2, k=2))
+    incompatible = _req(1, L=4)
+    assert not chain.can_admit(incompatible)
+    with pytest.raises(ValueError, match="incompatible"):
+        chain.admit(incompatible)  # must queue for its own chain instead
+
+
+def test_chain_midchain_admit_and_completion_order():
+    chain = InflightChain(L=2, slots=4)
+    chain.admit(_req(0, k=3))
+    assert not chain.midchain
+    assert chain.advance() == []  # r0 has 2 iterations left
+    assert chain.midchain
+    chain.admit(_req(1, k=1))  # mid-chain admission at an iteration boundary
+    done = chain.advance()
+    assert [r.req_id for _, r in done] == [1]  # the k=1 joiner finishes first
+    done = chain.advance()
+    assert [r.req_id for _, r in done] == [0]
+    assert chain.live == 0 and chain.occupancy == 0.0
+    # fully drained == fresh: a later admit is a new batch, not mid-chain
+    assert not chain.midchain
+    chain.admit(_req(2, k=1))
+    assert not chain.midchain
+
+
+def test_chain_slot_reuse_after_completion():
+    chain = InflightChain(L=2, slots=1)
+    chain.admit(_req(0, k=1))
+    assert chain.free_slots() == []
+    chain.advance()
+    assert chain.free_slots() == [0]
+    assert chain.admit(_req(1, k=2)) == 0  # freed slot is reused
+
+
+# -- DynamicBatcher L-wide views ----------------------------------------------
+
+
+def test_next_for_L_merges_k_buckets_by_arrival():
+    b = DynamicBatcher(BatcherConfig(max_batch=8, warm_batch_sizes=(8,)))
+    b.submit(_req(0, L=2, k=4, arrival=1.0))
+    b.submit(_req(1, L=4, k=1, arrival=2.0))
+    b.submit(_req(2, L=2, k=1, arrival=3.0))
+    assert b.queued_Ls() == [2, 4]  # oldest head first
+    got = b.next_for_L(2, max_n=8)
+    assert [r.req_id for r in got] == [0, 2]  # both k buckets, arrival order
+    assert len(b) == 1 and b.queued_Ls() == [4]
+    assert b.next_for_L(2, max_n=8) == []
+    assert b.next_for_L(4, max_n=0) == []
+
+
+# -- service integration ------------------------------------------------------
+
+
+def test_continuous_service_matches_reference_mixed_k():
+    svc = _svc()
+    reqs = []
+    for i, k in enumerate([1, 3, 2, 4]):
+        a, b = _rand_a(i), _rand_b(100 + i)
+        reqs.append((svc.submit(a, b, k=k), a, b, k))
+    assert svc.run_until_drained() == 4
+    assert not svc.pending()
+    for rid, a, b, k in reqs:
+        c = svc.pop_result(rid)
+        expect = a
+        for _ in range(k):
+            expect = ref.su3_mult_ref(expect, b)
+        np.testing.assert_allclose(
+            np.asarray(c), np.asarray(expect), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_continuous_midchain_admission_measured():
+    svc = _svc()
+    a0, b0 = _rand_a(0), _rand_b(0)
+    r0 = svc.submit(a0, b0, k=4)
+    svc.step()
+    svc.step()  # chain two iterations in
+    a1, b1 = _rand_a(1), _rand_b(1)
+    r1 = svc.submit(a1, b1, k=1)  # joins the in-flight chain
+    svc.run_until_drained()
+    assert svc.metrics.midchain_admits == 1
+    e0 = a0
+    for _ in range(4):
+        e0 = ref.su3_mult_ref(e0, b0)
+    np.testing.assert_allclose(
+        np.asarray(svc.pop_result(r0)), np.asarray(e0), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(svc.pop_result(r1)),
+        np.asarray(ref.su3_mult_ref(a1, b1)), rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_continuous_incompatible_L_gets_own_chain():
+    svc = _svc()
+    r2 = svc.submit(_rand_a(0), _rand_b(0), k=3)  # L=2 chain in flight
+    svc.step()
+    r4 = svc.submit(_rand_a(1, n_sites=256), _rand_b(1), k=1)  # L=4
+    svc.run_until_drained()
+    # the L=4 request never joined the L=2 chain: two distinct chains ran
+    assert {key[1] for key in svc._chains} <= {2, 4}
+    assert svc.metrics.midchain_admits == 0  # no same-L joiner here
+    c4 = svc.pop_result(r4)
+    np.testing.assert_allclose(
+        np.asarray(c4),
+        np.asarray(ref.su3_mult_ref(_rand_a(1, n_sites=256), _rand_b(1))),
+        rtol=1e-4, atol=1e-4,
+    )
+    svc.pop_result(r2)
+
+
+def test_continuous_occupancy_accounting():
+    svc = _svc(chain_slots=4)
+    for i in range(2):
+        svc.submit(_rand_a(i), _rand_b(i), k=2)
+    svc.run_until_drained()
+    snap = svc.metrics.snapshot()
+    # 2 live slots of 4, two iterations: every dispatch at 0.5 occupancy
+    assert snap["dispatches"] == 2
+    assert snap["mean_batch_occupancy"] == pytest.approx(0.5)
+    assert snap["host_dispatches"] == {"0": 2}
+
+
+# -- host-sharded pool over the simulated host topology -----------------------
+
+
+def test_multihost_service_routes_by_locality():
+    svc = SU3Service(ServiceConfig(autotune=False, tile=16, hosts=2))
+    ids = [svc.submit(_rand_a(i), _rand_b(i), k=1) for i in range(2)]  # L=2
+    ids.append(svc.submit(_rand_a(9, n_sites=256), _rand_b(9), k=1))  # L=4
+    svc.run_until_drained()
+    # the two Ls landed on different hosts; pool keys carry the host
+    assert {key[0] for key in svc.pool_keys()} == {0, 1}
+    assert set(svc.router.assignments()) == {2, 4}
+    snap = svc.metrics.snapshot()
+    assert set(snap["host_dispatches"]) == {"0", "1"}
+    for rid in ids:
+        assert svc.pop_result(rid) is not None
+
+
+def test_multihost_warm_spreads_pool_across_hosts():
+    """warm() is a burst of first-sight Ls with no traffic in between; the
+    router's nominal placement charge must still spread them (a zero-load
+    tie would pin every warmed L — and so all future traffic — to host 0)."""
+    svc = SU3Service(ServiceConfig(autotune=False, tile=16, hosts=2))
+    svc.warm((2, 4))
+    assert {key[0] for key in svc.pool_keys()} == {0, 1}
+    homes = svc.router.assignments()
+    assert homes[2] != homes[4]
+
+
+def test_multihost_rejects_explicit_mesh():
+    with pytest.raises(ValueError, match="EITHER"):
+        SU3Service(ServiceConfig(autotune=False, tile=16, hosts=2), mesh=object())
+
+
+def test_service_config_validation():
+    with pytest.raises(ValueError, match="hosts"):
+        ServiceConfig(autotune=False, tile=16, hosts=0)
+    with pytest.raises(ValueError, match="chain_slots"):
+        ServiceConfig(autotune=False, tile=16, chain_slots=-1)

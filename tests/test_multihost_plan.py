@@ -1,0 +1,213 @@
+"""Multi-host plan layer: MeshSpec topology, lattice site/halo sharding
+rules, locality routing, and (in a forced-device subprocess) 2-host plan
+execution equality with per-host first-touch init."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.su3 import layouts
+from repro.core.su3.layouts import Layout
+from repro.distributed import sharding
+from repro.launch.mesh import DEVICE_AXIS, HOST_AXIS, MeshSpec
+from repro.serve.su3 import LocalityRouter
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _fake_mesh(hosts, dph):
+    """A (hosts, devices) mesh over one repeated device — construction and
+    spec resolution only, never executed (the simulated 2-host mesh)."""
+    dev = jax.devices()[0]
+    return MeshSpec(hosts=hosts, devices_per_host=dph).resolve([dev] * (hosts * dph))
+
+
+# -- MeshSpec topology --------------------------------------------------------
+
+
+def test_meshspec_resolves_host_device_mesh():
+    mesh = _fake_mesh(2, 2)
+    assert mesh.axis_names == (HOST_AXIS, DEVICE_AXIS)
+    assert dict(zip(mesh.axis_names, mesh.devices.shape)) == {"hosts": 2, "devices": 2}
+
+
+def test_meshspec_single_host_is_legacy_site_mesh():
+    mesh = MeshSpec.single_host().resolve([jax.devices()[0]])
+    assert mesh.axis_names == ("sites",)
+
+
+def test_meshspec_validation_and_oversubscription():
+    with pytest.raises(ValueError, match="hosts"):
+        MeshSpec(hosts=0)
+    with pytest.raises(ValueError, match="needs"):
+        MeshSpec(hosts=4, devices_per_host=4).resolve([jax.devices()[0]])
+    # short local pool: every simulated host shares the head of the list
+    spec = MeshSpec(hosts=2, devices_per_host=1)
+    assert spec.host_devices(0) == spec.host_devices(1) == jax.devices()[:1]
+    with pytest.raises(ValueError, match="out of range"):
+        spec.host_devices(2)
+    sub = spec.host_submesh(1)
+    assert sub.axis_names == ("sites",) and sub.devices.size == 1
+
+
+def test_meshspec_host_major_device_assignment():
+    devs = [jax.devices()[0]] * 4
+    spec = MeshSpec(hosts=2, devices_per_host=2)
+    assert spec.host_devices(0, devs) == devs[0:2]
+    assert spec.host_devices(1, devs) == devs[2:4]
+    assert spec.n_devices(devs) == 4 and spec.is_multi_host
+
+
+# -- lattice site/halo sharding rules ----------------------------------------
+
+
+def test_lattice_site_axes_and_spec():
+    mh = _fake_mesh(2, 2)
+    assert sharding.lattice_site_axes(mh) == ("hosts", "devices")
+    assert sharding.lattice_is_multi_host(mh)
+    single = MeshSpec.single_host().resolve([jax.devices()[0]])
+    assert sharding.lattice_site_axes(single) == ("sites",)
+    assert not sharding.lattice_is_multi_host(single)
+
+    codec = layouts.make_codec(Layout.SOA, tile=16)
+    assert sharding.lattice_site_spec(codec, mh) == P(None, None, ("hosts", "devices"))
+    assert sharding.lattice_site_spec(codec, single) == P(None, None, "sites")
+    aos = layouts.make_codec(Layout.AOS, tile=16)
+    assert sharding.lattice_site_spec(aos, mh) == P(("hosts", "devices"), None)
+    aosoa = layouts.make_codec(Layout.AOSOA, tile=16)
+    assert sharding.lattice_site_spec(aosoa, mh) == P(("hosts", "devices"), None, None, None)
+
+
+def test_host_site_ranges_contiguous_slabs():
+    mesh = _fake_mesh(2, 2)
+    assert sharding.host_site_ranges(256, mesh) == [(0, 128), (128, 256)]
+    single = MeshSpec.single_host().resolve([jax.devices()[0]])
+    assert sharding.host_site_ranges(256, single) == [(0, 256)]
+    with pytest.raises(ValueError, match="divide"):
+        sharding.host_site_ranges(255, mesh)
+
+
+def test_halo_spec_boundary_geometry():
+    mesh = _fake_mesh(2, 1)
+    h = sharding.halo_spec(4, mesh)
+    assert h.sites_per_shard == 128
+    assert h.face_sites == 64 and h.boundary_sites == 128
+    assert h.halo_bytes_per_exchange == 128 * 72 * 4
+    assert h.interior_fraction == 0.0  # L=4 over 2 hosts: slab is all surface
+    h8 = sharding.HaloSpec(L=8, n_shards=2, word_bytes=2)  # bf16 storage
+    assert h8.sites_per_shard == 2048 and h8.boundary_sites == 1024
+    assert h8.interior_fraction == 0.5
+    assert h8.halo_bytes_per_exchange == 1024 * 72 * 2
+    single = MeshSpec.single_host().resolve([jax.devices()[0]])
+    assert sharding.halo_spec(4, single).boundary_sites == 0  # unsharded
+
+
+# -- locality routing ---------------------------------------------------------
+
+
+def test_locality_router_sticky_and_least_loaded():
+    r = LocalityRouter(2)
+    h2 = r.host_for(2)
+    r.record_load(h2, 1000.0)
+    h4 = r.host_for(4)
+    assert h4 != h2  # new L lands on the less-loaded host
+    r.record_load(h4, 10_000.0)
+    assert r.host_for(2) == h2 and r.host_for(4) == h4  # sticky forever
+    assert r.peek(8) is None and r.peek(2) == h2
+    assert r.assignments() == {2: h2, 4: h4}
+    with pytest.raises(ValueError, match="n_hosts"):
+        LocalityRouter(0)
+
+
+# -- execution on a real (forced-device) 2-host mesh --------------------------
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+from repro.core.su3 import plan
+from repro.core.su3.engine import EngineConfig
+from repro.core.su3.layouts import Layout
+from repro.launch.mesh import MeshSpec
+
+out = {}
+for layout, variant in (("soa", "pallas"), ("aos", "versionX")):
+    cfg = EngineConfig(L=2, layout=Layout(layout), variant=variant, tile=16,
+                       iterations=1, warmups=0)
+    p1 = plan.build_plan(cfg)  # 1-D site mesh over all 4 devices
+    p2 = plan.build_plan(cfg, MeshSpec(hosts=2, devices_per_host=2))
+    assert p2.is_multi_host and p2.n_hosts == 2
+    assert p2.site_axes == ("hosts", "devices")
+    a1, b1, _, _ = p1.init_data()
+    a2, b2, _, _ = p2.init_data()  # per-host first-touch path
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(a1)), np.asarray(jax.device_get(a2)))
+    c1, c2 = p1.step(a1, b1), p2.step(a2, b2)
+    assert p2.verify(c2)
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(c1)), np.asarray(jax.device_get(c2)))
+    f = p2.fused_step(3)(a2, b2)
+    assert f.sharding == p2.sharding  # chain output stays shard-local
+    out[layout] = p2.describe()
+print(json.dumps(out))
+"""
+
+
+def test_two_host_plan_matches_single_host_subprocess():
+    """Real execution needs >1 device: forced host-platform devices lock at
+    first jax init, so this runs in a subprocess (no hardware needed)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROC],
+        capture_output=True, text=True, env=env, timeout=420, cwd=ROOT,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    described = json.loads(out.stdout.strip().splitlines()[-1])
+    assert described["soa"] == "soa/pallas/t16/sharded@4devx2h/float32"
+    assert described["aos"] == "aos/versionX/t16/sharded@4devx2h/float32"
+
+
+def test_fig7_digest_is_padding_independent():
+    """The divergence gate compares digests across device counts whose plans
+    pad the lattice differently; the RNG draw must cover exactly the live
+    sites or identical results digest differently (false DIVERGENCE)."""
+    from repro.core.su3 import plan
+    from repro.core.su3.engine import EngineConfig
+    from repro.launch.dryrun import _su3_result_digest
+
+    cfg16 = EngineConfig(L=2, tile=16, iterations=1, warmups=0)
+    cfg128 = EngineConfig(L=2, tile=128, iterations=1, warmups=0)
+    p16, p128 = plan.build_plan(cfg16), plan.build_plan(cfg128)
+    assert p16.padded_sites != p128.padded_sites  # genuinely different padding
+    assert _su3_result_digest(p16, seed=0) == _su3_result_digest(p128, seed=0)
+
+
+# -- first-touch shard builder (host-side, no multi-device needed) ------------
+
+
+def test_uniform_phys_shard_matches_codec_pack():
+    from repro.core.su3.plan import _uniform_phys_shard, init_canonical
+
+    for layout in Layout:
+        codec = layouts.make_codec(layout, tile=16)
+        want = np.asarray(codec.pack(init_canonical(32)[0]))
+        got = _uniform_phys_shard(codec, 32, 0)
+        np.testing.assert_array_equal(got, want, err_msg=layout.value)
+    # offset shards only shift AOS metadata words, never the gauge field
+    aos = layouts.make_codec(Layout.AOS, tile=16)
+    shard = _uniform_phys_shard(aos, 16, 100)
+    assert shard[0, layouts.GAUGE_WORDS] == 100.0  # global site id
+    np.testing.assert_array_equal(
+        shard[:, :layouts.GAUGE_WORDS],
+        _uniform_phys_shard(aos, 16, 0)[:, :layouts.GAUGE_WORDS],
+    )
