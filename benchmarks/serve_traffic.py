@@ -11,13 +11,21 @@ Load models over ``repro.serve.su3.SU3Service``:
   closed loop  U concurrent users, each submit -> await -> resubmit for R
                rounds: the sustained-throughput view with a fixed population.
   continuous   the SAME mixed-k open-loop schedule served batch-per-step vs
-               continuous-batching at a FIXED slot count.  Batch-per-step
-               fragments the stream into per-(L, k) buckets — every chain
-               depth dispatches separately, each padded to the slot count —
-               while the continuous path merges all depths of an L into one
-               in-flight chain and admits at iteration boundaries, so its
-               dispatched slots run measurably fuller (the acceptance bar:
-               continuous occupancy > batch occupancy under open-loop load).
+               continuous-batching vs megakernel at a FIXED slot count.
+               Batch-per-step fragments the stream into per-(L, k) buckets —
+               every chain depth dispatches separately, each padded to the
+               slot count — while the continuous path merges all depths of
+               an L into one in-flight chain and admits at iteration
+               boundaries, so its dispatched slots run measurably fuller
+               (the acceptance bar: continuous occupancy > batch occupancy
+               under open-loop load).  The megakernel path additionally
+               collapses host dispatches to ONE per iteration at no-worse
+               occupancy (second acceptance bar, same row).
+  dispatch     per-chain continuous vs megakernel on a MIXED-L stream: the
+               chain path pays one dispatch per (host, L) per iteration,
+               the slot table pays 1 — dispatch counts and sustained GFLOPS
+               recorded (the paper's §5.3 pipeline-throughput tax, measured
+               at the serving layer).
   bf16 row     the same request stream served by a bf16-storage /
                f32-accumulate plan pool vs the f32 pool: measured HLO
                bytes/site must drop, results must agree within 1e-2.
@@ -166,61 +174,79 @@ def closed_loop(
     return row
 
 
+def _make_slot_service(slots: int, continuous: bool, megakernel: bool = False,
+                       horizon: int = 1) -> SU3Service:
+    """Fixed-slot service (every dispatch padded to ``slots``) so occupancy
+    is directly comparable across batch / continuous / megakernel modes."""
+    return SU3Service(ServiceConfig(
+        autotune=False, tile=TILE, continuous=continuous,
+        megakernel=megakernel, chain_horizon=horizon, chain_slots=slots,
+        batcher=BatcherConfig(
+            max_batch=slots, warm_batch_sizes=(slots,), max_queue_depth=256,
+        ),
+    ))
+
+
+def _replay_open_loop(
+    svc: SU3Service, Ls: tuple[int, ...], ks: tuple[int, ...],
+    n_requests: int, rate: float, seed: int, slots: int,
+) -> dict:
+    """Replay ONE Poisson (L, k) stream (identical per seed) against ``svc``."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, n_requests)
+    arrivals = np.cumsum(gaps)
+    population = [
+        (int(rng.choice(Ls)), int(rng.choice(ks)))
+        for _ in range(n_requests)
+    ]
+    population = [
+        (L, k) + _random_request(rng, L**4) for L, k in population
+    ]
+    svc.warm(tuple(sorted(set(Ls))), ks=ks, batch_sizes=(slots,))
+    svc.metrics.reset()
+    t0 = time.perf_counter()
+    submitted = 0
+    while svc.metrics.completed + svc.metrics.rejected < n_requests:
+        now = time.perf_counter() - t0
+        while submitted < n_requests and arrivals[submitted] <= now:
+            _L, k, a, b = population[submitted]
+            svc.submit(a, b, k=k)
+            submitted += 1
+        if svc.pending():
+            svc.step()
+            svc.pop_ready()
+        elif submitted < n_requests:
+            time.sleep(min(arrivals[submitted] - now, 0.01))
+    return svc.metrics.snapshot()
+
+
 def continuous_comparison(
     L: int = 2, n_requests: int = 24, seed: int = 0, slots: int = 4,
     ks: tuple[int, ...] = (1, 2, 4),
 ) -> dict:
-    """Batch-per-step vs continuous batching on one mixed-k open-loop stream.
+    """Batch-per-step vs continuous vs megakernel on one mixed-k stream.
 
-    Both services pad every dispatch to ``slots`` (one warm batch size /
+    All three services pad every dispatch to ``slots`` (one warm batch size /
     ``chain_slots``), so ``mean_batch_occupancy`` — live slots over
     dispatched slots — is directly comparable.  The stream mixes chain
     depths ``ks`` at one lattice size; arrivals are Poisson at an offered
-    rate of ~1.5 requests per measured warm iteration.
+    rate of ~1.5 requests per measured warm iteration.  The megakernel
+    acceptance bar rides on this row: host dispatches collapse to ONE per
+    iteration with occupancy no worse than the per-chain continuous path.
     """
-    def make(continuous: bool) -> SU3Service:
-        return SU3Service(ServiceConfig(
-            autotune=False, tile=TILE, continuous=continuous,
-            chain_slots=slots,
-            batcher=BatcherConfig(
-                max_batch=slots, warm_batch_sizes=(slots,), max_queue_depth=256,
-            ),
-        ))
-
     n_sites = L**4
-    probe = make(False)
+    probe = _make_slot_service(slots, continuous=False)
     rng = np.random.default_rng(seed)
     probe.warm((L,), ks=ks, batch_sizes=(slots,))
     iter_s = _measure_step_s(probe, L, 1, slots, rng)
     rate = 1.5 / max(iter_s, 1e-5)  # ~1.5 arrivals per iteration time
 
     def replay(svc: SU3Service) -> dict:
-        rng = np.random.default_rng(seed)  # identical stream for both modes
-        gaps = rng.exponential(1.0 / rate, n_requests)
-        arrivals = np.cumsum(gaps)
-        population = [
-            (int(rng.choice(ks)),) + _random_request(rng, n_sites)
-            for _ in range(n_requests)
-        ]
-        svc.warm((L,), ks=ks, batch_sizes=(slots,))
-        svc.metrics.reset()
-        t0 = time.perf_counter()
-        submitted = 0
-        while svc.metrics.completed + svc.metrics.rejected < n_requests:
-            now = time.perf_counter() - t0
-            while submitted < n_requests and arrivals[submitted] <= now:
-                k, a, b = population[submitted]
-                svc.submit(a, b, k=k)
-                submitted += 1
-            if svc.pending():
-                svc.step()
-                svc.pop_ready()
-            elif submitted < n_requests:
-                time.sleep(min(arrivals[submitted] - now, 0.01))
-        return svc.metrics.snapshot()
+        return _replay_open_loop(svc, (L,), ks, n_requests, rate, seed, slots)
 
-    batch_snap = replay(make(False))
-    cont_snap = replay(make(True))
+    batch_snap = replay(_make_slot_service(slots, continuous=False))
+    cont_snap = replay(_make_slot_service(slots, continuous=True))
+    mega_snap = replay(_make_slot_service(slots, continuous=True, megakernel=True))
     return {
         "name": "serve_continuous_vs_batch",
         "L": L,
@@ -230,6 +256,7 @@ def continuous_comparison(
         "offered_rate_rps": round(rate, 2),
         "occupancy_batch": batch_snap["mean_batch_occupancy"],
         "occupancy_continuous": cont_snap["mean_batch_occupancy"],
+        "occupancy_megakernel": mega_snap["mean_batch_occupancy"],
         "occupancy_gain": round(
             cont_snap["mean_batch_occupancy"]
             / max(batch_snap["mean_batch_occupancy"], 1e-9), 3
@@ -237,12 +264,71 @@ def continuous_comparison(
         "continuous_higher_occupancy": (
             cont_snap["mean_batch_occupancy"] > batch_snap["mean_batch_occupancy"]
         ),
+        "megakernel_occupancy_no_worse": (
+            mega_snap["mean_batch_occupancy"]
+            >= 0.95 * cont_snap["mean_batch_occupancy"]
+        ),
         "midchain_admits": cont_snap["midchain_admits"],
+        "midchain_admits_megakernel": mega_snap["midchain_admits"],
         "latency_p50_ms_batch": batch_snap["latency_p50_ms"],
         "latency_p50_ms_continuous": cont_snap["latency_p50_ms"],
+        "latency_p50_ms_megakernel": mega_snap["latency_p50_ms"],
         "dispatches_batch": batch_snap["dispatches"],
         "dispatches_continuous": cont_snap["dispatches"],
+        "dispatches_megakernel": mega_snap["dispatches"],
+        "dispatches_per_iteration_megakernel": mega_snap["dispatches_per_iteration"],
+        "megakernel_single_dispatch_per_iteration": (
+            mega_snap["dispatches_per_iteration"] <= 1.0
+        ),
         "sustained_gflops_busy": cont_snap["sustained_gflops_busy"],
+    }
+
+
+def dispatch_overhead(
+    Ls: tuple[int, ...] = (2, 3), n_requests: int = 16, seed: int = 0,
+    slots: int = 4, ks: tuple[int, ...] = (1, 2),
+) -> dict:
+    """Per-chain continuous vs megakernel dispatch bill on a MIXED-L stream.
+
+    With two lattice sizes in flight the per-chain path pays one dispatch
+    per (host, L) chain per iteration; the megakernel slot table pays ONE.
+    This row records the dispatch counts, dispatches/iteration, and
+    sustained GFLOPS of both paths on an identical Poisson stream — the
+    serving-side measurement of the paper's §5.3 pipeline-throughput tax.
+    """
+    probe = _make_slot_service(slots, continuous=False)
+    rng = np.random.default_rng(seed)
+    probe.warm((min(Ls),), ks=(1,), batch_sizes=(slots,))
+    iter_s = _measure_step_s(probe, min(Ls), 1, slots, rng)
+    rate = 1.5 / max(iter_s, 1e-5)
+
+    chain_snap = _replay_open_loop(
+        _make_slot_service(slots, continuous=True),
+        Ls, ks, n_requests, rate, seed, slots)
+    mega_snap = _replay_open_loop(
+        _make_slot_service(slots, continuous=True, megakernel=True),
+        Ls, ks, n_requests, rate, seed, slots)
+    return {
+        "name": "serve_dispatch_overhead",
+        "mix_L": list(Ls),
+        "mix_k": list(ks),
+        "n_requests": n_requests,
+        "slots": slots,
+        "offered_rate_rps": round(rate, 2),
+        "dispatches_chains": chain_snap["dispatches"],
+        "dispatches_megakernel": mega_snap["dispatches"],
+        "dispatch_ratio": round(
+            chain_snap["dispatches"] / max(mega_snap["dispatches"], 1), 3
+        ),
+        "dispatches_per_iteration_chains": chain_snap["dispatches_per_iteration"],
+        "dispatches_per_iteration_megakernel": mega_snap["dispatches_per_iteration"],
+        "megakernel_fewer_dispatches": (
+            mega_snap["dispatches"] < chain_snap["dispatches"]
+        ),
+        "occupancy_chains": chain_snap["mean_batch_occupancy"],
+        "occupancy_megakernel": mega_snap["mean_batch_occupancy"],
+        "gflops_busy_chains": chain_snap["sustained_gflops_busy"],
+        "sustained_gflops_busy": mega_snap["sustained_gflops_busy"],
     }
 
 
@@ -308,6 +394,7 @@ def run(quick: bool = True, seed: int = 0, use_autotune: bool = False) -> list[d
         closed_loop(users, rounds, max(Ls), None if use_autotune else max(ks),
                     seed, use_autotune=use_autotune),
         continuous_comparison(min(Ls), n_requests=16 if quick else 48, seed=seed),
+        dispatch_overhead(Ls, n_requests=12 if quick else 32, seed=seed),
         bf16_plan_comparison(max(Ls), seed),
     ]
     return rows
@@ -331,6 +418,17 @@ def main(argv: list[str] | None = None) -> int:
         if r["name"] == "serve_continuous_vs_batch" and not r["continuous_higher_occupancy"]:
             print("FAIL: continuous batching did not beat batch-per-step "
                   "occupancy under open-loop load", file=sys.stderr)
+            ok = False
+        if r["name"] == "serve_continuous_vs_batch" and not (
+            r["megakernel_single_dispatch_per_iteration"]
+            and r["megakernel_occupancy_no_worse"]
+        ):
+            print("FAIL: megakernel did not hold 1 dispatch/host/iteration "
+                  "at no-worse occupancy", file=sys.stderr)
+            ok = False
+        if r["name"] == "serve_dispatch_overhead" and not r["megakernel_fewer_dispatches"]:
+            print("FAIL: megakernel did not reduce mixed-L dispatch count",
+                  file=sys.stderr)
             ok = False
         if r["name"] == "serve_bf16_vs_f32" and not (
             r["bf16_fewer_bytes"] and r["within_1e-2"] and r["bf16_verified"]

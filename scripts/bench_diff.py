@@ -22,18 +22,26 @@ A missing baseline (first PR, artifact not committed at REV) is a clean
 exit — there is nothing to regress against.
 
 Note on noise: quick-mode rows on a loaded CPU dev host can swing past 15%
-in either direction (single-iteration L=4 timings are the worst); a flagged
-row that recovers on re-run is timer noise, not a regression.  On the real
+in either direction (single-iteration L=4 timings are the worst).  The gate
+therefore RE-MEASURES flagged rows before failing: the benchmark harness is
+re-run twice more and each flagged row is judged on the MEDIAN of its three
+observations — a row that recovers is timer noise, not a regression, and
+passes without human retry.  ``--no-retry`` keeps the old single-pass
+behavior (CI contexts that re-run the whole job themselves).  On the real
 TPU target the variance is far below the threshold.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import statistics
 import subprocess
 import sys
+import tempfile
 
 DEFAULT_ARTIFACT = "BENCH_su3.json"
+RETRY_RUNS = 2  # re-measurements per flagged gate (median of 1 + RETRY_RUNS)
 # (metric key, minimum absolute baseline value worth gating on) — rows below
 # the floor are pure timer noise at CPU quick-mode sizes.
 _METRICS = (("GFLOPS", 0.05), ("sustained_gflops_busy", 0.01))
@@ -108,6 +116,76 @@ def diff(
     return compared, regressions
 
 
+def remeasure_rows(
+    keys: set[tuple[str, str]], runs: int = RETRY_RUNS, quick: bool = True,
+) -> dict[tuple[str, str], list[float]]:
+    """Re-run the benchmark harness ``runs`` times; collect the flagged rows.
+
+    Each run regenerates the artifact in a temp dir at the SAME mode
+    (quick/full) that produced the one under test — the rows are not
+    independently runnable, the harness is the measurement unit — and only
+    the flagged (table, name) values are kept.  Rows in the ``dispatch``
+    table come from ``scripts/profile_dispatch.py``, so that profiler is
+    re-run (merging into the same temp artifact) whenever a dispatch row is
+    flagged.  A run that fails or omits a row contributes nothing for it;
+    the median is taken over whatever observations exist.
+    """
+    mode = ["--quick"] if quick else []
+    profiler = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "profile_dispatch.py")
+    need_dispatch = any(table == "dispatch" for table, _name in keys)
+    out: dict[tuple[str, str], list[float]] = {key: [] for key in keys}
+    for _ in range(runs):
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "bench_remeasure.json")
+            subprocess.run(
+                [sys.executable, "-m", "benchmarks.run"] + mode
+                + ["--json", path],
+                capture_output=True, text=True,
+            )
+            if need_dispatch:
+                subprocess.run(
+                    [sys.executable, profiler] + mode + ["--json", path],
+                    capture_output=True, text=True,
+                )
+            if not os.path.exists(path):
+                continue
+            with open(path) as f:
+                rows = collect_rows(json.load(f), apply_floor=False)
+            for key in keys:
+                if key in rows:
+                    out[key].append(rows[key])
+    return out
+
+
+def retry_regressions(
+    regressions: list[dict], threshold: float,
+    remeasure_fn=None,
+) -> tuple[list[dict], list[dict]]:
+    """Median-of-3 verdict on flagged rows: (still regressed, recovered).
+
+    Each flagged row's single-pass current value is pooled with the
+    re-measured observations; the row fails only if the MEDIAN still drops
+    past the threshold.
+    """
+    if remeasure_fn is None:
+        remeasure_fn = remeasure_rows
+    keys = {(r["table"], r["name"]) for r in regressions}
+    extra = remeasure_fn(keys)
+    still, recovered = [], []
+    for r in regressions:
+        vals = [r["current"]] + extra.get((r["table"], r["name"]), [])
+        med = float(statistics.median(vals))
+        base = r["baseline"]
+        drop = (base - med) / base if base > 0 else 0.0
+        verdict = dict(
+            r, current_median=round(med, 3), observations=len(vals),
+            delta_pct=round(-drop * 100, 1),
+        )
+        (still if drop > threshold else recovered).append(verdict)
+    return still, recovered
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default=DEFAULT_ARTIFACT,
@@ -118,6 +196,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--threshold", type=float, default=0.15,
                     help="max tolerated fractional GFLOPS drop "
                          "(default: %(default)s)")
+    ap.add_argument("--no-retry", action="store_true",
+                    help="fail flagged rows immediately instead of "
+                         "re-measuring them (median of 3)")
     args = ap.parse_args(argv)
 
     baseline = load_baseline(args.baseline)
@@ -141,6 +222,22 @@ def main(argv: list[str] | None = None) -> int:
         print(f"{c['table'] + '/' + c['name']:<{width}}  "
               f"{c['baseline']:>10.3f} -> {c['current']:>10.3f} GF/s  "
               f"({c['delta_pct']:+6.1f}%){flag}")
+    if regressions and not args.no_retry:
+        print(f"\nbench_diff: {len(regressions)} flagged row(s); re-measuring "
+              f"(median of {1 + RETRY_RUNS}) before failing the gate...")
+        quick = bool(current.get("quick", True))  # re-measure at the same mode
+        regressions, recovered = retry_regressions(
+            regressions, args.threshold,
+            remeasure_fn=lambda keys: remeasure_rows(keys, quick=quick),
+        )
+        for r in recovered:
+            print(f"  recovered {r['table']}/{r['name']}: median "
+                  f"{r['current_median']:.3f} over {r['observations']} runs "
+                  f"({r['delta_pct']:+.1f}%) — timer noise, not a regression")
+        for r in regressions:
+            print(f"  CONFIRMED {r['table']}/{r['name']}: median "
+                  f"{r['current_median']:.3f} over {r['observations']} runs "
+                  f"({r['delta_pct']:+.1f}%)", file=sys.stderr)
     if regressions:
         print(f"\nbench_diff: {len(regressions)}/{len(compared)} rows regressed "
               f">{args.threshold:.0%}", file=sys.stderr)

@@ -1,20 +1,31 @@
 """SU3 autotune: the paper's §4/§5.4 methodology as a driver, with a cache.
 
-Hillclimbs the SU3 kernel the way the paper does — enumerate candidates
-(layout, variant, Pallas tile), napkin-math the expected effect, measure,
-keep the winner:
+Hillclimbs the SU3 kernel the way the paper does — enumerate candidates,
+napkin-math the expected effect, measure, keep the winner:
 
   * layout sweep charges the traffic model (AOS streams 320 B/site vs SoA
     288 B — the paper's streaming-store/padding point) and cross-checks it
     at the HLO level by lowering the *physical* ExecutionPlan step, so the
     packed layout actually shows up in the counted bytes;
-  * tile sweep bounds the VMEM working set (the paper's register-blocking
-    point re-derived for HBM->VMEM) and measures each candidate;
-  * ``best_config`` selects the tile with the best *measured* GFLOPS among
-    VMEM-fitting, verified candidates and persists the decision in a JSON
-    cache keyed by (backend, device_kind, layout, dtype, L, n_devices) — a
-    second call loads the tuned plan with zero measurements, so engines,
-    serving, and benchmarks all start from the tuned tuple for free.
+  * the **pipeline sweep** enumerates the joint (tile, fused_k) grid,
+    *ranks* it with the three-term roofline model — memory (traffic model,
+    amortized over the fused chain), compute (VPU roof), and the paper's
+    §5.3 **issue-rate term**, estimated from the lowered kernel's
+    instruction mix — and only MEASURES the top ``prune`` fraction.  The
+    exhaustive sweep's measurement bill drops by >= 2x while the model keeps
+    the true winner inside the measured set (asserted by tests);
+  * ``best_config`` selects the candidate with the best *measured* GFLOPS
+    among verified, VMEM-fitting candidates and persists the decision —
+    tile, fused chain depth, and the ``pipeline`` provenance block (schema
+    version, candidates ranked vs measured, predicted rank of the winner) —
+    in a JSON cache keyed by (schema, backend, device_kind, layout, dtype,
+    L, n_devices).  A second call loads the tuned plan with zero
+    measurements, so engines, serving, and benchmarks all start from the
+    tuned tuple for free.
+
+Cache schema: v2 (the ``pipeline`` block).  Keys carry the version, so
+pre-pipeline (v1) entries simply miss and re-measure — they are never read
+with missing fields.
 
 Cache location: ``$REPRO_SU3_CACHE_DIR`` or ``~/.cache/repro_su3``.
 """
@@ -22,9 +33,10 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 import tempfile
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -32,11 +44,19 @@ import jax.numpy as jnp
 from repro.core import hlo_costs, roofline
 from repro.core.su3 import layouts, registry, variants
 from repro.core.su3.engine import EngineConfig, SU3Engine
+from repro.core.su3.layouts import Layout
 from repro.core.su3.plan import make_raw_step
 from repro.kernels import su3_matmul
 
 CACHE_ENV = "REPRO_SU3_CACHE_DIR"
 CACHE_FILE = "su3_autotune.json"
+SCHEMA_VERSION = 2  # v2: joint (tile, fused_k) pipeline sweep + provenance
+DEFAULT_PRUNE = 0.5  # measure the top half of the model-ranked candidates
+DEFAULT_TILES = (128, 256, 512, 1024, 2048, 4096)
+DEFAULT_KS = (1, 2, 4, 8)
+# per-dispatch fixed cost in issue slots (kernel launch + grid sequencing);
+# amortized over the fused chain, which is what makes deep K win at small L
+DISPATCH_ISSUE_SLOTS = 5_000.0
 
 
 @dataclasses.dataclass
@@ -105,6 +125,10 @@ def tile_sweep(
     The working-set bound honors the sweep's dtypes: bf16 storage halves the
     resident tile bytes, while a wider accumulate re-inflates them (the
     upcast tiles are what actually sit in VMEM).
+
+    Exhaustive marginal sweep (every tile at k=1), kept for the CLI and
+    diagnostics; production tuning goes through the roofline-pruned joint
+    :func:`pipeline_sweep`.
     """
     word_b = layouts.WORD_BYTES[dtype]
     accum_b = layouts.WORD_BYTES[accum_dtype] if accum_dtype else None
@@ -180,6 +204,198 @@ def layout_sweep(n_sites: int = 4096) -> list[dict]:
 
 
 # ---------------------------------------------------------------------------
+# Roofline-pruned pipeline sweep: rank the (tile, fused_k) grid with the
+# three-term model, measure only the top fraction.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineCandidate:
+    """One point of the joint (Pallas tile, fused chain depth) grid."""
+
+    tile: int
+    fused_k: int
+
+
+def enumerate_candidates(
+    tiles: tuple[int, ...] = DEFAULT_TILES,
+    ks: tuple[int, ...] = DEFAULT_KS,
+    dtype: str = "float32",
+    accum_dtype: str = "",
+    hw: roofline.HardwareSpec = roofline.TPU_V5E,
+) -> list[PipelineCandidate]:
+    """The VMEM-fitting (tile, fused_k) grid — the exhaustive candidate set
+    the pruner ranks.  Tiles whose resident working set (at the wider of
+    storage/accumulate width) exceeds ``hw``'s tile store never become
+    candidates."""
+    word_b = layouts.WORD_BYTES[dtype]
+    accum_b = layouts.WORD_BYTES[accum_dtype] if accum_dtype else None
+    return [
+        PipelineCandidate(tile, k)
+        for tile in tiles
+        if su3_matmul.vmem_bytes(tile, word_b, accum_b) <= hw.vmem_bytes
+        for k in ks
+    ]
+
+
+_INSTR_MODEL_CACHE: dict[tuple[str, str, int], tuple[float, float]] = {}
+
+
+def kernel_instruction_model(
+    dtype: str = "float32", accum_dtype: str = "", tile: int = 256
+) -> tuple[float, float]:
+    """(base, per_multiply) issued-instruction counts of ONE kernel grid step.
+
+    Estimated from the *lowered* kernel's instruction mix, the way the paper
+    derives the PIUMA bound from its 12-load/2-store/12-FMA pattern: lower
+    the fused planar kernel at chain depths 1 and 2 over a single-tile grid
+    and difference the loop-aware HLO instruction counts —
+
+        instructions_per_step(k) ~= base + per_multiply * k
+
+    where ``base`` is the fixed staging cost (tile load/store, bookkeeping)
+    and ``per_multiply`` the chained-FMA body.  Instruction counts are
+    vector-ISSUE counts: one op however wide its lane payload, which is
+    exactly why a larger tile lowers the issue bill per site.
+    """
+    key = (dtype, accum_dtype, tile)
+    if key not in _INSTR_MODEL_CACHE:
+        codec = layouts.make_codec(
+            Layout.SOA, tile=tile, dtype=dtype, accum_dtype=accum_dtype
+        )
+        entry = registry.get_kernel("pallas")
+
+        def instrs(k: int) -> float:
+            step = make_raw_step(codec, entry, tile=tile, k_iters=k, interpret=True)
+            a_p = jnp.zeros((2, layouts.PLANAR_ROWS, tile), codec.word_dtype)
+            b_p = jnp.zeros((2, layouts.PLANAR_ROWS), codec.word_dtype)
+            compiled = jax.jit(step).lower(a_p, b_p).compile()
+            return hlo_costs.analyze_hlo(compiled.as_text()).instructions
+
+        i1, i2 = instrs(1), instrs(2)
+        per_mult = max(i2 - i1, 1.0)
+        base = max(i1 - per_mult, 0.0)
+        _INSTR_MODEL_CACHE[key] = (base, per_mult)
+    return _INSTR_MODEL_CACHE[key]
+
+
+def predict_pipeline(
+    cand: PipelineCandidate,
+    L: int,
+    dtype: str = "float32",
+    accum_dtype: str = "",
+    hw: roofline.HardwareSpec = roofline.TPU_V5E,
+) -> dict[str, Any]:
+    """Three-term per-multiply roofline prediction for one candidate.
+
+    memory_s amortizes the one HBM read + write over the fused chain (the
+    chain runs on the VMEM-resident tile), compute_s is the VPU roof, and
+    issue_s charges the instruction mix of ``grid_steps`` kernel steps plus
+    the per-dispatch launch cost, both amortized over the chain — the three
+    rates whose max is the predicted bound.
+    """
+    n_sites = L**4
+    padded = ((n_sites + cand.tile - 1) // cand.tile) * cand.tile
+    k = cand.fused_k
+    tm = layouts.TrafficModel.for_dtype(Layout.SOA, padded, dtype)
+    # every term charges the PADDED work (what the kernel executes); the
+    # predicted throughput credits only the USEFUL flops (what the engine
+    # reports), so an oversized tile at small L ranks as badly as it measures
+    compute_s = float(tm.flops_per_site) * padded / hw.peak_flops_vpu
+    memory_s = tm.total_bytes / k / hw.hbm_bw
+    issue_s = 0.0
+    if hw.issue_rate:
+        base, per_mult = kernel_instruction_model(dtype, accum_dtype)
+        grid_steps = padded // cand.tile
+        instrs = grid_steps * (base / k + per_mult) + DISPATCH_ISSUE_SLOTS / k
+        issue_s = instrs / hw.issue_rate
+    bound_s = max(compute_s, memory_s, issue_s)
+    terms = {"compute": compute_s, "memory": memory_s, "issue": issue_s}
+    useful_flops = float(tm.flops_per_site) * n_sites  # per multiply
+    return {
+        "tile": cand.tile,
+        "fused_k": k,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "issue_s": issue_s,
+        "bound_s": bound_s,
+        "dominant": max(terms, key=terms.get),
+        "predicted_gflops": round(useful_flops / bound_s / 1e9, 3),
+    }
+
+
+def measure_candidate(
+    cand: PipelineCandidate, L: int = 8, dtype: str = "float32", accum_dtype: str = ""
+) -> dict[str, Any]:
+    """Measured per-multiply GFLOPS of one (tile, fused_k) candidate — the
+    fused chain run exactly as it deploys."""
+    word_b = layouts.WORD_BYTES[dtype]
+    accum_b = layouts.WORD_BYTES[accum_dtype] if accum_dtype else None
+    vmem = su3_matmul.vmem_bytes(cand.tile, word_b, accum_b)
+    cfg = EngineConfig(
+        L=L, dtype=dtype, variant="pallas", layout=Layout.SOA,
+        tile=cand.tile, accum_dtype=accum_dtype, iterations=2, warmups=1,
+    )
+    r = SU3Engine(cfg).run_fused(k=cand.fused_k, reps=2)
+    return {
+        "tile": cand.tile,
+        "fused_k": cand.fused_k,
+        "vmem_kib": vmem // 1024,
+        "measured_gflops": round(r.gflops, 3),
+        "verified": r.verified,
+    }
+
+
+def pipeline_sweep(
+    L: int = 8,
+    dtype: str = "float32",
+    accum_dtype: str = "",
+    *,
+    prune: float = DEFAULT_PRUNE,
+    tiles: tuple[int, ...] = DEFAULT_TILES,
+    ks: tuple[int, ...] = DEFAULT_KS,
+    measure_fn: Callable[[PipelineCandidate], dict[str, Any]] | None = None,
+    hw: roofline.HardwareSpec = roofline.TPU_V5E,
+) -> dict[str, Any]:
+    """Rank the candidate grid with the roofline model; measure the top slice.
+
+    Args:
+        prune: fraction of the model-ranked candidate set to measure
+            (``>= 1`` = exhaustive; the default measures half).  At least
+            one candidate is always measured.
+        measure_fn: measurement override (tests inject deterministic
+            measurements; production uses :func:`measure_candidate`).
+
+    Returns:
+        ``{"rows", "candidates_total", "candidates_measured", "prune"}`` —
+        each row carries the model prediction (compute/memory/issue seconds,
+        predicted GFLOPS, ``predicted_rank``) joined with the measurement.
+    """
+    cands = enumerate_candidates(tiles, ks, dtype, accum_dtype, hw)
+    if not cands:
+        raise RuntimeError("no VMEM-fitting pipeline candidate")
+    preds = [predict_pipeline(c, L, dtype, accum_dtype, hw) for c in cands]
+    order = sorted(range(len(cands)), key=lambda i: -preds[i]["predicted_gflops"])
+    n_meas = len(cands) if prune >= 1 else max(1, math.ceil(prune * len(cands)))
+    if measure_fn is None:
+        measure_fn = lambda c: measure_candidate(  # noqa: E731
+            c, L=L, dtype=dtype, accum_dtype=accum_dtype
+        )
+    rows = []
+    for rank, i in enumerate(order[:n_meas]):
+        row = dict(preds[i])
+        row.update(measure_fn(cands[i]))
+        row["predicted_rank"] = rank
+        rows.append(row)
+    return {
+        "rows": rows,
+        "candidates_total": len(cands),
+        "candidates_measured": n_meas,
+        "prune": prune,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Persistent cache
 # ---------------------------------------------------------------------------
 
@@ -191,9 +407,20 @@ def cache_dir() -> str:
 
 
 def cache_key(
-    *, backend: str, device_kind: str, layout: str, dtype: str, L: int, n_devices: int
+    *,
+    backend: str,
+    device_kind: str,
+    layout: str,
+    dtype: str,
+    L: int,
+    n_devices: int,
+    schema: int = SCHEMA_VERSION,
 ) -> str:
-    return f"{backend}|{device_kind}|{layout}|{dtype}|L{L}|d{n_devices}"
+    """Versioned cache key.  The ``v{schema}`` prefix is the invalidation
+    mechanism: entries written before the pipeline sweep (v1, no version
+    prefix, no ``pipeline`` block) simply never match a v2 lookup and
+    re-measure cleanly instead of being read with missing fields."""
+    return f"v{schema}|{backend}|{device_kind}|{layout}|{dtype}|L{L}|d{n_devices}"
 
 
 def _cache_path(directory: str | None) -> str:
@@ -239,9 +466,11 @@ def _device_identity() -> tuple[str, str, int]:
 
 
 # keys a cached config must carry to be served without re-measuring; entries
-# written by older builds (no fused_k) or truncated by a crashed writer fall
-# through to a fresh sweep instead of KeyError-ing every caller.
-_REQUIRED_CONFIG_KEYS = frozenset({"layout", "variant", "tile", "fused_k"})
+# written by older builds (no fused_k; no pipeline block) or truncated by a
+# crashed writer fall through to a fresh sweep instead of KeyError-ing every
+# caller.  The versioned cache_key already isolates v1 entries — this guard
+# additionally catches a v2-keyed entry written incompletely.
+_REQUIRED_CONFIG_KEYS = frozenset({"layout", "variant", "tile", "fused_k", "pipeline"})
 
 
 def _valid_cache_hit(hit: Any) -> dict[str, Any] | None:
@@ -262,22 +491,29 @@ def best_config(
     cache: bool = True,
     cache_directory: str | None = None,
     refresh: bool = False,
+    prune: float = DEFAULT_PRUNE,
+    measure_fn: Callable[[PipelineCandidate], dict[str, Any]] | None = None,
 ) -> dict[str, Any]:
-    """The tuned production config: SoA + the tile with the best MEASURED GFLOPS
-    + the fused chain depth K with the best measured per-multiply GFLOPS.
+    """The tuned production config: SoA + the (tile, fused_k) pipeline point
+    with the best MEASURED GFLOPS among the roofline-ranked top candidates.
 
-    Selection is by measured throughput among VMEM-fitting, verified tiles —
-    not the largest fitting tile, which on real devices can sit past the
-    occupancy knee.  K is then swept at the winning tile (the knee depends on
-    (backend, L)).  The decision is persisted; later calls (any process) with
-    the same (backend, device_kind, layout, dtype, L, n_devices) key do zero
-    measurements.  Corrupt or partial cache entries (older schema, truncated
-    writes) are treated as misses and re-measured, never crashed on.
+    The joint grid is ranked by the three-term model (memory amortized over
+    the chain, VPU compute, instruction-issue rate) and only the top
+    ``prune`` fraction is measured — selection stays by measured throughput
+    among verified, VMEM-fitting candidates, the model just decides what is
+    worth timing.  The decision is persisted with its ``pipeline``
+    provenance (schema version, candidate counts, the winner's predicted
+    rank); later calls (any process) with the same versioned
+    (backend, device_kind, layout, dtype, L, n_devices) key do zero
+    measurements.  Pre-pipeline (v1) entries never match the v2 key, and
+    corrupt or partial v2 entries (truncated writes, missing ``pipeline``
+    block) are treated as misses and re-measured, never crashed on.
 
-    ``accum_dtype`` tunes mixed-precision plans as deployed: the sweeps run
-    the f32-accumulate kernel (different VMEM resident set and fused-K knee
-    than the pure storage dtype), and the cache key carries the accumulate
-    width so bf16-pure and bf16+f32-accum decisions never alias.
+    ``accum_dtype`` tunes mixed-precision plans as deployed: the sweep runs
+    the f32-accumulate kernel (different VMEM resident set, instruction mix,
+    and fused-K knee than the pure storage dtype), and the cache key carries
+    the accumulate width so bf16-pure and bf16+f32-accum decisions never
+    alias.
     """
     backend, device_kind, n_devices = _device_identity()
     dtype_key = f"{dtype}+acc-{accum_dtype}" if accum_dtype else dtype
@@ -290,17 +526,25 @@ def best_config(
         if config is not None:
             return dict(config, cached=True)
 
-    rows = [r for r in tile_sweep(L=L, dtype=dtype, accum_dtype=accum_dtype)
-            if r["fits_vmem"] and r["verified"]]
+    sweep = pipeline_sweep(
+        L=L, dtype=dtype, accum_dtype=accum_dtype, prune=prune,
+        measure_fn=measure_fn,
+    )
+    rows = [r for r in sweep["rows"] if r["verified"]]
     if not rows:
-        raise RuntimeError("no VMEM-fitting verified tile candidate")
+        raise RuntimeError("no verified pipeline candidate in the measured set")
     winner = max(rows, key=lambda r: r["measured_gflops"])
-    krows = [r for r in k_sweep(L=L, dtype=dtype, tile=winner["tile"],
-                                accum_dtype=accum_dtype) if r["verified"]]
-    kwinner = max(krows, key=lambda r: r["measured_gflops"]) if krows else {"k": 1}
     config = {
         "layout": "soa", "variant": "pallas",
-        "tile": winner["tile"], "fused_k": kwinner["k"],
+        "tile": winner["tile"], "fused_k": winner["fused_k"],
+        "pipeline": {
+            "schema": SCHEMA_VERSION,
+            "prune": sweep["prune"],
+            "candidates_total": sweep["candidates_total"],
+            "candidates_measured": sweep["candidates_measured"],
+            "predicted_gflops": winner.get("predicted_gflops", 0.0),
+            "predicted_rank": winner.get("predicted_rank", 0),
+        },
     }
     if cache:
         store_cache_entry(
@@ -345,13 +589,16 @@ def tuned_fused_k(
 
 
 if __name__ == "__main__":
-    print("== tile sweep (VMEM blocking) ==")
+    print("== tile sweep (VMEM blocking, exhaustive marginal) ==")
     for r in tile_sweep():
         print("  ", r)
-    print("== k sweep (fused chain depth) ==")
+    print("== k sweep (fused chain depth, exhaustive marginal) ==")
     for r in k_sweep():
         print("  ", r)
     print("== layout sweep (traffic) ==")
     for r in layout_sweep():
+        print("  ", r)
+    print("== pipeline sweep (roofline-pruned joint (tile, fused_k)) ==")
+    for r in pipeline_sweep()["rows"]:
         print("  ", r)
     print("best:", best_config())

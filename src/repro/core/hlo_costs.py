@@ -72,6 +72,27 @@ _COLLECTIVE_KINDS = {
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
     "collective-permute", "ragged-all-to-all", "collective-broadcast",
 }
+_MEMORY_OPS = {
+    "copy", "copy-start", "convert", "reshape", "transpose", "broadcast",
+    "concatenate", "pad", "slice", "dynamic-slice", "dynamic-update-slice",
+    "gather", "scatter", "bitcast-convert", "reverse",
+}
+_CONTROL_OPS = {"while", "conditional", "call", "async-start", "fusion", "custom-call"}
+_ARITH_OPS = {"dot", "convolution", "reduce", "reduce-window"}
+
+
+def _instr_class(op: str) -> str:
+    """Issue class of one HLO opcode (paper-§5.3 instruction-mix buckets)."""
+    kind = op[:-6] if op.endswith("-start") else op
+    if kind in _COLLECTIVE_KINDS:
+        return "collective"
+    if op in _CONTROL_OPS:
+        return "control"
+    if op in _MEMORY_OPS:
+        return "memory"
+    if op in _ELEMENTWISE_1 or op in _ELEMENTWISE_8 or op in _ARITH_OPS:
+        return "arith"
+    return "other"
 
 
 def _shape_numel_bytes(shape_text: str) -> tuple[float, float]:
@@ -118,6 +139,13 @@ class Cost:
     transcendentals: float = 0.0
     collective_link_bytes: float = 0.0
     collective_by_kind: dict[str, float] = dataclasses.field(default_factory=dict)
+    # loop-aware instruction counts by issue class — the paper-§5.3 raw
+    # material: a pipeline-throughput (issue-rate) bound needs instruction
+    # counts, not flops.  Classes: "arith" (FMA-adjacent compute), "memory"
+    # (data movement: slices, copies, converts, fusion boundaries),
+    # "control" (loops/calls/branches), "other".
+    instructions: float = 0.0
+    instr_by_class: dict[str, float] = dataclasses.field(default_factory=dict)
 
     def __iadd__(self, other: "Cost") -> "Cost":
         self.flops += other.flops
@@ -126,6 +154,9 @@ class Cost:
         self.collective_link_bytes += other.collective_link_bytes
         for k, v in other.collective_by_kind.items():
             self.collective_by_kind[k] = self.collective_by_kind.get(k, 0.0) + v
+        self.instructions += other.instructions
+        for k, v in other.instr_by_class.items():
+            self.instr_by_class[k] = self.instr_by_class.get(k, 0.0) + v
         return self
 
     def scaled(self, m: float) -> "Cost":
@@ -135,7 +166,13 @@ class Cost:
             self.transcendentals * m,
             self.collective_link_bytes * m,
             {k: v * m for k, v in self.collective_by_kind.items()},
+            self.instructions * m,
+            {k: v * m for k, v in self.instr_by_class.items()},
         )
+
+    def count_instr(self, cls: str, n: float = 1.0) -> None:
+        self.instructions += n
+        self.instr_by_class[cls] = self.instr_by_class.get(cls, 0.0) + n
 
 
 def parse_computations(hlo_text: str) -> tuple[dict[str, Computation], str, set[str]]:
@@ -325,6 +362,9 @@ class HloCostModel:
             line = instr.line
             if op in _FREE_OPS:
                 continue
+            if op.endswith("-done"):  # async second halves carry no new work
+                continue
+            total.count_instr(_instr_class(op))
             kind = op[:-6] if op.endswith("-start") else op
             if kind in _COLLECTIVE_KINDS:
                 c = Cost()
@@ -334,8 +374,6 @@ class HloCostModel:
                 if materializing:
                     c.bytes = instr.result_bytes + self._operand_bytes(comp, line, iname)
                 total += c
-                continue
-            if op.endswith("-done") or op == "copy-done":
                 continue
             if op == "while":
                 m = _WHILE_REFS_RE.search(line)

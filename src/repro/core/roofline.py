@@ -13,6 +13,10 @@ bound from instruction counts:
   compute_s    = HLO flops per device       / chip peak flops/s
   memory_s     = HLO bytes per device       / chip HBM bytes/s
   collective_s = sum over collective ops of ring-model time per device
+  issue_s      = HLO instructions per device / pipeline issue slots/s
+                 (the paper's §5.3 term itself, measurable when the spec
+                 carries ``issue_rate`` and the cost model an instruction
+                 count — what the roofline-pruned autotuner ranks with)
 
 ``cost_analysis()`` on an SPMD executable reports the **per-device** program
 (verified empirically: an 8-way sharded matmul reports total/8 flops), so all
@@ -43,6 +47,12 @@ class HardwareSpec:
     ici_links: int  # usable links per chip
     hbm_bytes: float  # HBM capacity per chip
     vmem_bytes: float  # VMEM per core (Pallas tile budget)
+    # The paper's §5.3 fourth rate: instruction-issue slots per second of the
+    # scalar/VLIW pipeline that sequences the kernel (0 = not modeled).  One
+    # "instruction" here is one issued op however wide its vector payload —
+    # exactly why a wide-lane kernel can be issue-bound long before it is
+    # flops- or bandwidth-bound.
+    issue_rate: float = 0.0
 
     @property
     def ridge_flops_per_byte(self) -> float:
@@ -60,6 +70,9 @@ TPU_V5E = HardwareSpec(
     ici_links=4,
     hbm_bytes=16 * 1024**3,
     vmem_bytes=16 * 1024**2,
+    # one VPU/VMEM op issued per scalar-core cycle at ~940 MHz; each op covers
+    # 8x128 lanes, so issue binds exactly when tiles are small or chains short
+    issue_rate=0.94e9,
 )
 
 # The paper's two platforms, for the Xeon/PIUMA comparison benchmarks.
@@ -72,6 +85,7 @@ XEON_8280_SOCKET = HardwareSpec(
     ici_links=3,
     hbm_bytes=96 * 1024**3,
     vmem_bytes=1 * 1024**2,  # L2 as the "tile" store
+    issue_rate=3.0e11,  # 28 cores x 4-wide issue x ~2.7 GHz
 )
 
 PIUMA_CORE = HardwareSpec(
@@ -83,6 +97,9 @@ PIUMA_CORE = HardwareSpec(
     ici_links=1,
     hbm_bytes=1 * 1024**3,
     vmem_bytes=256 * 1024,  # SPAD
+    # §5.3: 26 issued ops (12 loads + 2 stores + 12 FMAs) per 24 flops bound
+    # the core at 3.6 GF/s -> 3.6e9 * 26/24 ~= 3.9e9 issue slots/s
+    issue_rate=3.9e9,
 )
 
 HARDWARE = {h.name: h for h in (TPU_V5E, XEON_8280_SOCKET, PIUMA_CORE)}
@@ -215,6 +232,10 @@ class RooflineReport:
     use_vpu_roof: bool = False  # SU3: vector-unit kernels can't see the MXU
     xla_flops_unscaled: float = 0.0  # raw cost_analysis (loop bodies once)
     xla_bytes_unscaled: float = 0.0
+    # issued-instruction count per device (loop-aware, from the HLO mix) —
+    # feeds the paper's §5.3 pipeline-throughput term; 0 = not measured
+    instructions_per_device: float = 0.0
+    instr_by_class: dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def peak(self) -> float:
@@ -233,8 +254,21 @@ class RooflineReport:
         return self.collective_link_bytes / self.hw.ici_bw
 
     @property
+    def issue_s(self) -> float:
+        """Pipeline-throughput term: issued instructions over the issue rate.
+
+        The paper's PIUMA result in model form — SU3_Bench there is bounded
+        neither by flops nor by bandwidth but by how fast the pipeline can
+        *issue* its 12-load/2-store/12-FMA pattern.  Zero when either side is
+        unmeasured/unmodeled, so two-term users are unaffected.
+        """
+        if not self.hw.issue_rate or not self.instructions_per_device:
+            return 0.0
+        return self.instructions_per_device / self.hw.issue_rate
+
+    @property
     def bound_s(self) -> float:
-        return max(self.compute_s, self.memory_s, self.collective_s)
+        return max(self.compute_s, self.memory_s, self.collective_s, self.issue_s)
 
     @property
     def dominant(self) -> str:
@@ -242,6 +276,7 @@ class RooflineReport:
             "compute": self.compute_s,
             "memory": self.memory_s,
             "collective": self.collective_s,
+            "issue": self.issue_s,
         }
         return max(terms, key=terms.get)  # type: ignore[arg-type]
 
@@ -275,6 +310,9 @@ class RooflineReport:
             "compute_s": self.compute_s,
             "memory_s": self.memory_s,
             "collective_s": self.collective_s,
+            "issue_s": self.issue_s,
+            "instructions_per_device": self.instructions_per_device,
+            "instr_by_class": self.instr_by_class,
             "dominant": self.dominant,
             "bound_s": self.bound_s,
             "model_flops": self.model_flops,
@@ -286,7 +324,8 @@ class RooflineReport:
         return (
             f"{self.name}: compute {self.compute_s * 1e3:.3f} ms | "
             f"memory {self.memory_s * 1e3:.3f} ms | "
-            f"collective {self.collective_s * 1e3:.3f} ms "
+            f"collective {self.collective_s * 1e3:.3f} ms | "
+            f"issue {self.issue_s * 1e3:.3f} ms "
             f"-> {self.dominant}-bound; useful/HLO flops "
             f"{self.useful_flops_ratio:.3f}, roofline frac {self.roofline_fraction:.3f}"
         )
@@ -332,6 +371,8 @@ def analyze_compiled(
         use_vpu_roof=use_vpu_roof,
         xla_flops_unscaled=float(raw.get("flops", 0.0)),
         xla_bytes_unscaled=float(raw.get("bytes accessed", 0.0)),
+        instructions_per_device=cost.instructions,
+        instr_by_class=dict(cost.instr_by_class),
     )
 
 

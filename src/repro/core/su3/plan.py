@@ -253,6 +253,11 @@ def make_raw_step(
             f"kernel {kernel.name!r} does not support layout {codec.layout.value!r} "
             f"(supported: {[l.value for l in kernel.layouts]})"
         )
+    if kernel.form == registry.BATCHED:
+        raise ValueError(
+            f"kernel {kernel.name!r} is slot-batched; it dispatches through "
+            f"ExecutionPlan.fused_batched_step, not a single-lattice step"
+        )
     if k_iters > 1 and kernel.form == registry.PLANAR and not kernel.supports_fused:
         raise ValueError(f"kernel {kernel.name!r} does not support fused iteration")
     if codec.is_mixed_precision and not kernel.supports_accum_dtype():
@@ -291,6 +296,61 @@ def make_raw_step(
             return jax.lax.fori_loop(0, k_iters, body, a_phys)
 
     return raw_step
+
+
+MEGAKERNEL_VARIANT = "pallas_megakernel"
+
+
+def make_raw_batched_step(
+    codec: LayoutCodec,
+    kernel: registry.KernelEntry,
+    *,
+    tile: int,
+    max_k: int,
+    interpret: bool | None = None,
+    alias: bool = False,
+) -> Callable[[jax.Array, jax.Array, jax.Array], jax.Array]:
+    """Unjitted slot-batched step (a_batch, b_batch, slot_k) -> c_batch.
+
+    The megakernel analogue of :func:`make_raw_step`: the physical slot table
+    ``a_batch (slots, ...)`` flattens to the batched planar view, advances by
+    ``slot_k`` chained multiplies per slot in ONE kernel dispatch, and folds
+    back into the physical layout.
+    """
+    if kernel.form != registry.BATCHED:
+        raise ValueError(
+            f"kernel {kernel.name!r} has form {kernel.form!r}; the batched "
+            f"step needs a {registry.BATCHED!r}-form kernel"
+        )
+    if not kernel.supports_layout(codec.layout):
+        raise ValueError(
+            f"kernel {kernel.name!r} does not support layout {codec.layout.value!r} "
+            f"(supported: {[l.value for l in kernel.layouts]})"
+        )
+    if not codec.supports_planar_view:
+        raise ValueError(
+            f"batched kernel {kernel.name!r} needs a planar-view layout, "
+            f"got {codec.layout.value!r}"
+        )
+    if codec.is_mixed_precision and not kernel.supports_accum_dtype():
+        raise ValueError(
+            f"kernel {kernel.name!r} cannot accumulate at {codec.accum_dtype!r} "
+            f"over {codec.dtype!r} storage (no accum_dtype support)"
+        )
+
+    def raw_batched(
+        a_batch: jax.Array, b_batch: jax.Array, slot_k: jax.Array
+    ) -> jax.Array:
+        a_p = jax.vmap(codec.planar_view)(a_batch)
+        kw: dict[str, Any] = {"tile": tile, "max_k": max_k, "alias": alias}
+        if codec.is_mixed_precision:
+            kw["accum_dtype"] = codec.accum_dtype
+        if interpret is not None:
+            kw["interpret"] = interpret
+        c_p = kernel.fn(a_p, b_batch, slot_k, **kw)
+        return jax.vmap(codec.from_planar_view)(c_p, a_batch)
+
+    return raw_batched
 
 
 class ExecutionPlan:
@@ -338,6 +398,9 @@ class ExecutionPlan:
         self.raw_step = make_raw_step(self.codec, self.kernel, tile=cfg.tile)
         self.step = jax.jit(self.raw_step, out_shardings=self.sharding, donate_argnums=())
         self._fused_steps: dict[int, Callable[[jax.Array, jax.Array], jax.Array]] = {}
+        self._batched_steps: dict[
+            tuple[int, int], Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+        ] = {}
 
     @classmethod
     def build(
@@ -357,6 +420,21 @@ class ExecutionPlan:
         :func:`repro.distributed.sharding.halo_spec`); n_shards = n_hosts."""
         return dist_sharding.HaloSpec(
             L=self.cfg.L, n_shards=self.n_hosts, word_bytes=self.cfg.word_bytes
+        )
+
+    def lattice_batch_sharding(self) -> NamedSharding:
+        """Sharding for a LEADING whole-lattice batch axis (request batches,
+        megakernel slot tables): the batch axis shards over the mesh's site
+        axes — whole lattices per device, host-major — and every physical
+        dimension is replicated.  The single owner of the layout ->
+        physical-rank mapping for batched forms."""
+        phys_ndim = 1 + {Layout.AOS: 2, Layout.SOA: 3, Layout.AOSOA: 4}[
+            Layout(self.cfg.layout)
+        ]
+        axes = self.site_axes
+        batch_axis = axes if len(axes) > 1 else axes[0]
+        return NamedSharding(
+            self.mesh, P(*((batch_axis,) + (None,) * (phys_ndim - 1)))
         )
 
     # -- fused multi-iteration stepping ---------------------------------------
@@ -382,6 +460,51 @@ class ExecutionPlan:
                 donate_argnums=(0,) if on_tpu else (),
             )
         return self._fused_steps[k]
+
+    def fused_batched_step(
+        self, slots: int, max_k: int = 8
+    ) -> Callable[[jax.Array, jax.Array, jax.Array], jax.Array]:
+        """ONE megakernel dispatch advancing a whole slot table.
+
+        ``fused_batched_step(slots, max_k)(a_batch, b_batch, slot_k)`` equals
+        applying ``step`` ``slot_k[s]`` times to slot ``s`` independently —
+        bit-identical, but every slot's chain runs inside one pallas_call
+        whose grid spans (slots x site tiles), so a serving iteration costs
+        one host dispatch however many chains are in flight.  Per-slot depths
+        are data (scalar-prefetched), clamped to the static ``max_k``; a slot
+        with depth 0 passes through untouched.
+
+        On TPU the slot table is donated and the kernel's C block aliases A's
+        buffer, so in-flight slots update in place with zero copies.
+
+        Args:
+            slots: slot-table size (the leading axis of ``a_batch``).
+            max_k: static in-kernel chain bound; one compiled program serves
+                every per-slot depth in ``[0, max_k]``.
+        """
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        if max_k < 1:
+            raise ValueError(f"max_k must be >= 1, got {max_k}")
+        key = (slots, max_k)
+        if key not in self._batched_steps:
+            kernel = registry.get_kernel(MEGAKERNEL_VARIANT)
+            on_tpu = jax.default_backend() == "tpu"
+            raw = make_raw_batched_step(
+                self.codec, kernel, tile=self.cfg.tile, max_k=max_k, alias=on_tpu
+            )
+            # whole lattices per device (when the table divides the mesh) —
+            # the same sharding BatchedLatticeRunner gives request batches
+            out_sh = (
+                self.lattice_batch_sharding()
+                if slots % self.n_devices == 0 else None
+            )
+            self._batched_steps[key] = jax.jit(
+                raw,
+                out_shardings=out_sh,
+                donate_argnums=(0,) if on_tpu else (),
+            )
+        return self._batched_steps[key]
 
     # -- placement policies ----------------------------------------------------
 
@@ -507,11 +630,7 @@ class BatchedLatticeRunner:
         self.cfg = cfg
         self.mesh = self.plan.mesh
         self.n_devices = self.plan.n_devices
-        phys_ndim = 1 + {"aos": 2, "soa": 3, "aosoa": 4}[cfg.layout.value]
-        axes = self.plan.site_axes
-        batch_axis = axes if len(axes) > 1 else axes[0]
-        batch_spec = P(*((batch_axis,) + (None,) * (phys_ndim - 1)))
-        self._sharding = NamedSharding(self.mesh, batch_spec)
+        self._sharding = self.plan.lattice_batch_sharding()
         self._steps: dict[int, Callable[[jax.Array, jax.Array], jax.Array]] = {}
 
     def _batched_step(self, k: int) -> Callable[[jax.Array, jax.Array], jax.Array]:

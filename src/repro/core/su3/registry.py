@@ -13,6 +13,11 @@ enough metadata for a plan to validate and wire a kernel without per-kernel
       ``"planar"`` — fn(a_p, b_p, *, tile, k_iters, interpret) on the
       flattened planar view (a_p: (2, 36, S), b_p: (2, 36)); the plan feeds
       it the codec's planar view directly (zero-copy for SoA).
+      ``"batched"`` — fn(a_p, b_p, slot_k, *, tile, max_k, interpret) on a
+      slot-batched planar view (a_p: (slots, 2, 36, S), b_p: (slots, 2, 36),
+      slot_k: (slots,) int32); ONE dispatch advances every slot by its own
+      chain depth.  Consumed only by ``ExecutionPlan.fused_batched_step`` —
+      a batched kernel cannot serve as a plan's single-lattice ``step``.
   ``layouts``
       which physical layouts the kernel can be planned with.
   ``backends``
@@ -35,6 +40,7 @@ from repro.core.su3.layouts import Layout
 
 CANONICAL = "canonical"
 PLANAR = "planar"
+BATCHED = "batched"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,7 +110,7 @@ def register_kernel(
     Raises:
         ValueError: on an unknown ``form``.
     """
-    if form not in (CANONICAL, PLANAR):
+    if form not in (CANONICAL, PLANAR, BATCHED):
         raise ValueError(f"unknown kernel form {form!r}")
 
     def deco(fn: Callable) -> Callable:

@@ -36,6 +36,12 @@ no jax in this module):
     instead of waiting for the whole chain to drain; a request for another
     L can never join (the lattice shapes differ) and queues for its own
     chain.
+  * **megakernel slot table** — :class:`SlotTable` is the per-host
+    generalization the batched K-chain megakernel dispatches against: slots
+    hold requests of ANY lattice size (the kernel pads every slot to one
+    site capacity), each with its own remaining-iteration count, and one
+    dispatch per host per iteration advances them all.  Mid-chain admission
+    degenerates to a slot swap — seat the request, set its depth.
 """
 from __future__ import annotations
 
@@ -359,6 +365,130 @@ class InflightChain:
             if r is None:
                 continue
             self._remaining[i] -= 1
+            if self._remaining[i] <= 0:
+                done.append((i, r))
+                self._req[i] = None
+                self._remaining[i] = 0
+        self.iterations_run = 0 if self.live == 0 else self.iterations_run + 1
+        return done
+
+
+@dataclasses.dataclass
+class SlotTable:
+    """Slot bookkeeping of one host's megakernel dispatch table.
+
+    The megakernel generalization of :class:`InflightChain`: ONE table per
+    host, slots hold in-flight requests of ANY lattice size (the batched
+    K-chain kernel pads every slot to a common site capacity), and one
+    dispatch per host per iteration advances every live slot by its own
+    scheduled depth.  What was "mid-chain admission" in the per-L chain
+    becomes a *slot swap*: seat the request in a free slot, set its
+    remaining count — no shape compatibility gate, because the dispatched
+    shape is the table's, not the request's.
+
+    Array state (the physical slot-table batch) lives with the service; this
+    is the scheduling half, testable without a device.
+    """
+
+    slots: int
+    iterations_run: int = 0
+    _req: list[ServeRequest | None] = dataclasses.field(default_factory=list)
+    _remaining: list[int] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if self.slots < 1:
+            raise ValueError(f"slot table needs >= 1 slot, got {self.slots}")
+        self._req = [None] * self.slots
+        self._remaining = [0] * self.slots
+
+    # -- occupancy -------------------------------------------------------------
+
+    @property
+    def live(self) -> int:
+        return sum(1 for r in self._req if r is not None)
+
+    @property
+    def occupancy(self) -> float:
+        return self.live / self.slots
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self._req) if r is None]
+
+    def requests(self) -> list[ServeRequest]:
+        return [r for r in self._req if r is not None]
+
+    def occupants(self) -> list[tuple[int, ServeRequest, int]]:
+        """Live ``(slot, request, remaining)`` triples — what a capacity-grow
+        re-seats into the replacement table."""
+        return [
+            (i, r, self._remaining[i])
+            for i, r in enumerate(self._req)
+            if r is not None
+        ]
+
+    @property
+    def max_live_L(self) -> int:
+        """Largest lattice size seated (0 when empty) — the capacity floor."""
+        return max((r.L for r in self._req if r is not None), default=0)
+
+    # -- admission (slot swap) -------------------------------------------------
+
+    def can_admit(self) -> bool:
+        return self.live < self.slots
+
+    def admit(self, req: ServeRequest, remaining: int | None = None) -> int:
+        """Seat ``req`` in a free slot; returns the slot index.
+
+        Any lattice size is admissible — the megakernel pads every slot to
+        the table's site capacity, so there is no shape gate to fail (the
+        *capacity* gate lives with the service, which grows the physical
+        table when a larger L arrives).
+        """
+        for i, r in enumerate(self._req):
+            if r is None:
+                self._req[i] = req
+                self._remaining[i] = req.k if remaining is None else remaining
+                return i
+        raise ValueError(f"slot table is full ({self.slots} slots)")
+
+    @property
+    def midchain(self) -> bool:
+        """True once the table has advanced at least one iteration with live
+        slots — a later admit is a mid-chain slot swap."""
+        return self.iterations_run > 0
+
+    # -- advancement -----------------------------------------------------------
+
+    def plan_k(self, horizon: int = 1) -> list[int]:
+        """Per-slot chain depths for the NEXT megakernel dispatch.
+
+        Each live slot advances ``min(remaining, horizon)`` multiplies; dead
+        slots get 0 (the kernel passes them through).  ``horizon`` trades
+        admission latency for dispatch amortization: 1 re-opens admission at
+        every multiply, larger values chain deeper in-kernel between
+        boundaries.
+        """
+        if horizon < 1:
+            raise ValueError(f"horizon must be >= 1, got {horizon}")
+        return [
+            min(self._remaining[i], horizon) if self._req[i] is not None else 0
+            for i in range(self.slots)
+        ]
+
+    def advance(self, applied: list[int]) -> list[tuple[int, ServeRequest]]:
+        """Account one executed dispatch that ran ``applied[i]`` multiplies on
+        slot ``i``; returns [(slot, request)] finished.
+
+        Call AFTER the dispatch with the ``plan_k`` schedule that was run.
+        A table that fully drains resets to fresh (``midchain`` False).
+        """
+        if len(applied) != self.slots:
+            raise ValueError(f"applied must cover all {self.slots} slots")
+        done: list[tuple[int, ServeRequest]] = []
+        for i, r in enumerate(self._req):
+            if r is None:
+                continue
+            self._remaining[i] -= applied[i]
             if self._remaining[i] <= 0:
                 done.append((i, r))
                 self._req[i] = None

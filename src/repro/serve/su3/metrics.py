@@ -53,6 +53,10 @@ class ServiceMetrics:
     midchain_admits: int = 0  # continuous mode: requests seated into an
     # already-running chain (the admissions batch-per-step cannot make)
     host_dispatches: dict = dataclasses.field(default_factory=dict)  # host -> n
+    iterations: int = 0  # continuous/megakernel scheduling turns (iteration
+    # boundaries); dispatches/iterations is the dispatch-amortization figure
+    # the megakernel path drives to 1.0 per host
+    host_iterations: dict = dataclasses.field(default_factory=dict)  # host -> n
 
     def reset(self) -> None:
         """Zero every counter and restart the wall clock (post-warmup)."""
@@ -90,6 +94,12 @@ class ServiceMetrics:
 
     def record_midchain_admits(self, n: int = 1) -> None:
         self.midchain_admits += n
+
+    def record_iteration(self, host: int = 0) -> None:
+        """Account one iteration boundary (continuous/megakernel scheduling
+        turn) for ``host`` — the denominator of dispatches-per-iteration."""
+        self.iterations += 1
+        self.host_iterations[host] = self.host_iterations.get(host, 0) + 1
 
     def record_completion(self, latency_s: float) -> None:
         self.completed += 1
@@ -134,6 +144,10 @@ class ServiceMetrics:
                 self.padded_slots / total_slots, 3
             ) if total_slots else 0.0,
             "midchain_admits": self.midchain_admits,
+            "iterations": self.iterations,
+            "dispatches_per_iteration": round(
+                self.dispatches / self.iterations, 3
+            ) if self.iterations else 0.0,
             "host_dispatches": {str(h): n for h, n in sorted(self.host_dispatches.items())},
             "queue_depth_max": max(self.queue_depths) if self.queue_depths else 0,
             "queue_depth_mean": round(

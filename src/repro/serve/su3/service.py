@@ -41,6 +41,16 @@ chain).  A request for a different L is shape-incompatible with the
 in-flight batch and queues for its own chain.  Under open-loop load this
 keeps the dispatched slots fuller than batch-per-step — measured by
 ``benchmarks/serve_traffic.py``'s continuous-vs-batch row.
+
+``megakernel`` (``ServiceConfig(continuous=True, megakernel=True)``): the
+continuous path's dispatch bill — one kernel launch per (host, L) chain per
+iteration, the pipeline-throughput tax the paper measures on PIUMA — is
+collapsed to ONE batched K-chain ``pallas_call`` per host per iteration.
+Each host keeps a single mixed-L :class:`SlotTable`; every slot is padded to
+the table's site capacity (grown, with live slots re-seated, when a larger L
+arrives), per-slot chain depths ride in as scalar-prefetched data, and
+mid-chain admission becomes a slot swap.  ``chain_horizon`` chains that many
+multiplies in-kernel between admission boundaries.
 """
 from __future__ import annotations
 
@@ -62,6 +72,7 @@ from repro.serve.su3.batcher import (
     InflightChain,
     LocalityRouter,
     ServeRequest,
+    SlotTable,
 )
 from repro.serve.su3.metrics import ServiceMetrics, request_flops
 
@@ -94,6 +105,15 @@ class ServiceConfig:
             admission into in-flight chains) instead of batch-per-step.
         chain_slots: slots per in-flight chain (continuous mode);
             0 = the batcher's ``padded_size(max_batch)``.
+        megakernel: continuous mode dispatches ONE batched K-chain
+            megakernel per host per iteration over a single mixed-L slot
+            table (``ExecutionPlan.fused_batched_step``) instead of one
+            k=1 dispatch per (host, L) chain — the dispatch-amortized path
+            (requires ``continuous=True``).
+        chain_horizon: megakernel in-kernel chain depth per slot between
+            admission boundaries; 1 re-opens admission at every multiply,
+            larger values amortize more dispatches per request at the cost
+            of admission latency.
     """
 
     dtype: str = "float32"  # storage dtype of every plan in the pool
@@ -107,6 +127,8 @@ class ServiceConfig:
     hosts: int = 1  # shard the warm pool across this many hosts
     continuous: bool = False  # iteration-boundary admission dispatch
     chain_slots: int = 0  # continuous-chain slots; 0 = padded max_batch
+    megakernel: bool = False  # one batched dispatch/host/iteration (continuous)
+    chain_horizon: int = 1  # megakernel in-kernel chain depth between boundaries
 
     def __post_init__(self) -> None:
         # the pool serves the planar Pallas kernel; AOS has no planar view,
@@ -129,6 +151,14 @@ class ServiceConfig:
             raise ValueError(f"hosts must be >= 1, got {self.hosts}")
         if self.chain_slots < 0:
             raise ValueError(f"chain_slots must be >= 0, got {self.chain_slots}")
+        if self.megakernel and not self.continuous:
+            raise ValueError(
+                "megakernel dispatch is the continuous path's amortizer; "
+                "set continuous=True (batch-per-step already fuses its k "
+                "chain in one dispatch)"
+            )
+        if self.chain_horizon < 1:
+            raise ValueError(f"chain_horizon must be >= 1, got {self.chain_horizon}")
 
 
 class _ChainArrays:
@@ -172,6 +202,51 @@ class _ChainArrays:
         self.b_p = self.b_p.at[slot].set(jnp.zeros_like(self.b_p[slot]))
 
 
+class _SlotTableArrays:
+    """Device-array half of one host's megakernel slot table (scheduling
+    half: :class:`~repro.serve.su3.batcher.SlotTable`).
+
+    Every slot is padded to ``cap_L``'s site capacity, so requests of ANY
+    L <= cap_L share the one dispatched shape; the whole table advances in
+    ONE ``fused_batched_step`` dispatch with per-slot chain depths.  Dead
+    slots carry zero lattices and depth 0 (the kernel passes them through).
+    """
+
+    def __init__(self, runner: BatchedLatticeRunner, slots: int, max_k: int):
+        self.runner = runner
+        self.slots = slots
+        self.max_k = max_k
+        self.cap_L = runner.cfg.L
+        plan = runner.plan
+        zero_canon = jnp.zeros((slots, plan.padded_sites, 4, 3, 3), jnp.complex64)
+        self.a_phys = jax.vmap(plan.codec.pack)(zero_canon)
+        self.b_p = jnp.zeros((slots, 2, 36), plan.codec.word_dtype)
+        self._step = plan.fused_batched_step(slots, max_k=max_k)
+
+    def seat(self, slot: int, a: jax.Array, b: jax.Array) -> None:
+        """Pack one request's canonical (A, B) into ``slot``, zero-padding
+        its sites up to the table's capacity."""
+        a_one = self.runner.pack_batch(a[None])[0]
+        b_one = self.runner.plan.codec.pack_b(b)
+        self.a_phys = self.a_phys.at[slot].set(a_one)
+        self.b_p = self.b_p.at[slot].set(b_one)
+
+    def advance(self, slot_k: list[int]) -> None:
+        """ONE megakernel dispatch: slot ``i`` advances ``slot_k[i]``
+        multiplies in-kernel (0 = pass-through)."""
+        ks = jnp.asarray(slot_k, jnp.int32)
+        self.a_phys = self._step(self.a_phys, self.b_p, ks)
+
+    def result(self, slot: int, n_sites: int) -> jax.Array:
+        """Canonical complex C of ``slot``, sliced to the live sites."""
+        return self.runner.plan.codec.unpack(self.a_phys[slot], n_sites)
+
+    def clear(self, slot: int) -> None:
+        """Zero a freed slot."""
+        self.a_phys = self.a_phys.at[slot].set(jnp.zeros_like(self.a_phys[slot]))
+        self.b_p = self.b_p.at[slot].set(jnp.zeros_like(self.b_p[slot]))
+
+
 class SU3Service:
     """Dynamic-batching SU3 lattice serving over a warm ExecutionPlan pool.
 
@@ -207,6 +282,8 @@ class SU3Service:
         self._rr_host = 0  # round-robin cursor over hosts for step()
         # continuous mode: (host, L) -> (InflightChain, _ChainArrays)
         self._chains: dict[tuple[int, int], tuple[InflightChain, _ChainArrays]] = {}
+        # megakernel mode: host -> (SlotTable, _SlotTableArrays)
+        self._tables: dict[int, tuple[SlotTable, _SlotTableArrays]] = {}
 
     # -- warm pool -----------------------------------------------------------
 
@@ -295,7 +372,15 @@ class SU3Service:
                 for k in ks:
                     runner.multiply(a, b, k=k).block_until_ready()
                     self._seen_shapes.add(self._shape_key(runner, L, k, bsz))
-            if self.cfg.continuous:
+            if self.cfg.megakernel:
+                # per-slot depths are data, so ONE compile at this capacity
+                # serves every (k mix, admission pattern) the table will see
+                slots = self._chain_slots()
+                arrays = _SlotTableArrays(runner, slots, max_k=self.cfg.chain_horizon)
+                arrays.advance([0] * slots)
+                arrays.a_phys.block_until_ready()
+                self._seen_shapes.add(("mega", L, slots, self.cfg.chain_horizon))
+            elif self.cfg.continuous:
                 arrays = _ChainArrays(runner, self._chain_slots())
                 arrays.advance()
                 arrays.a_phys.block_until_ready()
@@ -361,7 +446,9 @@ class SU3Service:
     def _work_pending(self) -> bool:
         if any(len(b) for b in self._batchers):
             return True
-        return any(chain.live for chain, _ in self._chains.values())
+        if any(chain.live for chain, _ in self._chains.values()):
+            return True
+        return any(table.live for table, _ in self._tables.values())
 
     def pending(self) -> bool:
         """True while any request waits in a queue or rides an in-flight
@@ -380,7 +467,11 @@ class SU3Service:
         for _ in range(self.cfg.hosts):
             host = self._rr_host
             self._rr_host = (self._rr_host + 1) % self.cfg.hosts
-            if self.cfg.continuous:
+            if self.cfg.megakernel:
+                entry = self._tables.get(host)
+                if len(self._batchers[host]) or (entry and entry[0].live):
+                    return self._step_megakernel(host)
+            elif self.cfg.continuous:
                 if len(self._batchers[host]) or any(
                     h == host and chain.live
                     for (h, _L), (chain, _a) in self._chains.items()
@@ -431,6 +522,7 @@ class SU3Service:
         """One iteration boundary for ``host``: admit, then advance each of
         its chains by one multiply."""
         batcher = self._batchers[host]
+        self.metrics.record_iteration(host)
         slots = self._chain_slots()
 
         # 1) admission — existing chains first (mid-chain admits), then new
@@ -485,6 +577,90 @@ class SU3Service:
             done_s = time.perf_counter()
             for slot, req in chain.advance():
                 self._results[req.req_id] = arrays.result(slot, n_sites)
+                arrays.clear(slot)
+                self.metrics.record_completion(done_s - req.arrival_s)
+                completed += 1
+        self.metrics.record_queue_depth(self.queued())
+        return completed
+
+    # -- megakernel dispatch (one batched K-chain call per host) --------------
+
+    def _table_for(self, host: int, cap_L: int) -> tuple[SlotTable, _SlotTableArrays]:
+        """The host's slot table, built (or capacity-grown) for ``cap_L``.
+
+        Growing re-seats every live slot's *current* mid-chain lattice into
+        the larger-capacity arrays at the same slot index — the scheduling
+        half (SlotTable) is untouched, so remaining counts and admission
+        bookkeeping survive the grow.
+        """
+        slots = self._chain_slots()
+        entry = self._tables.get(host)
+        if entry is not None and cap_L <= entry[1].cap_L:
+            return entry
+        runner = self.runner_for(cap_L, host)
+        arrays = _SlotTableArrays(runner, slots, max_k=self.cfg.chain_horizon)
+        if entry is None:
+            self._tables[host] = (SlotTable(slots), arrays)
+        else:
+            table, old = entry
+            for slot, req, _remaining in table.occupants():
+                a_mid = old.result(slot, req.n_sites)  # mid-chain state
+                arrays.seat(slot, a_mid, req.b)
+            self._tables[host] = (table, arrays)
+        return self._tables[host]
+
+    def _step_megakernel(self, host: int) -> int:
+        """One iteration boundary for ``host``: slot-swap admission across
+        ALL queued lattice sizes, then ONE batched K-chain dispatch."""
+        batcher = self._batchers[host]
+        self.metrics.record_iteration(host)
+        queued = batcher.queued_Ls()
+        entry = self._tables.get(host)
+        if entry is None and not queued:
+            return 0
+
+        # 1) admission — a slot swap per request, any L (grow capacity first
+        #    so every queued size fits the one dispatched shape)
+        if queued:
+            cap_L = max(queued + ([entry[1].cap_L] if entry else []))
+            table, arrays = self._table_for(host, cap_L)
+            for L in queued:
+                free = self._chain_slots() - table.live
+                if not free:
+                    break
+                admitted = batcher.next_for_L(L, free)
+                for req in admitted:
+                    slot = table.admit(req)
+                    arrays.seat(slot, req.a, req.b)
+                if admitted and table.midchain:
+                    self.metrics.record_midchain_admits(len(admitted))
+        table, arrays = self._tables[host]
+
+        # 2) ONE megakernel dispatch advancing every live slot by its own
+        #    scheduled depth (min(remaining, horizon))
+        completed = 0
+        ks = table.plan_k(self.cfg.chain_horizon)
+        if any(ks):
+            occupants = table.occupants()
+            shape_key = ("mega", arrays.cap_L, table.slots, self.cfg.chain_horizon)
+            cold = shape_key not in self._seen_shapes
+            live = table.live
+            t0 = time.perf_counter()
+            arrays.advance(ks)
+            arrays.a_phys.block_until_ready()
+            step_s = time.perf_counter() - t0
+            self._seen_shapes.add(shape_key)
+            self.metrics.record_dispatch(
+                live=live, padded=table.slots, step_s=step_s,
+                flops=sum(
+                    request_flops(req.n_sites, ks[slot])
+                    for slot, req, _rem in occupants
+                ),
+                cold=cold, host=host,
+            )
+            done_s = time.perf_counter()
+            for slot, req in table.advance(ks):
+                self._results[req.req_id] = arrays.result(slot, req.n_sites)
                 arrays.clear(slot)
                 self.metrics.record_completion(done_s - req.arrival_s)
                 completed += 1

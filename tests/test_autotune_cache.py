@@ -1,8 +1,11 @@
-"""Persistent autotune cache: round-trip, corruption fallback, key isolation.
+"""Persistent autotune cache: round-trip, corruption fallback, key isolation,
+and the v2 (pipeline) schema bump.
 
-Sweeps are monkeypatched throughout — these tests pin the cache *protocol*
-(what gets measured when, what gets persisted, what survives a bad file),
-not kernel timings.
+Measurements and the instruction-model lowering are monkeypatched throughout —
+these tests pin the cache *protocol* (what gets measured when, what gets
+persisted, what survives a bad file or an old-schema entry), not kernel
+timings.  The pruning/selection quality of the sweep itself is covered by
+``test_autotune_pruning.py``.
 """
 import json
 import os
@@ -12,146 +15,187 @@ import pytest
 from repro.core import autotune
 from repro.core.su3.layouts import Layout
 
+# four candidates whose model ranking (with the patched instruction model)
+# is deterministic: (512, 8) > (128, 4) > (256, 2) > (4096, 1); the default
+# prune=0.5 measures the top TWO only.
+_CANDS = (
+    autotune.PipelineCandidate(128, 4),
+    autotune.PipelineCandidate(256, 2),
+    autotune.PipelineCandidate(4096, 1),
+    autotune.PipelineCandidate(512, 8),
+)
 
-def _patch_sweeps(monkeypatch, winners=None):
-    """Replace tile_sweep/k_sweep with counting fakes.
 
-    ``winners`` maps dtype -> (tile, k) so dtype-isolation tests can hand
-    each dtype a distinguishable tuned tuple.
+def _patch_pipeline(monkeypatch, winners=None):
+    """Replace the measurement + instruction-model with counting fakes.
+
+    ``winners`` maps dtype (or, when set, accum_dtype) -> (tile, fused_k):
+    that candidate measures 3.0 GF/s, everything else 1.0, so dtype-isolation
+    tests can hand each dtype a distinguishable tuned tuple.  Winners must
+    sit in the model's top half — (128, 4) and (512, 8) do.
     """
     winners = winners or {}
-    calls = {"tile": 0, "k": 0, "k_tile_arg": None, "tile_accum_arg": None}
+    calls = {"measure": 0, "accum_arg": None, "cands": []}
 
-    def fake_tile_sweep(tiles=(), L=8, dtype="float32", accum_dtype=""):
-        calls["tile"] += 1
-        calls["tile_accum_arg"] = accum_dtype
-        tile = winners.get(accum_dtype or dtype, winners.get(dtype, (128, 4)))[0]
-        return [
-            {"tile": tile, "vmem_kib": 36, "fits_vmem": True,
-             "measured_gflops": 2.0, "verified": True},
-            {"tile": 4096, "vmem_kib": 1154, "fits_vmem": True,
-             "measured_gflops": 1.0, "verified": True},
-        ]
+    monkeypatch.setattr(
+        autotune, "kernel_instruction_model",
+        lambda dtype="float32", accum_dtype="", tile=256: (100.0, 50.0),
+    )
+    monkeypatch.setattr(
+        autotune, "enumerate_candidates",
+        lambda tiles=(), ks=(), dtype="float32", accum_dtype="", hw=None: list(_CANDS),
+    )
 
-    def fake_k_sweep(ks=(1, 2, 4, 8), L=8, dtype="float32", tile=512, accum_dtype=""):
-        calls["k"] += 1
-        calls["k_tile_arg"] = tile
-        k = winners.get(accum_dtype or dtype, winners.get(dtype, (128, 4)))[1]
-        return [
-            {"k": 1, "measured_gflops": 1.0, "verified": True},
-            {"k": k, "measured_gflops": 3.0, "verified": True},
-        ]
+    def fake_measure(cand, L=8, dtype="float32", accum_dtype=""):
+        calls["measure"] += 1
+        calls["accum_arg"] = accum_dtype
+        calls["cands"].append((cand.tile, cand.fused_k))
+        win = winners.get(accum_dtype or dtype, winners.get(dtype, (128, 4)))
+        gf = 3.0 if (cand.tile, cand.fused_k) == win else 1.0
+        return {"tile": cand.tile, "fused_k": cand.fused_k, "vmem_kib": 36,
+                "measured_gflops": gf, "verified": True}
 
-    monkeypatch.setattr(autotune, "tile_sweep", fake_tile_sweep)
-    monkeypatch.setattr(autotune, "k_sweep", fake_k_sweep)
+    monkeypatch.setattr(autotune, "measure_candidate", fake_measure)
     return calls
 
 
-def test_best_config_roundtrips_tile_and_fused_k(tmp_path, monkeypatch):
-    calls = _patch_sweeps(monkeypatch)
+def test_best_config_roundtrips_pipeline_tuple(tmp_path, monkeypatch):
+    calls = _patch_pipeline(monkeypatch)
     first = autotune.best_config(L=4, cache_directory=str(tmp_path))
-    assert calls == {"tile": 1, "k": 1, "k_tile_arg": 128, "tile_accum_arg": ""}
-    # measured winners, NOT the largest fitting tile / deepest chain
+    # pruned: top HALF of the 4-candidate set measured, ranked model-first
+    assert calls["measure"] == 2
+    assert calls["cands"] == [(512, 8), (128, 4)]
+    # measured winner among the pruned set, NOT the model's favorite
     assert first["tile"] == 128 and first["fused_k"] == 4
     assert first["cached"] is False
+    assert first["pipeline"]["schema"] == autotune.SCHEMA_VERSION
+    assert first["pipeline"]["candidates_total"] == 4
+    assert first["pipeline"]["candidates_measured"] == 2
     second = autotune.best_config(L=4, cache_directory=str(tmp_path))
-    assert calls["tile"] == 1 and calls["k"] == 1, "second call must not measure"
+    assert calls["measure"] == 2, "second call must not measure"
     assert second["tile"] == 128 and second["fused_k"] == 4
     assert second["cached"] is True
     # refresh forces a full re-measure
     autotune.best_config(L=4, cache_directory=str(tmp_path), refresh=True)
-    assert calls["tile"] == 2 and calls["k"] == 2
+    assert calls["measure"] == 4
     # the tuned tuple flows into an EngineConfig / the serving chain depth
     cfg = autotune.tuned_engine_config(L=4, cache_directory=str(tmp_path), iterations=1)
     assert cfg.tile == 128 and cfg.variant == "pallas" and cfg.layout == Layout.SOA
     assert autotune.tuned_fused_k(L=4, cache_directory=str(tmp_path)) == 4
-    assert calls["tile"] == 2, "tuned_* helpers must hit the cache"
+    assert calls["measure"] == 4, "tuned_* helpers must hit the cache"
 
 
 def test_corrupt_cache_file_remeasures_instead_of_crashing(tmp_path, monkeypatch):
-    calls = _patch_sweeps(monkeypatch)
+    calls = _patch_pipeline(monkeypatch)
     path = os.path.join(str(tmp_path), autotune.CACHE_FILE)
     with open(path, "w") as f:
-        f.write('{"cpu|cpu|soa|float32|L4|d1": {"config": {"til')  # truncated write
+        f.write('{"v2|cpu|cpu|soa|float32|L4|d1": {"config": {"til')  # truncated
     cfg = autotune.best_config(L=4, cache_directory=str(tmp_path))
-    assert cfg["tile"] == 128 and calls["tile"] == 1
-    # the re-measure heals the file into valid JSON
+    assert cfg["tile"] == 128 and calls["measure"] == 2
+    # the re-measure heals the file into valid JSON with full provenance
     with open(path) as f:
         healed = json.load(f)
     (entry,) = healed.values()
     assert entry["config"]["fused_k"] == 4
+    assert entry["config"]["pipeline"]["candidates_measured"] == 2
 
 
 @pytest.mark.parametrize("bad_entry", [
     "not-a-dict",
     {},
     {"config": "not-a-dict"},
-    {"config": {"layout": "soa", "variant": "pallas", "tile": 128}},  # pre-fused_k schema
+    {"config": {"layout": "soa", "variant": "pallas", "tile": 128}},  # pre-fused_k
+    # pre-pipeline (v1) schema written under a v2 key (e.g. hand-edited):
+    # must re-measure, never be served with the pipeline block missing
+    {"config": {"layout": "soa", "variant": "pallas", "tile": 128, "fused_k": 4}},
 ])
 def test_partial_cache_entry_falls_back_to_measure(tmp_path, monkeypatch, bad_entry):
-    calls = _patch_sweeps(monkeypatch)
+    calls = _patch_pipeline(monkeypatch)
     backend, device_kind, n_devices = autotune._device_identity()
     key = autotune.cache_key(backend=backend, device_kind=device_kind, layout="soa",
                              dtype="float32", L=4, n_devices=n_devices)
     autotune.store_cache_entry(key, bad_entry, str(tmp_path))
     cfg = autotune.best_config(L=4, cache_directory=str(tmp_path))
     assert cfg["cached"] is False and cfg["fused_k"] == 4
-    assert calls["tile"] == 1, "partial entry must trigger a re-measure"
+    assert calls["measure"] == 2, "partial entry must trigger a re-measure"
     # and the healed entry now serves from cache
     again = autotune.best_config(L=4, cache_directory=str(tmp_path))
-    assert again["cached"] is True and calls["tile"] == 1
+    assert again["cached"] is True and calls["measure"] == 2
+
+
+def test_v1_schema_entries_never_match_the_v2_key(tmp_path, monkeypatch):
+    """The schema bump: a pre-pipeline cache file (unversioned keys, no
+    ``pipeline`` block) is a clean miss — re-measured, not crashed on, and
+    left in place next to the new v2 entry."""
+    calls = _patch_pipeline(monkeypatch)
+    backend, device_kind, n_devices = autotune._device_identity()
+    v1_key = f"{backend}|{device_kind}|soa|float32|L4|d{n_devices}"  # old format
+    autotune.store_cache_entry(
+        v1_key,
+        {"config": {"layout": "soa", "variant": "pallas", "tile": 4096,
+                    "fused_k": 1},
+         "measured_gflops": 9.9, "key": v1_key},
+        str(tmp_path),
+    )
+    cfg = autotune.best_config(L=4, cache_directory=str(tmp_path))
+    assert calls["measure"] == 2, "v1 entry must not be served"
+    assert (cfg["tile"], cfg["fused_k"]) == (128, 4), "fresh sweep decides"
+    cache = autotune.load_cache(str(tmp_path))
+    assert set(cache) == {v1_key, autotune.cache_key(
+        backend=backend, device_kind=device_kind, layout="soa",
+        dtype="float32", L=4, n_devices=n_devices)}
 
 
 def test_cache_keys_isolate_dtypes(tmp_path, monkeypatch):
-    calls = _patch_sweeps(monkeypatch, winners={
-        "float32": (128, 4), "bfloat16": (256, 8),
+    calls = _patch_pipeline(monkeypatch, winners={
+        "float32": (128, 4), "bfloat16": (512, 8),
     })
     f32 = autotune.best_config(L=4, dtype="float32", cache_directory=str(tmp_path))
     bf16 = autotune.best_config(L=4, dtype="bfloat16", cache_directory=str(tmp_path))
-    assert calls["tile"] == 2, "each dtype pays its own sweep"
+    assert calls["measure"] == 4, "each dtype pays its own (pruned) sweep"
     assert (f32["tile"], f32["fused_k"]) == (128, 4)
-    assert (bf16["tile"], bf16["fused_k"]) == (256, 8)
+    assert (bf16["tile"], bf16["fused_k"]) == (512, 8)
     # both cached independently — no cross-dtype hits or clobbering
     assert autotune.best_config(L=4, dtype="float32",
                                 cache_directory=str(tmp_path))["tile"] == 128
     assert autotune.best_config(L=4, dtype="bfloat16",
-                                cache_directory=str(tmp_path))["tile"] == 256
-    assert calls["tile"] == 2
+                                cache_directory=str(tmp_path))["tile"] == 512
+    assert calls["measure"] == 4
     cache = autotune.load_cache(str(tmp_path))
-    assert len(cache) == 2 and {k.split("|")[3] for k in cache} == {
+    assert len(cache) == 2 and {k.split("|")[4] for k in cache} == {
         "float32", "bfloat16"
     }
 
 
 def test_mixed_precision_tunes_and_caches_separately(tmp_path, monkeypatch):
     """bf16-pure and bf16+f32-accum plans: own sweeps, own cache entries."""
-    calls = _patch_sweeps(monkeypatch, winners={
-        "bfloat16": (128, 2), "float32": (512, 8),  # accum key wins when set
+    calls = _patch_pipeline(monkeypatch, winners={
+        "bfloat16": (128, 4), "float32": (512, 8),  # accum key wins when set
     })
     pure = autotune.best_config(L=4, dtype="bfloat16", cache_directory=str(tmp_path))
-    assert calls["tile_accum_arg"] == ""
+    assert calls["accum_arg"] == ""
     mixed = autotune.best_config(L=4, dtype="bfloat16", accum_dtype="float32",
                                  cache_directory=str(tmp_path))
-    assert calls["tile_accum_arg"] == "float32", "sweeps must run as deployed"
-    assert (pure["tile"], pure["fused_k"]) == (128, 2)
+    assert calls["accum_arg"] == "float32", "sweeps must run as deployed"
+    assert (pure["tile"], pure["fused_k"]) == (128, 4)
     assert (mixed["tile"], mixed["fused_k"]) == (512, 8)
     cache = autotune.load_cache(str(tmp_path))
     assert len(cache) == 2, "mixed precision must not alias the pure-dtype key"
     # both serve from cache now, each returning its own tuple
     assert autotune.tuned_fused_k(L=4, dtype="bfloat16",
-                                  cache_directory=str(tmp_path)) == 2
+                                  cache_directory=str(tmp_path)) == 4
     assert autotune.tuned_fused_k(L=4, dtype="bfloat16", accum_dtype="float32",
                                   cache_directory=str(tmp_path)) == 8
-    assert calls["tile"] == 2
+    assert calls["measure"] == 4
     # tuned_engine_config forwards the accum override into the tuning key
     cfg = autotune.tuned_engine_config(L=4, dtype="bfloat16",
                                        accum_dtype="float32",
                                        cache_directory=str(tmp_path))
     assert cfg.tile == 512 and cfg.accum_dtype == "float32"
-    assert calls["tile"] == 2, "still zero new measurements"
+    assert calls["measure"] == 4, "still zero new measurements"
 
 
 def test_cache_key_identity():
     k = autotune.cache_key(backend="tpu", device_kind="v5e", layout="soa",
                            dtype="bfloat16", L=16, n_devices=4)
-    assert k == "tpu|v5e|soa|bfloat16|L16|d4"
+    assert k == "v2|tpu|v5e|soa|bfloat16|L16|d4"

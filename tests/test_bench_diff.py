@@ -42,6 +42,69 @@ def test_diff_flags_collapse_below_the_noise_floor():
     assert regressions[0]["delta_pct"] < -90
 
 
+def test_retry_recovers_noise_and_confirms_real_regressions():
+    """Flagged rows are re-measured (median of 3): a row whose re-runs
+    recover passes; one that stays low is a confirmed regression."""
+    baseline = _payload({"t": [
+        {"name": "noisy", "GFLOPS": 2.0},
+        {"name": "broken", "GFLOPS": 2.0},
+    ]})
+    current = _payload({"t": [
+        {"name": "noisy", "GFLOPS": 1.0},   # -50% single pass (noise)
+        {"name": "broken", "GFLOPS": 1.0},  # -50% genuinely
+    ]})
+    _compared, regressions = bench_diff.diff(baseline, current, 0.15)
+    assert len(regressions) == 2
+
+    def fake_remeasure(keys, runs=2, quick=True):
+        assert keys == {("t", "noisy"), ("t", "broken")}
+        return {("t", "noisy"): [2.1, 1.9],   # recovers: median(1.0,2.1,1.9)=1.9
+                ("t", "broken"): [1.05, 0.95]}  # stays low: median=1.0
+
+    still, recovered = bench_diff.retry_regressions(
+        regressions, 0.15, remeasure_fn=fake_remeasure)
+    assert [r["name"] for r in recovered] == ["noisy"]
+    assert recovered[0]["current_median"] == 1.9
+    assert recovered[0]["observations"] == 3
+    assert [r["name"] for r in still] == ["broken"]
+    assert still[0]["delta_pct"] < -40
+
+
+def test_retry_with_missing_observations_judges_on_what_exists():
+    """A re-run that crashes or drops the row contributes nothing; the
+    median is over the surviving observations (worst case: the original)."""
+    regressions = [{"table": "t", "name": "r", "baseline": 2.0,
+                    "current": 1.0, "delta_pct": -50.0}]
+    still, recovered = bench_diff.retry_regressions(
+        regressions, 0.15, remeasure_fn=lambda keys, **kw: {("t", "r"): []})
+    assert recovered == [] and len(still) == 1
+    assert still[0]["observations"] == 1
+
+
+def test_no_retry_flag_fails_single_pass(tmp_path, monkeypatch):
+    """--no-retry keeps the old behavior: flagged rows fail immediately,
+    and the harness is never re-invoked."""
+    base_p = tmp_path / "base.json"
+    cur_p = tmp_path / "cur.json"
+    import json
+    base_p.write_text(json.dumps(_payload({"t": [{"name": "r", "GFLOPS": 2.0}]})))
+    cur_p.write_text(json.dumps(_payload({"t": [{"name": "r", "GFLOPS": 1.0}]})))
+
+    def boom(*a, **kw):
+        raise AssertionError("remeasure must not run under --no-retry")
+
+    monkeypatch.setattr(bench_diff, "remeasure_rows", boom)
+    rc = bench_diff.main(["--baseline", str(base_p), "--current", str(cur_p),
+                          "--no-retry"])
+    assert rc == 1
+    # default path DOES retry (and recovers with a healthy re-measure)
+    monkeypatch.setattr(
+        bench_diff, "remeasure_rows",
+        lambda keys, runs=2, quick=True: {("t", "r"): [2.0, 2.0]})
+    rc = bench_diff.main(["--baseline", str(base_p), "--current", str(cur_p)])
+    assert rc == 0
+
+
 def test_diff_within_threshold_passes_and_noise_baseline_skipped():
     baseline = _payload({"t": [
         {"name": "steady", "GFLOPS": 1.0},

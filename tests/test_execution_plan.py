@@ -82,8 +82,9 @@ def test_registry_unifies_variants_and_pallas():
     assert "pallas" in names and "versionX" in names and "version_gemm" in names
     entry = registry.get_kernel("pallas")
     assert entry.form == registry.PLANAR and entry.supports_fused
-    assert registry.kernel_names(backend="pallas") == ["pallas"]
+    assert registry.kernel_names(backend="pallas") == ["pallas", "pallas_megakernel"]
     assert "pallas" not in registry.kernel_names(form=registry.CANONICAL)
+    assert registry.kernel_names(form=registry.BATCHED) == ["pallas_megakernel"]
 
 
 def test_plan_rejects_invalid_combinations():

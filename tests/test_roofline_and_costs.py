@@ -118,6 +118,46 @@ def test_analytic_su3_report_is_bandwidth_bound():
     assert rep.memory_s > rep.compute_s
 
 
+def test_instruction_mix_counted_loop_aware():
+    cost = hlo_costs.analyze_hlo(SYNTH_HLO)
+    # body (x5 trips): dot + cond's compare -> 10 arith; all-reduce x5 plus
+    # the entry all-gather -> 6 collective; the while op itself -> 1 control
+    assert cost.instr_by_class["arith"] == pytest.approx(10)
+    assert cost.instr_by_class["collective"] == pytest.approx(6)
+    assert cost.instr_by_class["control"] == pytest.approx(1)
+    assert cost.instructions == pytest.approx(
+        sum(cost.instr_by_class.values())
+    )
+
+
+def test_issue_term_reproduces_piuma_pipeline_bound():
+    """Paper §5.3: 12 loads + 2 stores + 12 FMAs per 24 flops — SU3 on PIUMA
+    is bounded by the ISSUE rate (3.6 GF/s), below both the 8 GF/s FMA roof
+    and the 4.32 GF/s bandwidth bound.  The three-term report must reproduce
+    that: issue dominant, effective throughput ~3.6 GF/s."""
+    n = 10_000  # sites
+    rep = roofline.RooflineReport(
+        name="piuma_su3", hw=roofline.PIUMA_CORE, n_chips=1,
+        flops_per_device=24.0 * n,
+        bytes_per_device=24.0 / 0.675 * n,  # AI = 0.675 (fp64)
+        collective_link_bytes=0.0, collective_by_kind={},
+        instructions_per_device=26.0 * n,
+    )
+    assert rep.issue_s > 0
+    assert rep.dominant == "issue"
+    assert rep.flops_per_device / rep.bound_s == pytest.approx(3.6e9, rel=0.02)
+
+
+def test_issue_term_absent_without_instruction_counts():
+    r = roofline.RooflineReport(
+        name="t", hw=roofline.TPU_V5E, n_chips=1,
+        flops_per_device=1e12, bytes_per_device=819e9,
+        collective_link_bytes=0.0, collective_by_kind={},
+    )
+    assert r.issue_s == 0.0  # unmeasured -> two/three-term users unaffected
+    assert r.dominant == "memory"
+
+
 def test_xeon_piuma_models_match_paper():
     """Paper §4/§5.3 platform models. (The paper states 17.1 = 2420.1/105.0,
     which is arithmetically 23.05 — we keep the stated inputs, so our ridge
