@@ -42,7 +42,7 @@ def main(argv: list[str] | None = None) -> None:
 
     from benchmarks import (
         fig7_strong_scaling, fig9_gemm_vs_dot, fig10_arch_compare,
-        lm_step, serve_traffic, table1_roofline, table2_variants,
+        lm_step, serve_traffic, stencil, table1_roofline, table2_variants,
         table3_placement,
     )
 
@@ -60,6 +60,7 @@ def main(argv: list[str] | None = None) -> None:
         ("fig10_arch_compare", lambda: fig10_arch_compare.run(L=8 if not quick else 4)),
         ("lm_step", lambda: lm_step.run()),
         ("serve", lambda: serve_traffic.run(quick=quick)),
+        ("stencil", lambda: stencil.run(quick=quick)),
     ]
     for table, fn in tables:
         # one broken table must not take the other rows or the JSON

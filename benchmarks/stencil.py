@@ -1,0 +1,161 @@
+"""Stencil benchmark: GFLOPS + overlap efficiency of the Dslash-style path.
+
+The first workload in this repo where halo traffic actually moves.  Three
+row families land in ``BENCH_su3.json`` under ``stencil``:
+
+  measured rows   ``stencil_L{L}_{dtype}[_acc]_{overlap|serial}`` — wall-time
+                  GFLOPS (useful flops = 576/site) of the overlapped vs
+                  non-overlapped ``ExecutionPlan.stencil_step`` on the local
+                  mesh, verified against the (1/24)-uniform fixed point.
+  roofline rows   ``stencil_roofline_h{hosts}_{overlap|serial}`` — the
+                  halo-charging model (autotune.predict_stencil) at 1/2/4
+                  hosts.  The bandwidth term INCLUDES the vector-field halo
+                  bytes (``bandwidth_bytes = streamed + halo``): the PR 3
+                  halo price list is now a schedule input.
+  overlap row     ``stencil_overlap_identity`` — a forced-device 2-host
+                  subprocess runs both schedules on a real sharded mesh and
+                  reports bit-identity plus the measured overlap efficiency
+                  (t_serial / t_overlap).  On CPU interpret the three
+                  dispatches serialize, so efficiency ~<= 1 here (the
+                  boundary recompute is visible, the hidden transfer is
+                  not); the schedule claim on CPU is dispatch-ORDER only —
+                  see ROADMAP for the TPU validation item.
+
+Standalone CLI:  PYTHONPATH=src python -m benchmarks.stencil --quick
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.core import autotune
+from repro.core.su3.layouts import Layout
+from repro.core.su3.plan import EngineConfig, build_plan
+from repro.kernels.su3_stencil import STENCIL_FLOPS_PER_SITE
+
+# prefixed with an `L, tile, reps = ...` line by _overlap_identity_row (the
+# template itself contains JSON braces, so str.format is off the table)
+_OVERLAP_SUBPROC = r"""
+import os, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import numpy as np, jax
+from repro.core.su3.plan import EngineConfig, build_plan
+from repro.launch.mesh import MeshSpec
+
+cfg = EngineConfig(L=L, tile=tile, iterations=1, warmups=0)
+plan = build_plan(cfg, MeshSpec(hosts=2, devices_per_host=1))
+u, v = plan.init_stencil_data()
+serial, overlap = plan.stencil_step(overlap=False), plan.stencil_step(overlap=True)
+r_s, r_o = serial(u, v), overlap(u, v)  # warm both
+r_s.block_until_ready(); r_o.block_until_ready()
+identical = bool(np.array_equal(np.asarray(jax.device_get(r_s)),
+                                np.asarray(jax.device_get(r_o))))
+def best(step):
+    t = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter(); step(u, v).block_until_ready()
+        t = min(t, time.perf_counter() - t0)
+    return t
+t_serial, t_overlap = best(serial), best(overlap)
+print(json.dumps({
+    "identical": identical, "verified": bool(plan.verify_stencil(r_o)),
+    "t_serial_s": t_serial, "t_overlap_s": t_overlap,
+    "halo": plan.stencil_halo().as_dict(),
+}))
+"""
+
+
+def _measure_row(L: int, dtype: str, accum: str, overlap: bool, tile: int,
+                 reps: int) -> dict:
+    cfg = EngineConfig(L=L, dtype=dtype, accum_dtype=accum, layout=Layout.SOA,
+                       tile=tile, iterations=1, warmups=0)
+    plan = build_plan(cfg)
+    step = plan.stencil_step(overlap=overlap)
+    u, v = plan.init_stencil_data()
+    out = step(u, v)
+    out.block_until_ready()  # warm/compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        step(u, v).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    n_sites = L**4
+    acc_tag = f"_acc-{accum}" if accum else ""
+    return {
+        "name": f"stencil_L{L}_{dtype}{acc_tag}_{'overlap' if overlap else 'serial'}",
+        "us_per_call": round(best * 1e6, 1),
+        "L": L, "dtype": dtype, "accum_dtype": accum or dtype,
+        "overlap": overlap, "tile": tile,
+        "GFLOPS": round(STENCIL_FLOPS_PER_SITE * n_sites / best / 1e9, 3),
+        "verified": plan.verify_stencil(out),
+        "plan": plan.describe(),
+    }
+
+
+def _roofline_rows(L: int, dtype: str) -> list[dict]:
+    rows = []
+    for hosts in (1, 2, 4):
+        for overlap in (False, True):
+            pred = autotune.predict_stencil(
+                autotune.StencilCandidate(tile=min(256, L**3), overlap=overlap),
+                L=L, dtype=dtype, hosts=hosts,
+            )
+            rows.append({
+                "name": f"stencil_roofline_h{hosts}_{'overlap' if overlap else 'serial'}",
+                **pred,
+            })
+    return rows
+
+
+def _overlap_identity_row(L: int, tile: int, reps: int) -> dict:
+    """Forced-device 2-host schedule comparison (subprocess: the forced
+    device count locks at first jax init, exactly like the fig7 dryrun)."""
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    code = f"L, tile, reps = {L}, {tile}, {reps}\n" + _OVERLAP_SUBPROC
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=600, cwd=root,
+    )
+    if proc.returncode != 0:
+        return {"name": "stencil_overlap_identity",
+                "error": proc.stderr.strip()[-300:]}
+    payload = json.loads(proc.stdout.strip().splitlines()[-1])
+    eff = payload["t_serial_s"] / payload["t_overlap_s"]
+    return {
+        "name": "stencil_overlap_identity",
+        "hosts": 2, "L": L, "tile": tile,
+        "identical": payload["identical"],
+        "verified": payload["verified"],
+        "t_serial_us": round(payload["t_serial_s"] * 1e6, 1),
+        "t_overlap_us": round(payload["t_overlap_s"] * 1e6, 1),
+        "overlap_efficiency": round(eff, 3),
+        # CPU interpret serializes the three dispatches: the schedule here is
+        # dispatch-order only; real hiding needs TPU (ROADMAP open item)
+        "dispatch_order_only": True,
+        **payload["halo"],
+    }
+
+
+def run(quick: bool = True) -> list[dict]:
+    L = 4 if quick else 8
+    tile = min(128, L**3)
+    reps = 2 if quick else 5
+    rows = []
+    for dtype, accum in (("float32", ""), ("bfloat16", "float32")):
+        for overlap in (False, True):
+            rows.append(_measure_row(L, dtype, accum, overlap, tile, reps))
+    rows.extend(_roofline_rows(L, "float32"))
+    rows.append(_overlap_identity_row(L, tile=min(64, L**3), reps=reps))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick="--quick" in sys.argv[1:]):
+        print(r)

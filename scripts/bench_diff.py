@@ -116,6 +116,29 @@ def diff(
     return compared, regressions
 
 
+def asymmetric_rows(
+    baseline: dict, current: dict
+) -> tuple[list[tuple[str, str]], list[tuple[str, str]]]:
+    """-> (rows only in baseline, rows only in current), named and sorted.
+
+    A row present in the committed artifact but missing from the fresh run
+    is a *dropped measurement* — historically skipped silently, which let a
+    batch of new rows (e.g. a fresh stencil table) mask the disappearance
+    of an old one.  Both directions are reported by name so the gate's
+    output always accounts for every row it did NOT compare.
+
+    Presence is judged WITHOUT the noise floor on either side: the floor
+    decides what is worth *gating*, not what exists — a below-floor
+    baseline row that vanishes is still a dropped measurement, and must
+    not be misreported as the current side's "new" row.
+    """
+    base_rows = collect_rows(baseline, apply_floor=False)
+    cur_rows = collect_rows(current, apply_floor=False)
+    only_base = sorted(base_rows.keys() - cur_rows.keys())
+    only_cur = sorted(cur_rows.keys() - base_rows.keys())
+    return only_base, only_cur
+
+
 def remeasure_rows(
     keys: set[tuple[str, str]], runs: int = RETRY_RUNS, quick: bool = True,
 ) -> dict[tuple[str, str], list[float]]:
@@ -211,6 +234,16 @@ def main(argv: list[str] | None = None) -> int:
     except FileNotFoundError:
         print(f"bench_diff: current artifact {args.current!r} missing", file=sys.stderr)
         return 2
+
+    only_base, only_cur = asymmetric_rows(baseline, current)
+    for table, name in only_base:
+        print(f"bench_diff: WARNING row {table}/{name} present in the "
+              f"baseline but MISSING from the current run (dropped "
+              f"measurement — not compared)", file=sys.stderr)
+    for table, name in only_cur:
+        print(f"bench_diff: WARNING row {table}/{name} is new in the current "
+              f"run (no baseline — not compared; it gates from the next "
+              f"committed artifact on)", file=sys.stderr)
 
     compared, regressions = diff(baseline, current, args.threshold)
     if not compared:

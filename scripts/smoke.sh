@@ -1,20 +1,42 @@
 #!/usr/bin/env bash
-# Quick-mode smoke: tier-1 suite + machine-readable benchmark rows.
+# Quick-mode smoke: fast-tier suite + machine-readable benchmark rows.
 #
-#   scripts/smoke.sh            # pytest + benchmarks --quick --json
+#   scripts/smoke.sh            # fast tests (-m "not slow") + benchmarks
+#   scripts/smoke.sh --full     # also run the slow tier (serving/megakernel/
+#                               # e2e tests — the ~12-minute tail)
 #   scripts/smoke.sh --no-bench # tests only
 #
+# The tier-1 gate (`python -m pytest -x -q`, no marker filter) still runs
+# everything; smoke iterations default to the fast tier so the slow serving
+# suites no longer gate every edit loop.
+#
 # Writes BENCH_su3.json in the repo root so the perf trajectory is
-# comparable across PRs (schema: su3-bench-rows/v1).
+# comparable across PRs (schema: su3-bench-rows/v1).  The stencil table
+# (benchmarks/stencil.py) rides in benchmarks.run alongside the rest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 suite =="
-python -m pytest -x -q
+RUN_FULL=0
+RUN_BENCH=1
+for arg in "$@"; do
+  case "$arg" in
+    --full) RUN_FULL=1 ;;
+    --no-bench) RUN_BENCH=0 ;;
+    *) echo "unknown flag: $arg" >&2; exit 2 ;;
+  esac
+done
 
-if [[ "${1:-}" != "--no-bench" ]]; then
+echo "== fast tier (-m 'not slow') =="
+python -m pytest -x -q -m "not slow"
+
+if [[ "$RUN_FULL" == 1 ]]; then
+  echo "== slow tier (-m slow: serving/megakernel/e2e) =="
+  python -m pytest -x -q -m slow
+fi
+
+if [[ "$RUN_BENCH" == 1 ]]; then
   echo "== fig7 multi-controller dryrun (2 controllers, divergence gate) =="
   # Two identical controller processes run the strong-scaling curve through
   # the real (host, device) MeshSpec plan path; the launcher exits non-zero
@@ -24,7 +46,7 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     --L 4 --device-counts 1,2 --hosts 2 --controllers 2 --iterations 1 \
     > /dev/null
 
-  echo "== quick benchmarks (BENCH_su3.json) =="
+  echo "== quick benchmarks incl. stencil table (BENCH_su3.json) =="
   python -m benchmarks.run --quick --json BENCH_su3.json
   echo "== dispatch profiler (dispatch table -> BENCH_su3.json) =="
   python scripts/profile_dispatch.py --quick --json BENCH_su3.json
@@ -32,6 +54,7 @@ if [[ "${1:-}" != "--no-bench" ]]; then
   # BENCH_DIFF_THRESHOLD loosens the gate on noisy shared dev hosts; flagged
   # rows are re-measured (median of 3) by scripts/bench_diff.py before the
   # gate fails, so residual failures are real regressions, not timer noise.
+  # Rows present on only one side are named WARNINGs, never silent skips.
   python scripts/bench_diff.py --current BENCH_su3.json --baseline git:HEAD \
     --threshold "${BENCH_DIFF_THRESHOLD:-0.15}"
 fi

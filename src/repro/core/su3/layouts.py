@@ -215,6 +215,26 @@ class LayoutCodec:
     def unpack_b(self, b_p: jax.Array) -> jax.Array:
         return from_planar(b_p.astype(jnp.float32).reshape(2, LINKS, SU3, SU3))
 
+    # -- color-vector fields (the stencil workload's v) ------------------------
+    #
+    # The vector field is planar (2, 3, S) in every layout — it has no AoS
+    # metadata and no per-layout physical form; only the word dtype (and the
+    # site padding the caller applies) varies.  Site order matches the
+    # lattice's linear site ids, i.e. the planar view's site axis.
+
+    def pack_vec(self, v: jax.Array, padded_sites: int | None = None) -> jax.Array:
+        """Canonical vector field (n_sites, 3) complex -> planar (2, 3, S)
+        in the word dtype, zero-padded to ``padded_sites`` when given."""
+        p = to_planar(jnp.moveaxis(v, 0, -1))  # (2, 3, n_sites)
+        if padded_sites is not None and padded_sites > v.shape[0]:
+            p = jnp.pad(p, ((0, 0), (0, 0), (0, padded_sites - v.shape[0])))
+        return p.astype(self.word_dtype)
+
+    def unpack_vec(self, v_p: jax.Array, n_sites: int | None = None) -> jax.Array:
+        """Planar (2, 3, S) -> canonical complex (n_sites, 3)."""
+        c = jnp.moveaxis(from_planar(v_p.astype(jnp.float32)), -1, 0)
+        return c if n_sites is None else c[:n_sites]
+
     # -- sharding --------------------------------------------------------------
 
     def site_spec(

@@ -258,6 +258,11 @@ def make_raw_step(
             f"kernel {kernel.name!r} is slot-batched; it dispatches through "
             f"ExecutionPlan.fused_batched_step, not a single-lattice step"
         )
+    if kernel.form == registry.STENCIL:
+        raise ValueError(
+            f"kernel {kernel.name!r} is a nearest-neighbor stencil; it "
+            f"dispatches through ExecutionPlan.stencil_step, not a multiply step"
+        )
     if k_iters > 1 and kernel.form == registry.PLANAR and not kernel.supports_fused:
         raise ValueError(f"kernel {kernel.name!r} does not support fused iteration")
     if codec.is_mixed_precision and not kernel.supports_accum_dtype():
@@ -299,6 +304,76 @@ def make_raw_step(
 
 
 MEGAKERNEL_VARIANT = "pallas_megakernel"
+STENCIL_VARIANT = "pallas_stencil"
+
+
+# -- stencil neighbor geometry ------------------------------------------------
+#
+# Site linearization is t-major: site = ((t*L + z)*L + y)*L + x, so the host
+# slabs of the lattice sharding are contiguous t-slices and the +-t neighbor
+# of site s is (s +- L^3) mod L^4 — the only directions whose access crosses
+# slab boundaries.  x/y/z neighbor moves permute sites WITHIN one t-slice and
+# therefore never leave a (non-degenerate) slab.
+
+
+def stencil_neighbor_tables(
+    L: int, padded_sites: int, n_shards: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Neighbor index tables for the 8-direction stencil.
+
+    Returns ``(global_idx, local_idx, boundary_idx)``:
+
+    * ``global_idx (8, padded_sites)`` — exact periodic neighbors, direction
+      order (+x, +y, +z, +t, -x, -y, -z, -t).  Padding sites (>= L^4) point
+      at themselves: their outputs are garbage and are sliced off at unpack.
+    * ``local_idx (8, padded_sites)`` — identical except the +-t directions
+      wrap WITHIN each of the ``n_shards`` contiguous slabs, so a gather
+      through it moves no data between slabs.  It agrees with ``global_idx``
+      exactly on every interior site (``HaloSpec.interior_ranges``) — the
+      property the overlap schedule's bit-identity rests on.
+    * ``boundary_idx (B,)`` — concatenated ``HaloSpec.boundary_ranges`` of
+      every shard (empty on one shard): the sites whose +-t neighbors are
+      remote, recomputed by the boundary pass after the exchange lands.
+    """
+    S = L**4
+    if n_shards > 1 and S % n_shards:
+        raise ValueError(f"L={L} lattice does not shard over {n_shards} slabs")
+    idx = np.arange(S, dtype=np.int64)
+    pad_id = np.arange(padded_sites, dtype=np.int64)
+    glob = np.tile(pad_id, (8, 1))
+    for d in range(4):
+        stride = L**d
+        c = (idx // stride) % L
+        glob[d, :S] = idx + (((c + 1) % L) - c) * stride
+        glob[4 + d, :S] = idx + (((c - 1) % L) - c) * stride
+    local = glob.copy()
+    face = L**3
+    if n_shards > 1:
+        per = S // n_shards
+        base = (idx // per) * per
+        off = idx - base
+        local[3, :S] = base + (off + face) % per
+        local[7, :S] = base + (off - face) % per
+    spec = dist_sharding.HaloSpec(L=L, n_shards=n_shards)
+    ranges = [
+        np.arange(a, b, dtype=np.int64)
+        for s in range(n_shards)
+        for (a, b) in spec.boundary_ranges(s)
+    ]
+    bidx = np.concatenate(ranges) if ranges else np.empty(0, np.int64)
+    return glob.astype(np.int32), local.astype(np.int32), bidx.astype(np.int32)
+
+
+def init_stencil_canonical(n_sites: int) -> tuple[jax.Array, jax.Array]:
+    """Canonical stencil benchmark data: U entries (1, 0), v entries (1/24, 0).
+
+    With uniform inputs every output component is sum over 8 directions of
+    3 entries x 1/24 = exactly (1, 0) — the stencil analogue of su3_bench's
+    A=(1,0)/B=(1/3,0) fixed-point check, used by ``verify_stencil``.
+    """
+    a, _ = init_canonical(n_sites)
+    v = jnp.full((n_sites, layouts.SU3), (1.0 / 24.0) + 0.0j, jnp.complex64)
+    return a, v
 
 
 def make_raw_batched_step(
@@ -401,6 +476,8 @@ class ExecutionPlan:
         self._batched_steps: dict[
             tuple[int, int], Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
         ] = {}
+        self._stencil_steps: dict[bool, Callable[[jax.Array, jax.Array], jax.Array]] = {}
+        self._stencil_tables: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
 
     @classmethod
     def build(
@@ -505,6 +582,202 @@ class ExecutionPlan:
                 donate_argnums=(0,) if on_tpu else (),
             )
         return self._batched_steps[key]
+
+    # -- nearest-neighbor stencil (Dslash-style) -------------------------------
+
+    @property
+    def vec_sharding(self) -> NamedSharding:
+        """Sharding of a planar color-vector field (2, 3, S): site axis over
+        the mesh's site axes, components replicated — the vector field lives
+        site-aligned with the lattice it belongs to."""
+        ax = self.site_axes if len(self.site_axes) > 1 else self.site_axes[0]
+        return NamedSharding(self.mesh, P(None, None, ax))
+
+    def stencil_halo(self) -> dist_sharding.HaloSpec:
+        """Halo spec of the stencil's *vector-field* exchange: same boundary
+        geometry as :meth:`halo`, priced at 6 words/site (color 3-vectors
+        travel, not gauge links) and at the plan's storage width."""
+        return dist_sharding.HaloSpec(
+            L=self.cfg.L,
+            n_shards=self.n_hosts,
+            word_bytes=self.cfg.word_bytes,
+            words_per_site=dist_sharding.VECTOR_WORDS_PER_SITE,
+        )
+
+    def _stencil_geometry(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        if self._stencil_tables is None:
+            self._stencil_tables = stencil_neighbor_tables(
+                self.cfg.L, self.padded_sites, self.n_hosts
+            )
+        return self._stencil_tables
+
+    def _stencil_kernel_kwargs(self) -> tuple[registry.KernelEntry, dict[str, Any]]:
+        kernel = registry.get_kernel(STENCIL_VARIANT)
+        if not kernel.supports_layout(self.codec.layout):
+            raise ValueError(
+                f"stencil kernel {kernel.name!r} does not support layout "
+                f"{self.codec.layout.value!r}"
+            )
+        if self.codec.is_mixed_precision and not kernel.supports_accum_dtype():
+            raise ValueError(
+                f"stencil kernel {kernel.name!r} cannot accumulate at "
+                f"{self.codec.accum_dtype!r} over {self.codec.dtype!r} storage"
+            )
+        kw: dict[str, Any] = {"tile": self.cfg.tile}
+        if self.codec.is_mixed_precision:
+            kw["accum_dtype"] = self.codec.accum_dtype
+        return kernel, kw
+
+    def raw_stencil_reference(self) -> Callable[[jax.Array, jax.Array], jax.Array]:
+        """Unjitted reference stencil ``(u_phys, v_p) -> out_p``.
+
+        Gathers all 8 neighbor fields through the exact periodic table and
+        runs ONE kernel pass over every site — the bit-identity oracle the
+        overlapped schedule is pinned against, and the form the serving
+        layer vmaps over request batches.
+        """
+        kernel, kw = self._stencil_kernel_kwargs()
+        glob, _local, _bidx = self._stencil_geometry()
+        codec = self.codec
+
+        def reference(u_phys: jax.Array, v_p: jax.Array) -> jax.Array:
+            u_p = codec.planar_view(u_phys)
+            v_nbr = jnp.moveaxis(v_p[:, :, glob], 2, 0)  # (8, 2, 3, S)
+            return kernel.fn(u_p, v_nbr, **kw)
+
+        return reference
+
+    def stencil_reference_step(self) -> Callable[[jax.Array, jax.Array], jax.Array]:
+        """Jitted non-overlapped reference stencil — ONE dispatch whose +-t
+        neighbor gathers carry the halo traffic inline (compute waits for
+        the exchange; the baseline the overlap schedule is measured against
+        and pinned bit-identical to)."""
+        return self.stencil_step(overlap=False)
+
+    def stencil_step(
+        self, overlap: bool | None = None
+    ) -> Callable[[jax.Array, jax.Array], jax.Array]:
+        """The stencil dispatch path: ``step(u_phys, v_p) -> out_p``.
+
+        ``u_phys`` is the plan's physical gauge lattice, ``v_p`` the planar
+        (2, 3, padded_sites) vector field (``codec.pack_vec``), and the
+        result is the planar output vector field, sharded like ``v_p``.
+
+        overlap=False (the pinned reference): one jitted dispatch; neighbor
+        gathers through the exact periodic table, kernel over all sites.
+
+        overlap=True (default on multi-host meshes): the interior/boundary
+        split schedule —
+
+        1. **exchange** — dispatch the +-t ghost gathers of the boundary
+           sites first; the cross-slab transfer is now in flight;
+        2. **interior** — dispatch the full-lattice kernel pass whose +-t
+           gathers wrap *within* each host slab (no cross-slab dependency,
+           so it runs concurrently with the exchange); every interior
+           site's result is already exact;
+        3. **boundary** — once the ghosts land, recompute only the boundary
+           sites with their true remote neighbors and scatter them over the
+           interior pass's output.
+
+        Because jax dispatch is asynchronous, step 2 is issued while step
+        1's transfer is outstanding — on TPU the collective overlaps the
+        interior kernel; on CPU interpret the three dispatches serialize
+        (dispatch-order overlap only; see ROADMAP).  The boundary sites are
+        computed twice — the classic overlap trade (arXiv:2112.01852) — and
+        the result is bit-identical to the reference: same kernel, same
+        per-site inputs, same accumulation order.
+        """
+        if overlap is None:
+            overlap = self.is_multi_host
+        overlap = bool(overlap)
+        if overlap not in self._stencil_steps:
+            self._stencil_steps[overlap] = self._build_stencil_step(overlap)
+        return self._stencil_steps[overlap]
+
+    def _build_stencil_step(
+        self, overlap: bool
+    ) -> Callable[[jax.Array, jax.Array], jax.Array]:
+        kernel, kw = self._stencil_kernel_kwargs()
+        glob, local, bidx = self._stencil_geometry()
+        codec, tile = self.codec, self.cfg.tile
+        out_sh = self.vec_sharding
+
+        if not overlap:
+            # ONE body for the reference: the same raw function the serving
+            # layer vmaps, so the pinned bit-identity oracle and the served
+            # stencil can never silently diverge
+            return jax.jit(self.raw_stencil_reference(), out_shardings=out_sh)
+
+        def interior_fn(u_phys: jax.Array, v_p: jax.Array) -> jax.Array:
+            # slab-local gathers only: independent of the in-flight exchange
+            v_nbr = jnp.moveaxis(v_p[:, :, local], 2, 0)  # (8, 2, 3, S)
+            return kernel.fn(codec.planar_view(u_phys), v_nbr, **kw)
+
+        interior_j = jax.jit(interior_fn, out_shardings=out_sh)
+        n_boundary = int(bidx.size)
+        if n_boundary == 0:  # unsharded lattice: local wrap IS the periodic wrap
+            return interior_j
+
+        # +-t ghosts: the true remote neighbors of the boundary sites
+        ghost_fwd_idx, ghost_bwd_idx = glob[3][bidx], glob[7][bidx]
+        xyz_idx = glob[(0, 1, 2, 4, 5, 6), :][:, bidx]  # shard-local dirs at boundary
+        pad = (-n_boundary) % tile
+
+        def exchange_fn(v_p: jax.Array) -> tuple[jax.Array, jax.Array]:
+            return v_p[:, :, ghost_fwd_idx], v_p[:, :, ghost_bwd_idx]
+
+        exchange_j = jax.jit(exchange_fn)
+
+        def boundary_fn(
+            u_phys: jax.Array,
+            v_p: jax.Array,
+            ghost_fwd: jax.Array,
+            ghost_bwd: jax.Array,
+            out_interior: jax.Array,
+        ) -> jax.Array:
+            u_b = codec.planar_view(u_phys)[:, :, bidx]  # (2, 36, B)
+            v6 = jnp.moveaxis(v_p[:, :, xyz_idx], 2, 0)  # (6, 2, 3, B)
+            v_nbr = jnp.concatenate(
+                [v6[:3], ghost_fwd[None], v6[3:], ghost_bwd[None]], axis=0
+            )  # (8, 2, 3, B) in direction order
+            if pad:
+                u_b = jnp.pad(u_b, ((0, 0), (0, 0), (0, pad)))
+                v_nbr = jnp.pad(v_nbr, ((0, 0), (0, 0), (0, 0), (0, pad)))
+            out_b = kernel.fn(u_b, v_nbr, **kw)[:, :, :n_boundary]
+            return out_interior.at[:, :, bidx].set(out_b)
+
+        boundary_j = jax.jit(boundary_fn, out_shardings=out_sh)
+
+        def overlapped(u_phys: jax.Array, v_p: jax.Array) -> jax.Array:
+            ghosts = exchange_j(v_p)  # issued FIRST: halo transfer in flight
+            out_i = interior_j(u_phys, v_p)  # overlaps the exchange
+            return boundary_j(u_phys, v_p, *ghosts, out_i)
+
+        return overlapped
+
+    def init_stencil_data(self) -> tuple[jax.Array, jax.Array]:
+        """The canonical stencil benchmark inputs under the plan's placement:
+        ``(u_phys, v_p)`` with U entries (1, 0) and v entries (1/24, 0) —
+        every output component of the 8-direction stencil is then exactly
+        (1, 0) (see :func:`init_stencil_canonical`)."""
+        a_phys, _b, _init_s, _scatter_s = self.init_data()
+        _, v = init_stencil_canonical(self.cfg.shape.n_sites)
+        v_p = self.codec.pack_vec(v, self.padded_sites)
+        return a_phys, jax.device_put(v_p, self.vec_sharding)
+
+    def unpack_vec(self, out_p: jax.Array) -> jax.Array:
+        """Planar stencil output -> canonical complex (n_sites, 3)."""
+        return self.codec.unpack_vec(out_p, self.cfg.shape.n_sites)
+
+    def verify_stencil(self, out_p: jax.Array) -> bool:
+        """Fixed-point check for :meth:`init_stencil_data` inputs: every
+        output component must be (1, 0) within the storage dtype's tolerance."""
+        c = self.unpack_vec(jax.device_get(out_p))
+        tol = 1e-2 if self.cfg.dtype == "bfloat16" else 1e-5
+        return bool(
+            jnp.max(jnp.abs(jnp.real(c) - 1.0)) < tol
+            and jnp.max(jnp.abs(jnp.imag(c))) < tol
+        )
 
     # -- placement policies ----------------------------------------------------
 

@@ -18,6 +18,12 @@ enough metadata for a plan to validate and wire a kernel without per-kernel
       slot_k: (slots,) int32); ONE dispatch advances every slot by its own
       chain depth.  Consumed only by ``ExecutionPlan.fused_batched_step`` —
       a batched kernel cannot serve as a plan's single-lattice ``step``.
+      ``"stencil"`` — fn(u_p, v_nbr, *, tile, interpret, accum_dtype?) on the
+      planar link view plus direction-major shifted neighbor vectors
+      (u_p: (2, 36, S), v_nbr: (8, 2, 3, S) -> out (2, 3, S)); the
+      nearest-neighbor Dslash-style operator.  Consumed only by
+      ``ExecutionPlan.stencil_step`` / ``stencil_reference_step`` — a
+      stencil kernel cannot serve as a plan's multiply ``step``.
   ``layouts``
       which physical layouts the kernel can be planned with.
   ``backends``
@@ -41,6 +47,7 @@ from repro.core.su3.layouts import Layout
 CANONICAL = "canonical"
 PLANAR = "planar"
 BATCHED = "batched"
+STENCIL = "stencil"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,7 +117,7 @@ def register_kernel(
     Raises:
         ValueError: on an unknown ``form``.
     """
-    if form not in (CANONICAL, PLANAR, BATCHED):
+    if form not in (CANONICAL, PLANAR, BATCHED, STENCIL):
         raise ValueError(f"unknown kernel form {form!r}")
 
     def deco(fn: Callable) -> Callable:

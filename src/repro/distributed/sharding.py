@@ -240,6 +240,11 @@ LATTICE_HOST_AXIS = "hosts"
 LATTICE_DEVICE_AXIS = "devices"
 
 _GAUGE_WORDS_PER_SITE = 72  # 4 links x 3x3 complex = 36 c64 entries = 72 words
+VECTOR_WORDS_PER_SITE = 6  # one color 3-vector, planar re+im — stencil halo
+
+# storage word widths, duplicated from core.su3.layouts.WORD_BYTES so this
+# module stays importable without the SU3 stack (see note above).
+_WORD_BYTES = {"float32": 4, "bfloat16": 2, "float64": 8}
 
 
 def lattice_site_axes(mesh: Mesh) -> tuple[str, ...]:
@@ -323,11 +328,17 @@ class HaloSpec:
         n_shards: how many contiguous site slabs the lattice splits into
             (the mesh's host-axis size).
         word_bytes: storage word width (4 = f32, 2 = bf16 storage plans).
+        words_per_site: planar words of the *exchanged* field per site.
+            Default 72 (the full gauge field — what a link-field stencil
+            would move); a vector-field stencil (Dslash-style, the
+            ``ExecutionPlan.stencil_step`` workload) exchanges color
+            3-vectors and prices 6 (:data:`VECTOR_WORDS_PER_SITE`).
     """
 
     L: int
     n_shards: int
     word_bytes: int = 4
+    words_per_site: int = _GAUGE_WORDS_PER_SITE
 
     @property
     def sites_per_shard(self) -> int:
@@ -340,9 +351,13 @@ class HaloSpec:
 
     @property
     def boundary_sites(self) -> int:
-        """Sites on a shard's surface: two faces (periodic lattice), or zero
-        when the lattice is unsharded."""
-        return 0 if self.n_shards == 1 else 2 * self.face_sites
+        """Sites on a shard's surface: two faces (periodic lattice), zero
+        when the lattice is unsharded — capped at the slab size when the
+        slab is thinner than two faces (``n_shards > L/2`` degeneracy,
+        where every site of the shard is surface)."""
+        if self.n_shards == 1:
+            return 0
+        return min(2 * self.face_sites, self.sites_per_shard)
 
     @property
     def interior_fraction(self) -> float:
@@ -354,9 +369,85 @@ class HaloSpec:
 
     @property
     def halo_bytes_per_exchange(self) -> int:
-        """Bytes one shard sends per stencil application: gauge field of both
-        faces at storage width (72 words/site — metadata never travels)."""
-        return self.boundary_sites * _GAUGE_WORDS_PER_SITE * self.word_bytes
+        """Bytes one shard sends per stencil application: the exchanged
+        field's words on both faces, at storage width (metadata never
+        travels).  ``words_per_site`` picks the payload: 72 (gauge field,
+        the default) or 6 (the Dslash vector field)."""
+        return self.boundary_sites * self.words_per_site * self.word_bytes
+
+    # -- interior/boundary/ghost site decomposition ---------------------------
+    #
+    # The ranges below are what the overlap-scheduled stencil dispatches on:
+    # interior sites (no remote neighbor) compute while the ghost transfer is
+    # in flight; boundary sites wait for it.  All ranges are GLOBAL site-id
+    # half-open intervals; for every shard, interior_ranges(shard) +
+    # boundary_ranges(shard) partition [lo, hi) exactly (disjoint, covering).
+
+    def shard_range(self, shard: int) -> tuple[int, int]:
+        """Global ``[lo, hi)`` site range of ``shard``'s contiguous slab."""
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range [0, {self.n_shards})")
+        per = self.sites_per_shard
+        return shard * per, (shard + 1) * per
+
+    def boundary_ranges(self, shard: int) -> list[tuple[int, int]]:
+        """Ranges of ``shard``'s sites whose +-t neighbors are remote: the
+        slab's first and last L^3 faces.  Degenerate slabs (thinner than two
+        faces) are all boundary — ONE range covering the slab, never
+        double-counted.  Empty when the lattice is unsharded."""
+        lo, hi = self.shard_range(shard)
+        if self.n_shards == 1:
+            return []
+        per, face = self.sites_per_shard, self.face_sites
+        b_lo = min(face, per)
+        b_hi = min(face, per - b_lo)
+        out = [(lo, lo + b_lo)]
+        if b_hi:
+            out.append((hi - b_hi, hi))
+        return out
+
+    def interior_ranges(self, shard: int) -> list[tuple[int, int]]:
+        """Ranges of ``shard``'s sites with every neighbor shard-local —
+        the whole slab when unsharded, empty when the slab is all surface."""
+        lo, hi = self.shard_range(shard)
+        if self.n_shards == 1:
+            return [(lo, hi)]
+        per, face = self.sites_per_shard, self.face_sites
+        b_lo = min(face, per)
+        b_hi = min(face, per - b_lo)
+        if lo + b_lo >= hi - b_hi:
+            return []
+        return [(lo + b_lo, hi - b_hi)]
+
+    def ghost_ranges(self, shard: int) -> list[tuple[int, int]]:
+        """REMOTE global site ranges ``shard`` must receive per exchange:
+        the +-t neighbors of its boundary sites (the facing faces of the
+        neighboring slabs, wrap-split at the periodic seam).  Empty when the
+        lattice is unsharded."""
+        if self.n_shards == 1:
+            return []
+        S = self.L**4
+        face = self.face_sites
+        out: list[tuple[int, int]] = []
+        for b_lo, b_hi in self.boundary_ranges(shard):
+            for shift in (face, -face):  # +t then -t neighbors
+                g_lo = (b_lo + shift) % S
+                g_hi = g_lo + (b_hi - b_lo)
+                if g_hi <= S:
+                    segs = [(g_lo, g_hi)]
+                else:  # periodic wrap: split at the seam
+                    segs = [(g_lo, S), (0, g_hi - S)]
+                lo_s, hi_s = self.shard_range(shard)
+                for lo, hi in segs:
+                    # a degenerate two-face slab's "+t of the lower face" can
+                    # land inside the shard itself; only remote sites are ghosts
+                    cut_lo = max(lo, min(hi, lo_s))
+                    cut_hi = max(lo, min(hi, hi_s))
+                    if lo < cut_lo:
+                        out.append((lo, cut_lo))
+                    if cut_hi < hi:
+                        out.append((cut_hi, hi))
+        return sorted(set(out))
 
     def as_dict(self) -> dict[str, Any]:
         return {
@@ -369,9 +460,29 @@ class HaloSpec:
         }
 
 
-def halo_spec(L: int, mesh: Mesh, word_bytes: int = 4) -> HaloSpec:
+def halo_spec(
+    L: int,
+    mesh: Mesh,
+    word_bytes: int | None = None,
+    *,
+    dtype: str | None = None,
+    words_per_site: int = _GAUGE_WORDS_PER_SITE,
+) -> HaloSpec:
     """The halo/boundary spec of an L^4 lattice sharded over ``mesh``'s host
-    axis (n_shards=1 on single-host meshes: no boundary, no halo)."""
+    axis (n_shards=1 on single-host meshes: no boundary, no halo).
+
+    Args:
+        L: lattice extent.
+        mesh: the lattice mesh; only its host-axis size matters here.
+        word_bytes: explicit storage word width.  Prefer ``dtype``; when both
+            are given they must agree (an explicit 4 with dtype="bfloat16"
+            was exactly the silent mispricing this signature fixes).
+        dtype: storage dtype name (``"float32"``/``"bfloat16"``/...) — the
+            plan-consistent way to price bf16-storage lattices at 2 B/word,
+            matching how ``TrafficModel.for_dtype`` charges them.
+        words_per_site: exchanged-field payload (72 = gauge links, the
+            default; 6 = the stencil's color vectors).
+    """
     hosts = (
         int(mesh.shape[LATTICE_HOST_AXIS])
         if LATTICE_HOST_AXIS in mesh.axis_names
@@ -379,4 +490,17 @@ def halo_spec(L: int, mesh: Mesh, word_bytes: int = 4) -> HaloSpec:
     )
     if L**4 % hosts:
         raise ValueError(f"L={L} lattice does not shard over {hosts} hosts")
-    return HaloSpec(L=L, n_shards=hosts, word_bytes=word_bytes)
+    if dtype is not None:
+        from_dtype = _WORD_BYTES[dtype]
+        if word_bytes is not None and word_bytes != from_dtype:
+            raise ValueError(
+                f"word_bytes={word_bytes} contradicts dtype={dtype!r} "
+                f"({from_dtype} B/word); pass one or the other"
+            )
+        word_bytes = from_dtype
+    return HaloSpec(
+        L=L,
+        n_shards=hosts,
+        word_bytes=4 if word_bytes is None else word_bytes,
+        words_per_site=words_per_site,
+    )

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.core.su3 import layouts, registry
 from repro.core.su3.layouts import Layout
 from repro.kernels import ref as kref
-from repro.kernels import su3_matmul
+from repro.kernels import su3_matmul, su3_stencil
 
 DEFAULT_TILE = 512
 
@@ -85,6 +85,31 @@ def su3_mult_planar_batched(
     return su3_matmul.su3_mult_planar_batched(
         a_p, b_p, slot_k, tile=tile, max_k=max_k, interpret=interpret,
         alias=alias, accum_dtype=accum_dtype,
+    )
+
+
+@registry.register_kernel(
+    "pallas_stencil",
+    layouts=(Layout.SOA, Layout.AOSOA),
+    backends=("pallas",),
+    form=registry.STENCIL,
+    supports_accum=True,
+)
+def su3_stencil_planar(
+    u_p: jax.Array,
+    v_nbr: jax.Array,
+    *,
+    tile: int = DEFAULT_TILE,
+    interpret: bool | None = None,
+    accum_dtype: str | None = None,
+) -> jax.Array:
+    """Planar nearest-neighbor stencil entry: u_p (2, 36, S) links,
+    v_nbr (8, 2, 3, S) direction-major shifted neighbor vectors -> (2, 3, S).
+    """
+    if interpret is None:
+        interpret = _use_interpret()
+    return su3_stencil.su3_stencil_planar(
+        u_p, v_nbr, tile=tile, interpret=interpret, accum_dtype=accum_dtype,
     )
 
 

@@ -1,0 +1,166 @@
+"""Pallas nearest-neighbor SU(3) stencil kernel (staggered-Dslash style).
+
+The paper's lesson is that SU3_Bench's ceiling is set by how data moves; the
+stencil is the first workload in this repo where data moves *between shards*.
+Per site ``x`` the kernel applies the 8-point nearest-neighbor operator
+
+    out(x) = sum_mu [ U_mu(x) . v(x + mu_hat)  +  U_mu(x)^dagger . v(x - mu_hat) ]
+
+over the 4 lattice directions (mu = x, y, z, t), where ``U`` is the site's
+gauge-link field (the same planar (2, 36, S) array the multiply kernels
+stream) and ``v`` is a color 3-vector field in planar (2, 3, S) form.  This
+is the staggered-Dslash access pattern of arXiv:1411.2087 with one
+simplification: the backward term uses the *site-local* adjoint link
+``U_mu(x)^dagger`` rather than the neighbor's ``U_mu(x - mu_hat)^dagger``,
+which keeps gauge-field traffic at ONE streamed read of U per application
+(the neighbor-gather cost all lands on the small vector field — exactly the
+halo traffic ``distributed.sharding.HaloSpec`` prices).
+
+Kernel formulation (same philosophy as ``su3_matmul``):
+
+  * sites map to VPU lanes; the 8 matrix-vector products per site are fully
+    unrolled into real FMA chains over (tile,) vectors — no MXU (K=3 wastes
+    the systolic array, and the stencil is bandwidth-bound anyway);
+  * the *neighbor gathering* happens OUTSIDE the kernel (the plan layer
+    materializes 8 shifted views of v); the kernel streams one
+    (8, 2, 3, tile) neighbor block plus one (2, 36, tile) link block
+    HBM->VMEM per grid step and keeps them resident while the unrolled
+    FMA chain runs — "shifted-neighbor loads kept in VMEM";
+  * ``accum_dtype`` upcasts the resident tiles so bf16-storage plans
+    accumulate at f32 while streaming 2-byte words (same scheme as the
+    multiply kernel).
+
+Layout contract:
+  u:     (2, 36, S)    — planar gauge links, [re|im, link*row*col, site]
+  v_nbr: (8, 2, 3, S)  — planar neighbor vectors, direction-major
+                         (+x, +y, +z, +t, -x, -y, -z, -t)
+  -> out: (2, 3, S)    — planar result vector field
+
+The per-site accumulation order is FIXED (mu-major, then l, forward before
+backward), so any site-set decomposition that feeds the same per-site inputs
+— full lattice, interior-only, boundary-only — produces bit-identical
+outputs.  The overlap-scheduled ``ExecutionPlan.stencil_step`` relies on
+this to stay bit-identical to the non-overlapped reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LINKS, SU3 = 4, 3
+ROWS = LINKS * SU3 * SU3  # 36 complex link entries per site
+NBR_DIRS = 2 * LINKS  # +x +y +z +t -x -y -z -t
+
+# 8 matrix-vector products x 9 complex MACs x 8 flops (4 mul + 4 add): the
+# useful-flop figure benchmarks report (the combine adds are the MAC adds).
+STENCIL_FLOPS_PER_SITE = NBR_DIRS * SU3 * SU3 * 8
+
+# words streamed per site: U (72) + 8 neighbor vectors (8 x 6) + out (6).
+# The halo payload constant (6 words per exchanged vector) lives with the
+# pricing rules in distributed.sharding.VECTOR_WORDS_PER_SITE.
+STENCIL_WORDS_PER_SITE = 2 * ROWS + NBR_DIRS * 2 * SU3 + 2 * SU3
+
+
+def _flat(j: int, k: int, l: int) -> int:
+    return (j * SU3 + k) * SU3 + l
+
+
+def _stencil_tile(u: jax.Array, v_nbr: jax.Array) -> jax.Array:
+    """out-tile = sum_mu U_mu . v_fwd[mu] + U_mu^dag . v_bwd[mu], unrolled.
+
+    u: (2, 36, T) planar link tile, v_nbr: (8, 2, 3, T) neighbor tiles.
+    Accumulation order is fixed (mu outer, l inner, forward then backward
+    per (mu, k, l)) — the bit-identity contract of the module docstring.
+    """
+    ur, ui = u[0], u[1]
+    out_r: list = [None] * SU3
+    out_i: list = [None] * SU3
+    for mu in range(LINKS):
+        vf_r, vf_i = v_nbr[mu, 0], v_nbr[mu, 1]  # (3, T)
+        vb_r, vb_i = v_nbr[LINKS + mu, 0], v_nbr[LINKS + mu, 1]
+        for k in range(SU3):
+            acc_r, acc_i = out_r[k], out_i[k]
+            for l in range(SU3):
+                f = _flat(mu, k, l)  # U[mu, k, l]
+                b = _flat(mu, l, k)  # U[mu, l, k], conjugated for the adjoint
+                # forward: U[mu,k,l] * v(x+mu)[l]
+                tr = ur[f] * vf_r[l] - ui[f] * vf_i[l]
+                ti = ur[f] * vf_i[l] + ui[f] * vf_r[l]
+                acc_r = tr if acc_r is None else acc_r + tr
+                acc_i = ti if acc_i is None else acc_i + ti
+                # backward: conj(U[mu,l,k]) * v(x-mu)[l]
+                sr = ur[b] * vb_r[l] + ui[b] * vb_i[l]
+                si = ur[b] * vb_i[l] - ui[b] * vb_r[l]
+                acc_r = acc_r + sr
+                acc_i = acc_i + si
+            out_r[k], out_i[k] = acc_r, acc_i
+    return jnp.stack(
+        [jnp.stack(out_r, axis=0), jnp.stack(out_i, axis=0)], axis=0
+    )
+
+
+def _su3_stencil_kernel(u_ref, v_ref, o_ref, *, accum_dtype: str | None = None):
+    """One grid step: the unrolled 8-direction FMA chain on resident tiles.
+
+    ``accum_dtype`` widens the VREG working precision exactly as in the
+    multiply kernel: tiles upcast once on VMEM load, the chain accumulates
+    wide, the out-tile narrows back to storage width on the way out.
+    """
+    u = u_ref[...]  # (2, 36, tile) in VMEM
+    v = v_ref[...]  # (8, 2, 3, tile) in VMEM
+    if accum_dtype is not None:
+        u = u.astype(accum_dtype)
+        v = v.astype(accum_dtype)
+    o_ref[...] = _stencil_tile(u, v).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "interpret", "accum_dtype")
+)
+def su3_stencil_planar(
+    u: jax.Array,
+    v_nbr: jax.Array,
+    *,
+    tile: int = 512,
+    interpret: bool = False,
+    accum_dtype: str | None = None,
+) -> jax.Array:
+    """Planar SU(3) nearest-neighbor stencil via pallas_call.
+
+    See the module docstring for the operator and layout contract.  The grid
+    walks site tiles; per step one (2, 36, tile) link block and one
+    (8, 2, 3, tile) neighbor block stream HBM->VMEM and the fully unrolled
+    complex FMA chain produces the (2, 3, tile) out block.
+    """
+    assert u.ndim == 3 and u.shape[:2] == (2, ROWS), u.shape
+    n_sites = u.shape[2]
+    assert v_nbr.shape == (NBR_DIRS, 2, SU3, n_sites), (v_nbr.shape, n_sites)
+    assert n_sites % tile == 0, (n_sites, tile)
+    grid = (n_sites // tile,)
+    return pl.pallas_call(
+        functools.partial(_su3_stencil_kernel, accum_dtype=accum_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2, ROWS, tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((NBR_DIRS, 2, SU3, tile), lambda i: (0, 0, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((2, SU3, tile), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((2, SU3, n_sites), u.dtype),
+        interpret=interpret,
+    )(u, v_nbr)
+
+
+def stencil_vmem_bytes(
+    tile: int, word_bytes: int = 4, accum_word_bytes: int | None = None
+) -> int:
+    """Working-set estimate for one stencil grid step (U, 8 neighbor, out
+    tiles) — the VMEM bound the autotuner gates stencil candidates on.
+
+    With mixed-precision accumulation the resident tiles live at the wider
+    of storage/accumulate width once upcast, so that bounds the set.
+    """
+    w = max(word_bytes, accum_word_bytes or word_bytes)
+    return STENCIL_WORDS_PER_SITE * tile * w

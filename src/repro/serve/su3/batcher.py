@@ -55,14 +55,23 @@ BucketKey = tuple[int, int]  # (L, chain depth k)
 
 @dataclasses.dataclass
 class ServeRequest:
-    """One user's lattice multiply: C = A (x) B chained ``k`` times."""
+    """One user's lattice request.
+
+    ``kind="multiply"`` (default): C = A (x) B chained ``k`` times, with
+    ``a`` the canonical lattice and ``b`` the (4, 3, 3) link matrix set.
+    ``kind="stencil"``: one application of the nearest-neighbor Dslash-style
+    operator, with ``a`` the canonical gauge lattice and ``b`` the canonical
+    color-vector field (n_sites, 3); ``k`` is always 1 (the stencil is not
+    chained — its output is a vector field, not a lattice).
+    """
 
     req_id: int
     a: Any  # canonical complex (n_sites, 4, 3, 3)
-    b: Any  # canonical complex (4, 3, 3)
+    b: Any  # canonical complex (4, 3, 3) | (n_sites, 3) for kind="stencil"
     L: int
     k: int
     arrival_s: float = 0.0  # perf_counter timestamp at admission
+    kind: str = "multiply"  # "multiply" | "stencil"
 
     @property
     def n_sites(self) -> int:
@@ -144,6 +153,9 @@ class DynamicBatcher:
         # bucket -> FIFO of requests; OrderedDict keeps bucket creation order
         # as the tiebreak when head-request arrival times are equal.
         self._buckets: "OrderedDict[BucketKey, list[ServeRequest]]" = OrderedDict()
+        # stencil requests coalesce by L only (no chain depth); they never
+        # ride multiply chains, so they live in their own queue family
+        self._stencil: "OrderedDict[int, list[ServeRequest]]" = OrderedDict()
         self._depth = 0
 
     def __len__(self) -> int:
@@ -156,15 +168,40 @@ class DynamicBatcher:
     def bucket_depths(self) -> dict[BucketKey, int]:
         return {k: len(v) for k, v in self._buckets.items() if v}
 
+    def stencil_depths(self) -> dict[int, int]:
+        """Waiting stencil requests per lattice size."""
+        return {L: len(q) for L, q in self._stencil.items() if q}
+
     def submit(self, req: ServeRequest) -> bool:
-        """Admit a request; False under backpressure (queue budget exhausted)."""
+        """Admit a request; False under backpressure (queue budget exhausted).
+        Multiply requests bucket by (L, k); stencil requests by L alone —
+        both draw on the one queue-depth budget."""
         if self._depth >= self.cfg.max_queue_depth:
             return False
         if not req.arrival_s:
             req.arrival_s = time.perf_counter()
-        self._buckets.setdefault(req.bucket, []).append(req)
+        if req.kind == "stencil":
+            self._stencil.setdefault(req.L, []).append(req)
+        else:
+            self._buckets.setdefault(req.bucket, []).append(req)
         self._depth += 1
         return True
+
+    def next_stencil_batch(self) -> CoalescedBatch | None:
+        """Coalesce up to ``max_batch`` stencil requests of the most urgent
+        lattice size (oldest waiting head first), warm-size padded like the
+        multiply buckets.  The batch ``key`` is ``(L, 1)`` — one stencil
+        application per request."""
+        live = [(L, q) for L, q in self._stencil.items() if q]
+        if not live:
+            return None
+        L, queue = min(live, key=lambda kv: kv[1][0].arrival_s)
+        take = queue[: self.cfg.max_batch]
+        self._stencil[L] = queue[len(take):]
+        self._depth -= len(take)
+        return CoalescedBatch(
+            key=(L, 1), requests=take, padded_size=self.cfg.padded_size(len(take))
+        )
 
     def next_batch(self) -> CoalescedBatch | None:
         """Coalesce up to ``max_batch`` requests from the most urgent bucket.

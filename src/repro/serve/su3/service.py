@@ -26,6 +26,12 @@ The chain depth ``k`` defaults to the autotuned fused depth for the request's
 (backend, L) — ``autotune.tuned_fused_k`` — so callers that don't care get
 the measured-best dispatch amortization instead of a hardcoded constant.
 
+Stencil requests (``submit_stencil``) ride the same front door: same
+locality router, same per-host batcher (their own by-L queue family), same
+warm runner pool.  They coalesce into one vmapped stencil dispatch per
+scheduling turn and return canonical vector fields; they never join multiply
+chains in any dispatch mode.
+
 Dispatch modes
 --------------
 ``batch-per-step`` (default): one ``step()`` call dispatches one coalesced
@@ -61,10 +67,12 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import autotune
 from repro.core.su3.layouts import Layout
 from repro.core.su3.plan import BatchedLatticeRunner, EngineConfig
+from repro.kernels.su3_stencil import STENCIL_FLOPS_PER_SITE
 from repro.launch.mesh import MeshSpec
 from repro.serve.su3.batcher import (
     BatcherConfig,
@@ -276,6 +284,11 @@ class SU3Service:
         self._ecfg: dict[int, EngineConfig] = {}  # L -> resolved plan tuple
         self._tuned_k: dict[int, int] = {}
         self._results: dict[int, jax.Array] = {}
+        # (host, L, dtype, layout, tile) -> jitted vmapped stencil dispatch
+        self._stencil_steps: dict[tuple, Any] = {}
+        # per-host kind fairness: True when the host's LAST turn served a
+        # stencil batch (next turn with both kinds pending serves multiplies)
+        self._stencil_served_last: dict[int, bool] = {}
         self._awaited: set[int] = set()  # ids owned by pending arun callers
         self._seen_shapes: set[tuple] = set()
         self._next_id = 0
@@ -355,13 +368,14 @@ class SU3Service:
         )
 
     def warm(self, Ls: tuple[int, ...], ks: tuple[int, ...] = (1,),
-             batch_sizes: tuple[int, ...] = ()) -> None:
+             batch_sizes: tuple[int, ...] = (), stencil: bool = False) -> None:
         """Pre-build runners (and optionally compile dispatch shapes).
 
         Serving cold-start control: first-touch compiles happen here instead
         of inside a user request's latency.  In continuous mode this also
         compiles the (chain_slots, k=1) iteration shape each chain
-        re-dispatches.
+        re-dispatches.  ``stencil=True`` additionally compiles the vmapped
+        stencil dispatch at each warm batch size.
         """
         for L in Ls:
             runner = self.runner_for(L)
@@ -372,6 +386,21 @@ class SU3Service:
                 for k in ks:
                     runner.multiply(a, b, k=k).block_until_ready()
                     self._seen_shapes.add(self._shape_key(runner, L, k, bsz))
+                if stencil:
+                    plan = runner.plan
+                    host = self.router.host_for(L)
+                    dispatched = bsz + (-bsz) % runner.n_devices
+                    u_w = jnp.zeros(
+                        (dispatched, n_sites, 4, 3, 3), jnp.complex64
+                    )
+                    v = jnp.zeros((dispatched, n_sites, 3), jnp.complex64)
+                    u_phys = runner.pack_batch(u_w)
+                    v_p = jax.vmap(
+                        lambda x: plan.codec.pack_vec(x, plan.padded_sites)
+                    )(v)
+                    step = self._stencil_step_for(runner, host, L)
+                    step(u_phys, v_p).block_until_ready()
+                    self._seen_shapes.add(("stencil", L, dispatched))
             if self.cfg.megakernel:
                 # per-slot depths are data, so ONE compile at this capacity
                 # serves every (k mix, admission pattern) the table will see
@@ -441,6 +470,41 @@ class SU3Service:
         self.metrics.record_admit(depth + 1)
         return req.req_id
 
+    def submit_stencil(self, u: jax.Array, v: jax.Array) -> int | None:
+        """Queue one nearest-neighbor stencil application on its home host.
+
+        Args:
+            u: canonical complex gauge lattice ``(L**4, 4, 3, 3)``.
+            v: canonical complex color-vector field ``(L**4, 3)``.
+
+        Returns:
+            A request id (result: the canonical ``(L**4, 3)`` output vector
+            field), or None under backpressure — same contract as
+            :meth:`submit`.  Stencil requests ride the SAME warm pool,
+            locality router, and per-host batcher as multiplies; they
+            coalesce by lattice size into one vmapped stencil dispatch and
+            never join multiply chains (their output is a vector field).
+        """
+        L = self._infer_L(u)
+        if v.shape != (L**4, 3):
+            raise ValueError(
+                f"stencil vector field must be (L**4, 3) canonical complex "
+                f"matching the lattice, got {v.shape} for L={L}"
+            )
+        host = self.router.host_for(L)
+        depth = self.queued()
+        req = ServeRequest(
+            req_id=self._next_id, a=u, b=v, L=L, k=1,
+            arrival_s=time.perf_counter(), kind="stencil",
+        )
+        if not self._batchers[host].submit(req):
+            self.metrics.record_reject()
+            return None
+        self.router.record_load(host, float(STENCIL_FLOPS_PER_SITE) * req.n_sites)
+        self._next_id += 1
+        self.metrics.record_admit(depth + 1)
+        return req.req_id
+
     # -- dispatch ------------------------------------------------------------
 
     def _work_pending(self) -> bool:
@@ -463,24 +527,44 @@ class SU3Service:
         next non-empty host (round-robin).  Continuous mode: admit waiting
         requests into that host's in-flight chains at this iteration
         boundary, then advance each of its live chains by ONE iteration.
+        Stencil requests (any mode) dispatch as their own coalesced vmapped
+        batch; when a host has BOTH kinds pending, turns alternate between
+        them (a sustained stencil stream must not starve admitted multiply
+        chains, nor vice versa) — they never join chains.
         """
         for _ in range(self.cfg.hosts):
             host = self._rr_host
             self._rr_host = (self._rr_host + 1) % self.cfg.hosts
-            if self.cfg.megakernel:
-                entry = self._tables.get(host)
-                if len(self._batchers[host]) or (entry and entry[0].live):
+            has_stencil = bool(self._batchers[host].stencil_depths())
+            has_multiply = self._multiply_pending(host)
+            if has_stencil and (
+                not has_multiply or not self._stencil_served_last.get(host, False)
+            ):
+                self._stencil_served_last[host] = True
+                return self._step_stencil(host)
+            if has_multiply:
+                self._stencil_served_last[host] = False
+                if self.cfg.megakernel:
                     return self._step_megakernel(host)
-            elif self.cfg.continuous:
-                if len(self._batchers[host]) or any(
-                    h == host and chain.live
-                    for (h, _L), (chain, _a) in self._chains.items()
-                ):
+                if self.cfg.continuous:
                     return self._step_continuous(host)
-            else:
-                if len(self._batchers[host]):
-                    return self._step_batch(host)
+                return self._step_batch(host)
         return 0
+
+    def _multiply_pending(self, host: int) -> bool:
+        """Multiply work waiting for ``host``: queued (L, k) buckets, or live
+        in-flight chains/slots in the continuous/megakernel modes."""
+        if self._batchers[host].bucket_depths():
+            return True
+        if self.cfg.megakernel:
+            entry = self._tables.get(host)
+            return bool(entry and entry[0].live)
+        if self.cfg.continuous:
+            return any(
+                h == host and chain.live
+                for (h, _L), (chain, _a) in self._chains.items()
+            )
+        return False
 
     def _step_batch(self, host: int) -> int:
         """One coalesced fused-k dispatch for ``host`` (batch-per-step)."""
@@ -514,6 +598,73 @@ class SU3Service:
         done_s = time.perf_counter()
         for i, r in enumerate(reqs):
             self._results[r.req_id] = c[i]
+            self.metrics.record_completion(done_s - r.arrival_s)
+        self.metrics.record_queue_depth(self.queued())
+        return len(reqs)
+
+    def _stencil_step_for(self, runner: BatchedLatticeRunner, host: int, L: int):
+        """The host's jitted, vmapped stencil dispatch for L — built once per
+        warm-pool entry from the plan's reference stencil (the serving path
+        runs on a host-local submesh, where the overlap schedule degenerates
+        to the reference anyway).  Dispatch parity with the multiply path:
+        the batch axis shards whole request lattices over the host's devices
+        (the same placement ``BatchedLatticeRunner.run`` gives multiplies).
+        """
+        ecfg = runner.cfg
+        key = (host, L, ecfg.dtype, ecfg.layout.value, ecfg.tile)
+        step = self._stencil_steps.get(key)
+        if step is None:
+            plan = runner.plan
+            axes = plan.site_axes
+            batch_axis = axes if len(axes) > 1 else axes[0]
+            out_sh = NamedSharding(plan.mesh, P(batch_axis, None, None, None))
+            step = jax.jit(
+                jax.vmap(plan.raw_stencil_reference()), out_shardings=out_sh
+            )
+            self._stencil_steps[key] = step
+        return step
+
+    def _step_stencil(self, host: int) -> int:
+        """One coalesced stencil dispatch for ``host``: the oldest waiting
+        lattice size's requests, vmapped through the warm runner's plan."""
+        batch = self._batchers[host].next_stencil_batch()
+        if batch is None:
+            return 0
+        reqs = batch.requests
+        runner = self.runner_for(batch.L, host)
+        plan = runner.plan
+        n_sites = batch.L**4
+        # warm-size padding (jit-cache control) + device-multiple padding
+        # (whole lattices per device, as the multiply path's run() pads)
+        dispatched = batch.padded_size + (-batch.padded_size) % runner.n_devices
+        pad = dispatched - len(reqs)
+        u = jnp.stack([r.a for r in reqs])
+        v = jnp.stack([r.b for r in reqs])
+        if pad:
+            u = jnp.concatenate(
+                [u, jnp.zeros((pad,) + u.shape[1:], u.dtype)], axis=0
+            )
+            v = jnp.concatenate(
+                [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)], axis=0
+            )
+        u_phys = runner.pack_batch(u)
+        v_p = jax.vmap(lambda x: plan.codec.pack_vec(x, plan.padded_sites))(v)
+        step = self._stencil_step_for(runner, host, batch.L)
+        shape_key = ("stencil", batch.L, dispatched)
+        cold = shape_key not in self._seen_shapes
+        t0 = time.perf_counter()
+        out_p = step(u_phys, v_p)
+        out_p.block_until_ready()
+        step_s = time.perf_counter() - t0
+        self._seen_shapes.add(shape_key)
+        self.metrics.record_dispatch(
+            live=len(reqs), padded=dispatched, step_s=step_s,
+            flops=float(STENCIL_FLOPS_PER_SITE) * n_sites * len(reqs),
+            cold=cold, host=host,
+        )
+        done_s = time.perf_counter()
+        for i, r in enumerate(reqs):
+            self._results[r.req_id] = plan.codec.unpack_vec(out_p[i], n_sites)
             self.metrics.record_completion(done_s - r.arrival_s)
         self.metrics.record_queue_depth(self.queued())
         return len(reqs)

@@ -117,3 +117,41 @@ def test_diff_within_threshold_passes_and_noise_baseline_skipped():
     compared, regressions = bench_diff.diff(baseline, current, 0.15)
     assert [c["name"] for c in compared] == ["steady"]
     assert regressions == []
+
+
+def test_asymmetric_rows_named_both_directions():
+    """A row present on only one side is a NAMED warning, never a silent
+    skip — a batch of new (e.g. stencil) rows must not mask a dropped one."""
+    baseline = _payload({"t": [
+        {"name": "kept", "GFLOPS": 1.0},
+        {"name": "dropped", "GFLOPS": 2.0},
+    ]})
+    current = _payload({"t": [
+        {"name": "kept", "GFLOPS": 1.0},
+        {"name": "brand_new", "GFLOPS": 3.0},
+    ], "stencil": [
+        {"name": "stencil_L4_float32_overlap", "GFLOPS": 1.2},
+    ]})
+    only_base, only_cur = bench_diff.asymmetric_rows(baseline, current)
+    assert only_base == [("t", "dropped")]
+    assert only_cur == [("stencil", "stencil_L4_float32_overlap"),
+                        ("t", "brand_new")]
+
+
+def test_main_prints_asymmetric_warnings(tmp_path, capsys):
+    import json
+    base_p = tmp_path / "base.json"
+    cur_p = tmp_path / "cur.json"
+    base_p.write_text(json.dumps(_payload({"t": [
+        {"name": "kept", "GFLOPS": 1.0},
+        {"name": "dropped", "GFLOPS": 2.0},
+    ]})))
+    cur_p.write_text(json.dumps(_payload({"t": [
+        {"name": "kept", "GFLOPS": 1.0},
+        {"name": "brand_new", "GFLOPS": 3.0},
+    ]})))
+    rc = bench_diff.main(["--baseline", str(base_p), "--current", str(cur_p)])
+    err = capsys.readouterr().err
+    assert rc == 0  # warnings, not failures
+    assert "WARNING row t/dropped" in err and "MISSING" in err
+    assert "WARNING row t/brand_new" in err and "new in the current" in err

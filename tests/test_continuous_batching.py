@@ -4,6 +4,8 @@ correctness under mixed chain depths, and the host-sharded pool."""
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # smoke's fast tier skips these (-m "not slow")
+
 import jax
 
 from repro.kernels import ref

@@ -9,6 +9,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # smoke's fast tier skips these (-m "not slow")
+
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 CASES = [

@@ -82,9 +82,11 @@ def test_registry_unifies_variants_and_pallas():
     assert "pallas" in names and "versionX" in names and "version_gemm" in names
     entry = registry.get_kernel("pallas")
     assert entry.form == registry.PLANAR and entry.supports_fused
-    assert registry.kernel_names(backend="pallas") == ["pallas", "pallas_megakernel"]
+    assert registry.kernel_names(backend="pallas") == [
+        "pallas", "pallas_megakernel", "pallas_stencil"]
     assert "pallas" not in registry.kernel_names(form=registry.CANONICAL)
     assert registry.kernel_names(form=registry.BATCHED) == ["pallas_megakernel"]
+    assert registry.kernel_names(form=registry.STENCIL) == ["pallas_stencil"]
 
 
 def test_plan_rejects_invalid_combinations():

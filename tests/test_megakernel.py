@@ -23,6 +23,8 @@ last ulp.  Every multiply is still the exact single-step computation.)
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # smoke's fast tier skips these (-m "not slow")
+
 import jax
 import jax.numpy as jnp
 

@@ -4,6 +4,8 @@ import asyncio
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # smoke's fast tier skips these (-m "not slow")
+
 import jax
 import jax.numpy as jnp
 

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # smoke's fast tier skips these (-m "not slow")
+
 from repro.configs import get_config
 from repro.models import registry
 from repro.optim.adamw import AdamWConfig
