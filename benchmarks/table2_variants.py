@@ -44,6 +44,23 @@ def run(L: int = 8, iters: tuple[int, ...] = (1, 5)) -> list[dict]:
             row.update(name=f"table2_{variant}_I{n_iter}",
                        v5e_bw_bound_gf=round(v5e_gf, 1))
             rows.append(row)
+    # Two-row compressed-gauge rows: same Pallas kernel, 48 words/site
+    # streamed for A/C instead of 72 (row 2 reconstructed in-register), with
+    # and without the bf16-storage stack.  ``bytes_per_site`` in the row is
+    # what the acceptance gate diffs against the 18-real rows above.
+    for dtype, accum in (("float32", ""), ("bfloat16", "float32")):
+        cfg = EngineConfig(L=L, layout=Layout.SOA, variant="pallas",
+                           dtype=dtype, accum_dtype=accum,
+                           compression="two_row",
+                           iterations=max(iters), warmups=1, tile=128)
+        r = SU3Engine(cfg).run()
+        tm = r.traffic
+        v5e_gf = roofline.TPU_V5E.hbm_bw * tm.arithmetic_intensity / 1e9
+        row = r.row()
+        acc_tag = f"_acc-{accum}" if accum else ""
+        row.update(name=f"table2_pallas_two_row_{dtype}{acc_tag}",
+                   v5e_bw_bound_gf=round(v5e_gf, 1))
+        rows.append(row)
     # Fused multi-iteration stepping: block-time K dispatched single steps
     # against ONE fused(K) dispatch on the same engine (median over repeated
     # blocks — individually-timed iterations at L=4 are pure noise). One

@@ -29,6 +29,23 @@ observations — a row that recovers is timer noise, not a regression, and
 passes without human retry.  ``--no-retry`` keeps the old single-pass
 behavior (CI contexts that re-run the whole job themselves).  On the real
 TPU target the variance is far below the threshold.
+
+Besides the throughput diff, the gate checks the CURRENT artifact's
+compression and wide-halo rows (no baseline needed — bytes/site is a
+deterministic model quantity, so there is no retry either):
+
+  * ``table2_pallas_two_row_*`` rows must exist for f32 and bf16, declare
+    ``compression=two_row``, and stream <= 70% of the matching 18-real
+    pallas row's bytes/site (true compressed ratio: 96/144 words = 67%).
+  * measured ``stencil_*_two_row_*`` rows must exist and stream <= 85% of
+    their 18-real siblings (true ratio: 102/126 words = 81% — the gauge
+    field is only 72 of the 126 streamed words/site).
+  * ``stencil_depth2_identity_h{1,2,4}[_two_row]`` rows must all report
+    ``identical: true`` (depth-2 exchange bit-equals two depth-1 steps).
+
+A silent fallback to the 18-real layout fails all three ways: the row
+keeps the full bytes/site, loses its ``compression`` tag, or vanishes.
+``--no-compression-gate`` skips this block (pre-compression artifacts).
 """
 from __future__ import annotations
 
@@ -45,6 +62,14 @@ RETRY_RUNS = 2  # re-measurements per flagged gate (median of 1 + RETRY_RUNS)
 # (metric key, minimum absolute baseline value worth gating on) — rows below
 # the floor are pure timer noise at CPU quick-mode sizes.
 _METRICS = (("GFLOPS", 0.05), ("sustained_gflops_busy", 0.01))
+# bytes/site ceilings for the compression gate, as a fraction of the 18-real
+# row.  Both sit between the true compressed ratio and 1.0, so a silent
+# fallback to the full layout (ratio 1.0) fails while the honest compressed
+# stream passes with margin.
+MULTIPLY_BYTES_RATIO = 0.70   # true: 96/144 words = 0.667
+STENCIL_BYTES_RATIO = 0.85    # true: 102/126 words = 0.810
+DEPTH2_HOSTS = (1, 2, 4)
+_WORD_BYTES = {"float32": 4, "bfloat16": 2, "float64": 8}
 
 
 def collect_rows(
@@ -209,6 +234,129 @@ def retry_regressions(
     return still, recovered
 
 
+def _rows_by_name(payload: dict, table: str) -> dict[str, dict]:
+    out: dict[str, dict] = {}
+    rows = payload.get("tables", {}).get(table, [])
+    if isinstance(rows, list):
+        for row in rows:
+            if isinstance(row, dict) and row.get("name"):
+                out[str(row["name"])] = row
+    return out
+
+
+def _bytes_verdict(name: str, row: dict, base_name: str, base_bps: float,
+                   ceiling: float, problems: list[str]) -> None:
+    """One compressed row's bytes/site report line + ceiling check."""
+    bps = row.get("bytes_per_site")
+    if not isinstance(bps, (int, float)) or bps <= 0:
+        problems.append(f"{name}: bytes_per_site missing — cannot prove the "
+                        f"compressed stream")
+        return
+    ratio = bps / base_bps
+    gf = row.get("GFLOPS")
+    gf_txt = f" at {gf:.3f} GF/s" if isinstance(gf, (int, float)) else ""
+    print(f"  {name}: {bps:.0f} B/site vs {base_bps:.0f} ({base_name}) "
+          f"= {(ratio - 1) * 100:+.1f}%{gf_txt}")
+    if ratio > ceiling:
+        problems.append(
+            f"{name}: bytes/site {bps:.0f} is {ratio:.0%} of the 18-real "
+            f"{base_name} ({base_bps:.0f}) — above the {ceiling:.0%} ceiling; "
+            f"looks like a silent fallback to the uncompressed layout")
+
+
+def compression_gate(current: dict) -> list[str]:
+    """Presence + bytes/site checks on the compressed and depth-2 rows of
+    the CURRENT artifact; -> list of problems (empty = gate passes).
+
+    Bytes/site is a deterministic layout quantity, so unlike the throughput
+    diff there is no noise retry: any violation is a real code-path change.
+    """
+    problems: list[str] = []
+    t2 = _rows_by_name(current, "table2_variants")
+    st = _rows_by_name(current, "stencil")
+
+    # -- multiply rows: f32 + bf16 compressed vs the 18-real pallas rows ----
+    mult_base: dict[str, dict] = {}
+    for name in sorted(t2):
+        row = t2[name]
+        if (row.get("variant") == "pallas"
+                and row.get("compression", "none") == "none"
+                and isinstance(row.get("bytes_per_site"), (int, float))):
+            mult_base.setdefault(str(row.get("dtype")), row)
+    comp_rows = {n: r for n, r in t2.items() if "_two_row" in n}
+    for dtype in ("float32", "bfloat16"):
+        if not any(r.get("dtype") == dtype for r in comp_rows.values()):
+            problems.append(f"table2: no table2_pallas_two_row_* row for "
+                            f"{dtype} — compressed multiply not measured")
+    for name in sorted(comp_rows):
+        row = comp_rows[name]
+        if row.get("compression") != "two_row":
+            problems.append(f"{name}: row does not declare compression="
+                            f"two_row — silent fallback to 18-real")
+            continue
+        dtype = str(row.get("dtype", "float32"))
+        if dtype in mult_base:
+            base = mult_base[dtype]
+            base_bps, base_name = float(base["bytes_per_site"]), base["name"]
+        elif "float32" in mult_base:
+            # no uncompressed row at this dtype: scale the f32 one by the
+            # storage-word width (the word COUNT is dtype-independent)
+            scale = _WORD_BYTES.get(dtype, 4) / _WORD_BYTES["float32"]
+            base_bps = float(mult_base["float32"]["bytes_per_site"]) * scale
+            base_name = f"{mult_base['float32']['name']} scaled to {dtype}"
+        else:
+            problems.append(f"{name}: no 18-real pallas row in table2 to "
+                            f"diff bytes/site against")
+            continue
+        _bytes_verdict(name, row, str(base_name), base_bps,
+                       MULTIPLY_BYTES_RATIO, problems)
+
+    # -- measured stencil rows: sibling = same name minus the _two_row tag --
+    st_comp = {n: r for n, r in st.items()
+               if "_two_row" in n and n.startswith("stencil_L")}
+    for dtype in ("float32", "bfloat16"):
+        if not any(r.get("dtype") == dtype for r in st_comp.values()):
+            problems.append(f"stencil: no measured stencil_L*_two_row_* row "
+                            f"for {dtype}")
+    for name in sorted(st_comp):
+        row = st_comp[name]
+        if row.get("compression") != "two_row":
+            problems.append(f"{name}: row does not declare compression="
+                            f"two_row — silent fallback to 18-real")
+            continue
+        sibling = name.replace("_two_row", "")
+        base = st.get(sibling)
+        if not base or not isinstance(base.get("bytes_per_site"), (int, float)):
+            problems.append(f"{name}: 18-real sibling row {sibling!r} "
+                            f"missing — cannot diff bytes/site")
+            continue
+        _bytes_verdict(name, row, sibling, float(base["bytes_per_site"]),
+                       STENCIL_BYTES_RATIO, problems)
+
+    # -- depth-2 identity: every host count, both layouts, bit-identical ----
+    for hosts in DEPTH2_HOSTS:
+        for tag in ("", "_two_row"):
+            name = f"stencil_depth2_identity_h{hosts}{tag}"
+            row = st.get(name)
+            if row is None:
+                problems.append(f"stencil: {name} row missing — depth-2 "
+                                f"halo path not exercised at {hosts} host(s)")
+            elif row.get("error"):
+                problems.append(f"{name}: subprocess failed: {row['error']}")
+            elif row.get("identical") is not True:
+                problems.append(f"{name}: depth-2 step NOT bit-identical to "
+                                f"two depth-1 steps")
+            else:
+                d1 = row.get("t_two_depth1_us")
+                d2 = row.get("t_one_depth2_us")
+                timing = (f" ({d1:.0f}us -> {d2:.0f}us)"
+                          if isinstance(d1, (int, float))
+                          and isinstance(d2, (int, float)) else "")
+                print(f"  {name}: identical, 1 exchange saved per 2 "
+                      f"applications{timing}")
+    return problems
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default=DEFAULT_ARTIFACT,
@@ -222,18 +370,40 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--no-retry", action="store_true",
                     help="fail flagged rows immediately instead of "
                          "re-measuring them (median of 3)")
+    ap.add_argument("--no-compression-gate", action="store_true",
+                    help="skip the compressed-gauge/depth-2 row checks "
+                         "(pre-compression artifacts)")
     args = ap.parse_args(argv)
 
-    baseline = load_baseline(args.baseline)
-    if baseline is None:
-        print(f"bench_diff: no baseline at {args.baseline!r}; nothing to gate")
-        return 0
     try:
         with open(args.current) as f:
             current = json.load(f)
     except FileNotFoundError:
         print(f"bench_diff: current artifact {args.current!r} missing", file=sys.stderr)
         return 2
+
+    # baseline-free checks on the fresh artifact itself — these run (and can
+    # fail) even on a first PR with nothing committed to regress against.
+    # Only full harness artifacts carry the gated tables (benchmarks.run
+    # emits them even on error, as ``{table}_error`` rows); ad-hoc payloads
+    # without them have nothing to prove.
+    tables = current.get("tables", {})
+    gate_applies = "table2_variants" in tables or "stencil" in tables
+    problems: list[str] = []
+    if not args.no_compression_gate and gate_applies:
+        print("bench_diff: compression / depth-2 gate (current artifact):")
+        problems = compression_gate(current)
+        for p in problems:
+            print(f"  FAIL {p}", file=sys.stderr)
+
+    baseline = load_baseline(args.baseline)
+    if baseline is None:
+        print(f"bench_diff: no baseline at {args.baseline!r}; nothing to diff")
+        if problems:
+            print(f"bench_diff: compression gate failed "
+                  f"({len(problems)} problem(s))", file=sys.stderr)
+            return 1
+        return 0
 
     only_base, only_cur = asymmetric_rows(baseline, current)
     for table, name in only_base:
@@ -248,6 +418,10 @@ def main(argv: list[str] | None = None) -> int:
     compared, regressions = diff(baseline, current, args.threshold)
     if not compared:
         print("bench_diff: no shared measured rows between baseline and current")
+        if problems:
+            print(f"bench_diff: compression gate failed "
+                  f"({len(problems)} problem(s))", file=sys.stderr)
+            return 1
         return 0
     width = max(len(f"{c['table']}/{c['name']}") for c in compared)
     for c in compared:
@@ -275,7 +449,13 @@ def main(argv: list[str] | None = None) -> int:
         print(f"\nbench_diff: {len(regressions)}/{len(compared)} rows regressed "
               f">{args.threshold:.0%}", file=sys.stderr)
         return 1
-    print(f"\nbench_diff: OK — {len(compared)} rows within {args.threshold:.0%}")
+    if problems:
+        print(f"\nbench_diff: compression gate failed "
+              f"({len(problems)} problem(s))", file=sys.stderr)
+        return 1
+    print(f"\nbench_diff: OK — {len(compared)} rows within {args.threshold:.0%}"
+          + ("; compression/depth-2 rows verified"
+             if gate_applies and not args.no_compression_gate else ""))
     return 0
 
 

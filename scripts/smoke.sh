@@ -28,6 +28,16 @@ for arg in "$@"; do
   esac
 done
 
+echo "== compressed-gauge spot check (reconstruct accuracy + depth-2 identity) =="
+# Seconds, not minutes: ONE reconstruct bit-accuracy check and ONE
+# depth-2-vs-two-exchange identity check so a broken compression path
+# surfaces before the full fast tier spins up.  The exhaustive sweeps
+# (layout x dtype x tile property tests, multi-host subprocess identity,
+# autotune sweeps) stay in the fast/slow pytest tiers below.
+python -m pytest -x -q \
+  tests/test_compression.py::test_compressed_multiply_matches_full_kernel_on_su3 \
+  "tests/test_compression.py::test_stencil_depth2_single_host_bit_identical[two_row]"
+
 echo "== fast tier (-m 'not slow') =="
 python -m pytest -x -q -m "not slow"
 

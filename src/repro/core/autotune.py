@@ -23,9 +23,10 @@ napkin-math the expected effect, measure, keep the winner:
     measurements, so engines, serving, and benchmarks all start from the
     tuned tuple for free.
 
-Cache schema: v2 (the ``pipeline`` block).  Keys carry the version, so
-pre-pipeline (v1) entries simply miss and re-measure — they are never read
-with missing fields.
+Cache schema: v3 (the ``compression`` axis on multiply configs and the
+``depth`` axis on stencil configs).  Keys carry the version, so v1/v2
+entries simply miss and re-measure — they are never read with missing
+fields.
 
 Cache location: ``$REPRO_SU3_CACHE_DIR`` or ``~/.cache/repro_su3``.
 """
@@ -50,13 +51,17 @@ from repro.kernels import su3_matmul, su3_stencil
 
 CACHE_ENV = "REPRO_SU3_CACHE_DIR"
 CACHE_FILE = "su3_autotune.json"
-SCHEMA_VERSION = 2  # v2: joint (tile, fused_k) pipeline sweep + provenance
+SCHEMA_VERSION = 3  # v3: compression axis in the key + depth axis on stencils
 DEFAULT_PRUNE = 0.5  # measure the top half of the model-ranked candidates
 DEFAULT_TILES = (128, 256, 512, 1024, 2048, 4096)
 DEFAULT_KS = (1, 2, 4, 8)
+DEFAULT_DEPTHS = (1, 2)  # halo exchange depths the stencil sweep considers
 # per-dispatch fixed cost in issue slots (kernel launch + grid sequencing);
 # amortized over the fused chain, which is what makes deep K win at small L
 DISPATCH_ISSUE_SLOTS = 5_000.0
+# fixed per-exchange latency (collective setup + neighbor sync), the term a
+# depth-2 communication-avoiding schedule amortizes over two applications
+HALO_EXCHANGE_LATENCY_S = 2e-5
 
 
 @dataclasses.dataclass
@@ -81,6 +86,7 @@ def hlo_bytes_for_variant(
     tile: int = 512,
     dtype: str = "float32",
     accum_dtype: str = "",
+    compression: str = "none",
 ) -> float:
     """Lower the *physical* plan step through XLA; count HLO bytes per site.
 
@@ -95,8 +101,16 @@ def hlo_bytes_for_variant(
     so its measured bytes/site land well under the f32 plan's even though
     every FMA runs at f32 (converts are charged at the narrow side — the
     paper-correct streaming cost).
+
+    ``compression="two_row"`` lowers the 12-real gauge plan: the packed
+    operand physically carries 48 words/site and the kernel reconstructs the
+    third row in-register, so the compressed bytes show up in the counted
+    HLO traffic rather than being asserted from the model.
     """
-    codec = layouts.make_codec(layout, tile=tile, dtype=dtype, accum_dtype=accum_dtype)
+    codec = layouts.make_codec(
+        layout, tile=tile, dtype=dtype, accum_dtype=accum_dtype,
+        compression=layouts.GaugeCompression(compression),
+    )
     entry = registry.get_kernel(variant)
     interpret = True if entry.form == registry.PLANAR else None
     step = make_raw_step(codec, entry, tile=tile, interpret=interpret)
@@ -176,25 +190,30 @@ def k_sweep(
 def layout_sweep(n_sites: int = 4096) -> list[dict]:
     """The paper's AoS->SoA traffic claim, measured at the HLO level.
 
-    The final row is the bf16-storage / f32-accumulate serving plan: same
-    kernel, half the streamed bytes per site, double the bandwidth-bound
-    GFLOPS — the MILC-on-KNL reduced-precision-storage scheme measured at
-    the HLO level rather than assumed.
+    The bf16-storage / f32-accumulate row is the MILC-on-KNL reduced-
+    precision-storage scheme; the ``two_row`` rows stack the 12-real gauge
+    compression on top (48 words/site streamed, third row reconstructed
+    in-register), both measured at the HLO level rather than assumed.
     """
     rows = []
-    for variant, layout, dtype, accum in (
-            ("versionX", layouts.Layout.AOS, "float32", ""),
-            ("versionX", layouts.Layout.SOA, "float32", ""),
-            ("version_gemm", layouts.Layout.SOA, "float32", ""),
-            ("pallas", layouts.Layout.SOA, "float32", ""),
-            ("pallas", layouts.Layout.SOA, "bfloat16", "float32")):
-        tm = layouts.TrafficModel.for_dtype(layout, n_sites, dtype)
+    for variant, layout, dtype, accum, comp in (
+            ("versionX", layouts.Layout.AOS, "float32", "", "none"),
+            ("versionX", layouts.Layout.SOA, "float32", "", "none"),
+            ("version_gemm", layouts.Layout.SOA, "float32", "", "none"),
+            ("pallas", layouts.Layout.SOA, "float32", "", "none"),
+            ("pallas", layouts.Layout.SOA, "bfloat16", "float32", "none"),
+            ("pallas", layouts.Layout.SOA, "float32", "", "two_row"),
+            ("pallas", layouts.Layout.SOA, "bfloat16", "float32", "two_row")):
+        tm = layouts.TrafficModel.for_dtype(
+            layout, n_sites, dtype, compression=layouts.GaugeCompression(comp)
+        )
         hlo_b = hlo_bytes_for_variant(variant, layout, n_sites,
-                                      dtype=dtype, accum_dtype=accum)
+                                      dtype=dtype, accum_dtype=accum,
+                                      compression=comp)
         bound = roofline.TPU_V5E.hbm_bw * tm.arithmetic_intensity / 1e9
         rows.append({
             "variant": variant, "layout": layout.value, "dtype": dtype,
-            "accum_dtype": accum or dtype,
+            "accum_dtype": accum or dtype, "compression": comp,
             "model_bytes_per_site": tm.bytes_per_site_rw,
             "hlo_bytes_per_site": round(hlo_b, 1),
             "ai": round(tm.arithmetic_intensity, 3),
@@ -238,11 +257,12 @@ def enumerate_candidates(
     ]
 
 
-_INSTR_MODEL_CACHE: dict[tuple[str, str, int], tuple[float, float]] = {}
+_INSTR_MODEL_CACHE: dict[tuple[str, str, int, str], tuple[float, float]] = {}
 
 
 def kernel_instruction_model(
-    dtype: str = "float32", accum_dtype: str = "", tile: int = 256
+    dtype: str = "float32", accum_dtype: str = "", tile: int = 256,
+    compression: str = "none",
 ) -> tuple[float, float]:
     """(base, per_multiply) issued-instruction counts of ONE kernel grid step.
 
@@ -258,16 +278,17 @@ def kernel_instruction_model(
     vector-ISSUE counts: one op however wide its lane payload, which is
     exactly why a larger tile lowers the issue bill per site.
     """
-    key = (dtype, accum_dtype, tile)
+    key = (dtype, accum_dtype, tile, compression)
     if key not in _INSTR_MODEL_CACHE:
         codec = layouts.make_codec(
-            Layout.SOA, tile=tile, dtype=dtype, accum_dtype=accum_dtype
+            Layout.SOA, tile=tile, dtype=dtype, accum_dtype=accum_dtype,
+            compression=layouts.GaugeCompression(compression),
         )
         entry = registry.get_kernel("pallas")
 
         def instrs(k: int) -> float:
             step = make_raw_step(codec, entry, tile=tile, k_iters=k, interpret=True)
-            a_p = jnp.zeros((2, layouts.PLANAR_ROWS, tile), codec.word_dtype)
+            a_p = jnp.zeros((2, codec.planar_rows, tile), codec.word_dtype)
             b_p = jnp.zeros((2, layouts.PLANAR_ROWS), codec.word_dtype)
             compiled = jax.jit(step).lower(a_p, b_p).compile()
             return hlo_costs.analyze_hlo(compiled.as_text()).instructions
@@ -285,6 +306,7 @@ def predict_pipeline(
     dtype: str = "float32",
     accum_dtype: str = "",
     hw: roofline.HardwareSpec = roofline.TPU_V5E,
+    compression: str = "none",
 ) -> dict[str, Any]:
     """Three-term per-multiply roofline prediction for one candidate.
 
@@ -297,7 +319,10 @@ def predict_pipeline(
     n_sites = L**4
     padded = ((n_sites + cand.tile - 1) // cand.tile) * cand.tile
     k = cand.fused_k
-    tm = layouts.TrafficModel.for_dtype(Layout.SOA, padded, dtype)
+    tm = layouts.TrafficModel.for_dtype(
+        Layout.SOA, padded, dtype,
+        compression=layouts.GaugeCompression(compression),
+    )
     # every term charges the PADDED work (what the kernel executes); the
     # predicted throughput credits only the USEFUL flops (what the engine
     # reports), so an oversized tile at small L ranks as badly as it measures
@@ -305,7 +330,9 @@ def predict_pipeline(
     memory_s = tm.total_bytes / k / hw.hbm_bw
     issue_s = 0.0
     if hw.issue_rate:
-        base, per_mult = kernel_instruction_model(dtype, accum_dtype)
+        base, per_mult = kernel_instruction_model(
+            dtype, accum_dtype, compression=compression
+        )
         grid_steps = padded // cand.tile
         instrs = grid_steps * (base / k + per_mult) + DISPATCH_ISSUE_SLOTS / k
         issue_s = instrs / hw.issue_rate
@@ -325,7 +352,8 @@ def predict_pipeline(
 
 
 def measure_candidate(
-    cand: PipelineCandidate, L: int = 8, dtype: str = "float32", accum_dtype: str = ""
+    cand: PipelineCandidate, L: int = 8, dtype: str = "float32",
+    accum_dtype: str = "", compression: str = "none",
 ) -> dict[str, Any]:
     """Measured per-multiply GFLOPS of one (tile, fused_k) candidate — the
     fused chain run exactly as it deploys."""
@@ -335,6 +363,7 @@ def measure_candidate(
     cfg = EngineConfig(
         L=L, dtype=dtype, variant="pallas", layout=Layout.SOA,
         tile=cand.tile, accum_dtype=accum_dtype, iterations=2, warmups=1,
+        compression=compression,
     )
     r = SU3Engine(cfg).run_fused(k=cand.fused_k, reps=2)
     return {
@@ -351,6 +380,7 @@ def pipeline_sweep(
     dtype: str = "float32",
     accum_dtype: str = "",
     *,
+    compression: str = "none",
     prune: float = DEFAULT_PRUNE,
     tiles: tuple[int, ...] = DEFAULT_TILES,
     ks: tuple[int, ...] = DEFAULT_KS,
@@ -374,12 +404,15 @@ def pipeline_sweep(
     cands = enumerate_candidates(tiles, ks, dtype, accum_dtype, hw)
     if not cands:
         raise RuntimeError("no VMEM-fitting pipeline candidate")
-    preds = [predict_pipeline(c, L, dtype, accum_dtype, hw) for c in cands]
+    preds = [
+        predict_pipeline(c, L, dtype, accum_dtype, hw, compression=compression)
+        for c in cands
+    ]
     order = sorted(range(len(cands)), key=lambda i: -preds[i]["predicted_gflops"])
     n_meas = len(cands) if prune >= 1 else max(1, math.ceil(prune * len(cands)))
     if measure_fn is None:
         measure_fn = lambda c: measure_candidate(  # noqa: E731
-            c, L=L, dtype=dtype, accum_dtype=accum_dtype
+            c, L=L, dtype=dtype, accum_dtype=accum_dtype, compression=compression
         )
     rows = []
     for rank, i in enumerate(order[:n_meas]):
@@ -407,10 +440,13 @@ def pipeline_sweep(
 @dataclasses.dataclass(frozen=True)
 class StencilCandidate:
     """One point of the stencil variant grid: Pallas site tile x whether the
-    interior/boundary overlap schedule is used."""
+    interior/boundary overlap schedule is used x halo exchange depth (a
+    depth-d exchange ships d ghost rings and runs d stencil applications per
+    exchange, recomputing the intermediate ring locally)."""
 
     tile: int
     overlap: bool
+    depth: int = 1
 
 
 def enumerate_stencil_candidates(
@@ -419,32 +455,40 @@ def enumerate_stencil_candidates(
     dtype: str = "float32",
     accum_dtype: str = "",
     hw: roofline.HardwareSpec = roofline.TPU_V5E,
+    depths: tuple[int, ...] = DEFAULT_DEPTHS,
 ) -> list[StencilCandidate]:
-    """The VMEM-fitting (tile, overlap) grid the stencil pruner ranks.  The
-    stencil grid step resides U + 8 neighbor + out tiles, so its VMEM bound
-    is tighter than the multiply's at the same tile."""
+    """The VMEM-fitting (tile, overlap, depth) grid the stencil pruner ranks.
+    The stencil grid step resides U + 8 neighbor + out tiles, so its VMEM
+    bound is tighter than the multiply's at the same tile.  Depth > 1 exists
+    only on the overlap schedule (the communication-avoiding step-2 path is
+    built from the overlap machinery), so (overlap=False, depth=2) is never
+    a candidate."""
     word_b = layouts.WORD_BYTES[dtype]
     accum_b = layouts.WORD_BYTES[accum_dtype] if accum_dtype else None
     return [
-        StencilCandidate(tile, ov)
+        StencilCandidate(tile, ov, d)
         for tile in tiles
         if su3_stencil.stencil_vmem_bytes(tile, word_b, accum_b) <= hw.vmem_bytes
         for ov in overlaps
+        for d in depths
+        if ov or d == 1
     ]
 
 
-_STENCIL_INSTR_CACHE: dict[tuple[str, str], float] = {}
+_STENCIL_INSTR_CACHE: dict[tuple[str, str, str], float] = {}
 _STENCIL_INSTR_TILE = 256  # fixed lowering tile: issue counts are vector-
 # ISSUE counts (one op however wide the lane payload), so per-step cost is
 # tile-independent — same convention as kernel_instruction_model
 
 
-def stencil_instruction_model(dtype: str = "float32", accum_dtype: str = "") -> float:
+def stencil_instruction_model(
+    dtype: str = "float32", accum_dtype: str = "", compression: str = "none"
+) -> float:
     """Issued-instruction count of ONE stencil kernel grid step, from the
     lowered kernel's loop-aware instruction mix (same method as
     :func:`kernel_instruction_model`; the stencil has no chain-depth knob, so
     a single lowering at a fixed tile suffices)."""
-    key = (dtype, accum_dtype)
+    key = (dtype, accum_dtype, compression)
     if key not in _STENCIL_INSTR_CACHE:
         tile = _STENCIL_INSTR_TILE
         entry = registry.get_kernel("pallas_stencil")
@@ -452,7 +496,11 @@ def stencil_instruction_model(dtype: str = "float32", accum_dtype: str = "") -> 
         kw: dict[str, Any] = {"tile": tile, "interpret": True}
         if accum_dtype:
             kw["accum_dtype"] = accum_dtype
-        u = jnp.zeros((2, layouts.PLANAR_ROWS, tile), wdt)
+        rows = layouts.PLANAR_ROWS
+        if compression == layouts.GaugeCompression.TWO_ROW.value:
+            kw["compressed"] = True
+            rows = layouts.PLANAR_COMP_ROWS
+        u = jnp.zeros((2, rows, tile), wdt)
         vn = jnp.zeros((8, 2, 3, tile), wdt)
         compiled = (
             jax.jit(lambda u, vn: entry.fn(u, vn, **kw)).lower(u, vn).compile()
@@ -463,13 +511,13 @@ def stencil_instruction_model(dtype: str = "float32", accum_dtype: str = "") -> 
     return _STENCIL_INSTR_CACHE[key]
 
 
-def _stencil_halo_spec(L: int, hosts: int, word_bytes: int):
+def _stencil_halo_spec(L: int, hosts: int, word_bytes: int, depth: int = 1):
     """Vector-field HaloSpec for ``hosts`` slabs (0 halo on one host)."""
     from repro.distributed import sharding as dist_sharding
 
     return dist_sharding.HaloSpec(
         L=L, n_shards=max(hosts, 1), word_bytes=word_bytes,
-        words_per_site=dist_sharding.VECTOR_WORDS_PER_SITE,
+        words_per_site=dist_sharding.VECTOR_WORDS_PER_SITE, depth=depth,
     )
 
 
@@ -480,15 +528,21 @@ def predict_stencil(
     accum_dtype: str = "",
     hosts: int = 1,
     hw: roofline.HardwareSpec = roofline.TPU_V5E,
+    compression: str = "none",
 ) -> dict[str, Any]:
     """Roofline prediction for one stencil variant, halo bytes included.
 
-    The core terms are the usual three (memory streams U + 8 neighbor fields
-    + out; VPU compute at 576 flops/site; instruction issue per grid step
-    plus per-dispatch launch cost).  The fourth term is the halo: the
-    vector-field faces every shard exchanges per application
-    (``HaloSpec.halo_bytes_per_exchange`` at 6 words/site), over the
-    interconnect.
+    Every quantity is PER STENCIL APPLICATION, so depth-1 and depth-2 rows
+    compare directly.  The core terms are the usual three (memory streams
+    U + 8 neighbor fields + out — 102 words/site when the gauge field is
+    two-row compressed, 150 full; VPU compute at 576 flops/site; instruction
+    issue per grid step plus per-dispatch launch cost).  The fourth term is
+    the halo: one depth-d exchange ships d ghost rings
+    (``HaloSpec.halo_bytes_per_exchange`` at 6 words/site) plus pays one
+    fixed ``HALO_EXCHANGE_LATENCY_S``, and buys d applications — so the
+    per-application halo time divides by depth.  The byte half of that term
+    is roughly depth-invariant (d rings / d applications); the LATENCY half
+    is what the communication-avoiding schedule actually halves.
 
     All shards run concurrently, so the wall-clock bound is a PER-SHARD
     quantity: the core terms (computed for the full lattice on one chip)
@@ -498,41 +552,48 @@ def predict_stencil(
     * ``overlap=False`` — compute serializes behind the exchange:
       ``bound = core/hosts + halo``;
     * ``overlap=True``  — the exchange hides under the interior pass and the
-      boundary sites are recomputed after it lands:
-      ``bound = max(core/hosts, halo) + boundary_fraction * core/hosts``
+      boundary sites are recomputed after it lands; a depth-d schedule
+      additionally recomputes the intermediate ghost ring locally, one
+      boundary-sized slab per application:
+      ``bound = max(core/hosts, halo) + depth * boundary_fraction * core/hosts``
       (``boundary_fraction`` is already shard-relative:
       ``boundary_sites / sites_per_shard``).
 
-    ``bandwidth_bytes`` in the returned row is the full bandwidth-term
-    payload — streamed bytes plus halo bytes — which is what the benchmark
-    rows persist (the acceptance bar: halo bytes are IN the bandwidth term,
-    not a footnote).
+    ``bandwidth_bytes`` in the returned row is the full per-application
+    bandwidth-term payload — streamed bytes plus the exchanged halo bytes
+    amortized over the depth — which is what the benchmark rows persist (the
+    acceptance bar: halo bytes are IN the bandwidth term, not a footnote).
     """
     n_sites = L**4
     padded = ((n_sites + cand.tile - 1) // cand.tile) * cand.tile
     wb = layouts.WORD_BYTES[dtype]
-    stream_bytes = padded * su3_stencil.STENCIL_WORDS_PER_SITE * wb
+    compressed = compression == layouts.GaugeCompression.TWO_ROW.value
+    words_site = (su3_stencil.STENCIL_COMP_WORDS_PER_SITE if compressed
+                  else su3_stencil.STENCIL_WORDS_PER_SITE)
+    stream_bytes = padded * words_site * wb
     compute_s = float(su3_stencil.STENCIL_FLOPS_PER_SITE) * padded / hw.peak_flops_vpu
     memory_s = stream_bytes / hw.hbm_bw
     issue_s = 0.0
     n_dispatches = 3 if (cand.overlap and hosts > 1) else 1
     if hw.issue_rate:
-        per_step = stencil_instruction_model(dtype, accum_dtype)
+        per_step = stencil_instruction_model(dtype, accum_dtype, compression)
         instrs = (padded // cand.tile) * per_step + DISPATCH_ISSUE_SLOTS * n_dispatches
         issue_s = instrs / hw.issue_rate
     core_s = max(compute_s, memory_s, issue_s)
     # every shard computes 1/hosts of the lattice, all shards concurrently —
     # the wall bound composes the PER-SHARD core with the per-shard halo
     core_shard_s = core_s / max(hosts, 1)
-    halo = _stencil_halo_spec(L, hosts, wb)
-    halo_s = halo.halo_bytes_per_exchange / hw.ici_bw
+    halo = _stencil_halo_spec(L, hosts, wb, depth=cand.depth)
+    halo_s = (
+        HALO_EXCHANGE_LATENCY_S + halo.halo_bytes_per_exchange / hw.ici_bw
+    ) / cand.depth
     boundary_frac = (  # shard-relative: boundary_sites / sites_per_shard
         halo.boundary_sites / halo.sites_per_shard if hosts > 1 else 0.0
     )
     if hosts == 1:
         bound_s = core_s
     elif cand.overlap:
-        bound_s = max(core_shard_s, halo_s) + boundary_frac * core_shard_s
+        bound_s = max(core_shard_s, halo_s) + cand.depth * boundary_frac * core_shard_s
     else:
         bound_s = core_shard_s + halo_s
     useful = float(su3_stencil.STENCIL_FLOPS_PER_SITE) * n_sites
@@ -541,6 +602,8 @@ def predict_stencil(
     return {
         "tile": cand.tile,
         "overlap": cand.overlap,
+        "depth": cand.depth,
+        "compression": compression,
         "hosts": hosts,
         "compute_s": compute_s,
         "memory_s": memory_s,
@@ -550,19 +613,25 @@ def predict_stencil(
         "bound_s": bound_s,
         "dominant": max(terms, key=terms.get),
         "halo_bytes_per_exchange": halo.halo_bytes_per_exchange,
-        "bandwidth_bytes": stream_bytes + halo.halo_bytes_per_exchange,
+        "bandwidth_bytes": stream_bytes + halo.halo_bytes_per_exchange // cand.depth,
         "boundary_fraction": round(boundary_frac, 4),
         "predicted_gflops": round(useful / bound_s / 1e9, 3),
     }
 
 
 def measure_stencil_candidate(
-    cand: StencilCandidate, L: int = 8, dtype: str = "float32", accum_dtype: str = ""
+    cand: StencilCandidate, L: int = 8, dtype: str = "float32",
+    accum_dtype: str = "", compression: str = "none",
 ) -> dict[str, Any]:
-    """Measured GFLOPS of one stencil variant on the local mesh (useful
-    flops = 576/site).  Overlap on a single local host degenerates to the
-    interior-only schedule — the model's hosts>1 halo term is what separates
-    the variants; measurement keeps selection honest about kernel cost."""
+    """Measured per-application GFLOPS of one stencil variant on the local
+    mesh (useful flops = 576/site; a depth-d step runs d applications per
+    dispatch, so its wall time divides by d).  Overlap on a single local
+    host degenerates to the interior-only schedule — the model's hosts>1
+    halo term is what separates the variants; measurement keeps selection
+    honest about kernel cost.  Depth-2 candidates are additionally verified
+    BITWISE against two reference (depth-1) applications — the
+    communication-avoiding schedule must change scheduling only, never
+    values."""
     from repro.core.su3.plan import build_plan
     from repro.core.su3.engine import EngineConfig
 
@@ -571,9 +640,10 @@ def measure_stencil_candidate(
     cfg = EngineConfig(
         L=L, dtype=dtype, variant="pallas", layout=Layout.SOA,
         tile=cand.tile, accum_dtype=accum_dtype, iterations=2, warmups=1,
+        compression=compression,
     )
     plan = build_plan(cfg)
-    step = plan.stencil_step(overlap=cand.overlap)
+    step = plan.stencil_step(overlap=cand.overlap, depth=cand.depth)
     u, v = plan.init_stencil_data()
     out = step(u, v)  # warm/compile; also the output 'verified' judges
     out.block_until_ready()
@@ -584,13 +654,22 @@ def measure_stencil_candidate(
         t0 = _time.perf_counter()
         step(u, v).block_until_ready()
         best = min(best, _time.perf_counter() - t0)
-    gf = su3_stencil.STENCIL_FLOPS_PER_SITE * (L**4) / best / 1e9
+    verified = bool(plan.verify_stencil(out)) if cand.depth == 1 else bool(
+        jnp.array_equal(
+            out,
+            plan.stencil_step(overlap=False, depth=1)(
+                u, plan.stencil_step(overlap=False, depth=1)(u, v)
+            ),
+        )
+    )
+    gf = cand.depth * su3_stencil.STENCIL_FLOPS_PER_SITE * (L**4) / best / 1e9
     return {
         "tile": cand.tile,
         "overlap": cand.overlap,
+        "depth": cand.depth,
         "vmem_kib": su3_stencil.stencil_vmem_bytes(cand.tile, word_b, accum_b) // 1024,
         "measured_gflops": round(gf, 3),
-        "verified": plan.verify_stencil(out),
+        "verified": verified,
     }
 
 
@@ -600,25 +679,32 @@ def stencil_sweep(
     accum_dtype: str = "",
     *,
     hosts: int = 1,
+    compression: str = "none",
     prune: float = DEFAULT_PRUNE,
     tiles: tuple[int, ...] = DEFAULT_TILES,
     overlaps: tuple[bool, ...] = (False, True),
+    depths: tuple[int, ...] = DEFAULT_DEPTHS,
     measure_fn: Callable[[StencilCandidate], dict[str, Any]] | None = None,
     hw: roofline.HardwareSpec = roofline.TPU_V5E,
 ) -> dict[str, Any]:
-    """Rank the stencil (tile, overlap) grid with the halo-charging roofline
-    model; measure only the top ``prune`` fraction — the stencil analogue of
-    :func:`pipeline_sweep`, with the same return structure and the same
-    selection contract (tests gate it at within-5%-of-exhaustive)."""
-    cands = enumerate_stencil_candidates(tiles, overlaps, dtype, accum_dtype, hw)
+    """Rank the stencil (tile, overlap, depth) grid with the halo-charging
+    roofline model; measure only the top ``prune`` fraction — the stencil
+    analogue of :func:`pipeline_sweep`, with the same return structure and
+    the same selection contract (tests gate it at within-5%-of-exhaustive)."""
+    cands = enumerate_stencil_candidates(
+        tiles, overlaps, dtype, accum_dtype, hw, depths
+    )
     if not cands:
         raise RuntimeError("no VMEM-fitting stencil candidate")
-    preds = [predict_stencil(c, L, dtype, accum_dtype, hosts, hw) for c in cands]
+    preds = [
+        predict_stencil(c, L, dtype, accum_dtype, hosts, hw, compression=compression)
+        for c in cands
+    ]
     order = sorted(range(len(cands)), key=lambda i: -preds[i]["predicted_gflops"])
     n_meas = len(cands) if prune >= 1 else max(1, math.ceil(prune * len(cands)))
     if measure_fn is None:
         measure_fn = lambda c: measure_stencil_candidate(  # noqa: E731
-            c, L=L, dtype=dtype, accum_dtype=accum_dtype
+            c, L=L, dtype=dtype, accum_dtype=accum_dtype, compression=compression
         )
     rows = []
     for rank, i in enumerate(order[:n_meas]):
@@ -653,13 +739,19 @@ def cache_key(
     dtype: str,
     L: int,
     n_devices: int,
+    compression: str = "none",
     schema: int = SCHEMA_VERSION,
 ) -> str:
     """Versioned cache key.  The ``v{schema}`` prefix is the invalidation
-    mechanism: entries written before the pipeline sweep (v1, no version
-    prefix, no ``pipeline`` block) simply never match a v2 lookup and
-    re-measure cleanly instead of being read with missing fields."""
-    return f"v{schema}|{backend}|{device_kind}|{layout}|{dtype}|L{L}|d{n_devices}"
+    mechanism: entries written before the pipeline sweep (v1) or before the
+    compression/depth axes (v2) simply never match a v3 lookup and re-measure
+    cleanly instead of being read with missing fields.  ``compression`` is a
+    key segment, not a suffix on dtype, so an 18-real and a two-row decision
+    for the same (dtype, L) never alias."""
+    return (
+        f"v{schema}|{backend}|{device_kind}|{layout}|{dtype}"
+        f"|{compression}|L{L}|d{n_devices}"
+    )
 
 
 def _cache_path(directory: str | None) -> str:
@@ -705,11 +797,14 @@ def _device_identity() -> tuple[str, str, int]:
 
 
 # keys a cached config must carry to be served without re-measuring; entries
-# written by older builds (no fused_k; no pipeline block) or truncated by a
-# crashed writer fall through to a fresh sweep instead of KeyError-ing every
-# caller.  The versioned cache_key already isolates v1 entries — this guard
-# additionally catches a v2-keyed entry written incompletely.
-_REQUIRED_CONFIG_KEYS = frozenset({"layout", "variant", "tile", "fused_k", "pipeline"})
+# written by older builds (no fused_k; no pipeline block; no compression) or
+# truncated by a crashed writer fall through to a fresh sweep instead of
+# KeyError-ing every caller.  The versioned cache_key already isolates
+# v1/v2 entries — this guard additionally catches a v3-keyed entry written
+# incompletely.
+_REQUIRED_CONFIG_KEYS = frozenset(
+    {"layout", "variant", "tile", "fused_k", "compression", "pipeline"}
+)
 
 
 def _valid_cache_hit(hit: Any) -> dict[str, Any] | None:
@@ -727,6 +822,7 @@ def best_config(
     dtype: str = "float32",
     *,
     accum_dtype: str = "",
+    compression: str = "none",
     cache: bool = True,
     cache_directory: str | None = None,
     refresh: bool = False,
@@ -744,21 +840,23 @@ def best_config(
     provenance (schema version, candidate counts, the winner's predicted
     rank); later calls (any process) with the same versioned
     (backend, device_kind, layout, dtype, L, n_devices) key do zero
-    measurements.  Pre-pipeline (v1) entries never match the v2 key, and
-    corrupt or partial v2 entries (truncated writes, missing ``pipeline``
-    block) are treated as misses and re-measured, never crashed on.
+    measurements.  Pre-pipeline (v1) and pre-compression (v2) entries never
+    match the v3 key, and corrupt or partial v3 entries (truncated writes,
+    missing ``pipeline`` block) are treated as misses and re-measured, never
+    crashed on.
 
     ``accum_dtype`` tunes mixed-precision plans as deployed: the sweep runs
     the f32-accumulate kernel (different VMEM resident set, instruction mix,
     and fused-K knee than the pure storage dtype), and the cache key carries
     the accumulate width so bf16-pure and bf16+f32-accum decisions never
-    alias.
+    alias.  ``compression="two_row"`` tunes the 12-real gauge plan the same
+    way, under its own key segment.
     """
     backend, device_kind, n_devices = _device_identity()
     dtype_key = f"{dtype}+acc-{accum_dtype}" if accum_dtype else dtype
     key = cache_key(
         backend=backend, device_kind=device_kind, layout="soa",
-        dtype=dtype_key, L=L, n_devices=n_devices,
+        dtype=dtype_key, L=L, n_devices=n_devices, compression=compression,
     )
     if cache and not refresh:
         config = _valid_cache_hit(load_cache(cache_directory).get(key))
@@ -766,8 +864,8 @@ def best_config(
             return dict(config, cached=True)
 
     sweep = pipeline_sweep(
-        L=L, dtype=dtype, accum_dtype=accum_dtype, prune=prune,
-        measure_fn=measure_fn,
+        L=L, dtype=dtype, accum_dtype=accum_dtype, compression=compression,
+        prune=prune, measure_fn=measure_fn,
     )
     rows = [r for r in sweep["rows"] if r["verified"]]
     if not rows:
@@ -776,6 +874,7 @@ def best_config(
     config = {
         "layout": "soa", "variant": "pallas",
         "tile": winner["tile"], "fused_k": winner["fused_k"],
+        "compression": compression,
         "pipeline": {
             "schema": SCHEMA_VERSION,
             "prune": sweep["prune"],
@@ -794,10 +893,12 @@ def best_config(
     return dict(config, cached=False)
 
 
-# stencil cache entries carry (tile, overlap, stencil provenance) instead of
-# the multiply tuple's (tile, fused_k, pipeline); they live under their own
-# layout key ("soa-stencil") so the two shapes never alias.
-_REQUIRED_STENCIL_KEYS = frozenset({"layout", "variant", "tile", "overlap", "stencil"})
+# stencil cache entries carry (tile, overlap, depth, stencil provenance)
+# instead of the multiply tuple's (tile, fused_k, pipeline); they live under
+# their own layout key ("soa-stencil") so the two shapes never alias.
+_REQUIRED_STENCIL_KEYS = frozenset(
+    {"layout", "variant", "tile", "overlap", "depth", "stencil"}
+)
 
 
 def _valid_stencil_hit(hit: Any) -> dict[str, Any] | None:
@@ -814,6 +915,7 @@ def best_stencil_config(
     dtype: str = "float32",
     *,
     accum_dtype: str = "",
+    compression: str = "none",
     hosts: int = 1,
     cache: bool = True,
     cache_directory: str | None = None,
@@ -821,8 +923,8 @@ def best_stencil_config(
     prune: float = DEFAULT_PRUNE,
     measure_fn: Callable[[StencilCandidate], dict[str, Any]] | None = None,
 ) -> dict[str, Any]:
-    """The tuned stencil variant: the (tile, overlap) point with the best
-    MEASURED GFLOPS among the halo-aware-roofline-ranked top candidates.
+    """The tuned stencil variant: the (tile, overlap, depth) point with the
+    best MEASURED GFLOPS among the halo-aware-roofline-ranked top candidates.
 
     Same contract as :func:`best_config` — ranked by model, selected by
     measurement among verified candidates, persisted with provenance under a
@@ -834,7 +936,7 @@ def best_stencil_config(
     dtype_key = f"{dtype}+acc-{accum_dtype}" if accum_dtype else dtype
     key = cache_key(
         backend=backend, device_kind=device_kind, layout=f"soa-stencil-h{hosts}",
-        dtype=dtype_key, L=L, n_devices=n_devices,
+        dtype=dtype_key, L=L, n_devices=n_devices, compression=compression,
     )
     if cache and not refresh:
         config = _valid_stencil_hit(load_cache(cache_directory).get(key))
@@ -842,33 +944,38 @@ def best_stencil_config(
             return dict(config, cached=True)
 
     sweep = stencil_sweep(
-        L=L, dtype=dtype, accum_dtype=accum_dtype, hosts=hosts, prune=prune,
-        measure_fn=measure_fn,
+        L=L, dtype=dtype, accum_dtype=accum_dtype, hosts=hosts,
+        compression=compression, prune=prune, measure_fn=measure_fn,
     )
     rows = [r for r in sweep["rows"] if r["verified"]]
     if not rows:
         raise RuntimeError("no verified stencil candidate in the measured set")
-    # The TILE is decided by measurement; the SCHEDULE axis by the halo
-    # model.  On the local (single-host) measurement mesh the two schedules
-    # of a tile compile to near-identical work — overlap degenerates to the
-    # interior-only pass — so measured GFLOPS cannot separate them and timer
-    # jitter would pick the persisted overlap flag at random.  The model is
-    # the only witness of the inter-host halo the flag exists for.
+    # The TILE is decided by measurement; the SCHEDULE axes (overlap, depth)
+    # by the halo model.  On the local (single-host) measurement mesh the
+    # schedules of a tile compile to near-identical per-application work —
+    # overlap degenerates to the interior-only pass — so measured GFLOPS
+    # cannot separate them and timer jitter would pick the persisted flags
+    # at random.  The model is the only witness of the inter-host halo the
+    # flags exist for.
     best_tile = max(rows, key=lambda r: r["measured_gflops"])["tile"]
     same_tile = [r for r in rows if r["tile"] == best_tile]
     # deterministic tie-break: when the model cannot separate the schedules
-    # (hosts=1 predicts identical bounds), prefer the simpler serial one —
-    # never let measured jitter of two identical compilations decide
+    # (hosts=1 predicts identical bounds), prefer the simpler serial one and
+    # the shallower exchange — never let measured jitter of identical
+    # compilations decide
     winner = max(
-        same_tile, key=lambda r: (r["predicted_gflops"], not r["overlap"])
+        same_tile,
+        key=lambda r: (r["predicted_gflops"], not r["overlap"], -r.get("depth", 1)),
     )
     config = {
         "layout": "soa", "variant": "pallas_stencil",
         "tile": winner["tile"], "overlap": winner["overlap"],
+        "depth": winner.get("depth", 1),
         "stencil": {
             "schema": SCHEMA_VERSION,
             "prune": sweep["prune"],
             "hosts": hosts,
+            "compression": compression,
             "candidates_total": sweep["candidates_total"],
             "candidates_measured": sweep["candidates_measured"],
             "predicted_gflops": winner.get("predicted_gflops", 0.0),
@@ -890,16 +997,18 @@ def tuned_engine_config(
 ) -> EngineConfig:
     """EngineConfig built from the (cached) tuned tuple, override-able.
 
-    An ``accum_dtype`` override also steers the tuning itself (mixed-
-    precision plans are measured as deployed, under their own cache key).
+    An ``accum_dtype`` or ``compression`` override also steers the tuning
+    itself (such plans are measured as deployed, under their own cache key).
     """
     tuned = best_config(
         L=L, dtype=dtype, accum_dtype=overrides.get("accum_dtype", ""),
+        compression=overrides.get("compression", "none"),
         cache_directory=cache_directory,
     )
     base = {
         "L": L, "dtype": dtype, "layout": layouts.Layout(tuned["layout"]),
         "variant": tuned["variant"], "tile": tuned["tile"],
+        "compression": tuned.get("compression", "none"),
     }
     base.update(overrides)
     return EngineConfig(**base)
@@ -907,7 +1016,7 @@ def tuned_engine_config(
 
 def tuned_fused_k(
     L: int = 8, dtype: str = "float32", *, accum_dtype: str = "",
-    cache_directory: str | None = None
+    compression: str = "none", cache_directory: str | None = None
 ) -> int:
     """The measured-best fused chain depth for (backend, L) — from the cache.
 
@@ -915,6 +1024,7 @@ def tuned_fused_k(
     per device identity pays the sweep, every later process reads the cache.
     """
     return int(best_config(L=L, dtype=dtype, accum_dtype=accum_dtype,
+                           compression=compression,
                            cache_directory=cache_directory)["fused_k"])
 
 

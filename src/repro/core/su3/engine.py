@@ -29,7 +29,7 @@ import numpy as np
 
 import jax
 
-from repro.core.su3.layouts import TrafficModel
+from repro.core.su3.layouts import GaugeCompression, TrafficModel
 from repro.core.su3.plan import (  # noqa: F401  (re-exported for compatibility)
     EngineConfig,
     ExecutionPlan,
@@ -61,7 +61,10 @@ class BenchResult:
     @property
     def traffic(self) -> TrafficModel:
         return TrafficModel(
-            self.config.layout, self.config.shape.n_sites, self.config.word_bytes
+            self.config.layout,
+            self.config.shape.n_sites,
+            self.config.word_bytes,
+            compression=GaugeCompression(self.config.compression),
         )
 
     @property
@@ -81,9 +84,11 @@ class BenchResult:
             "variant": self.config.variant,
             "placement": self.config.placement,
             "dtype": self.config.dtype,
+            "compression": self.config.compression,
             "devices": self.n_devices,
             "GFLOPS": round(self.gflops, 3),
             "GBYTES": round(self.gbytes, 3),
+            "bytes_per_site": self.traffic.bytes_per_site_rw,
             "best_s": self.best_seconds,
             "mean_s": self.mean_seconds,
             "init_s": self.init_seconds,

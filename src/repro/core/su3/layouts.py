@@ -48,6 +48,22 @@ class Layout(str, enum.Enum):
     AOSOA = "aosoa"
 
 
+class GaugeCompression(str, enum.Enum):
+    """How many rows of each SU(3) link the physical form stores.
+
+    ``TWO_ROW`` is the staggered-Dslash-on-KNL trick (arXiv:1411.2087): an
+    SU(3) matrix is determined by its first two rows — the third is the
+    unitarity cross product ``row2 = conj(row0 x row1)`` — so storage drops
+    from 18 to 12 reals per link (72 -> 48 words per site) and the consumer
+    reconstructs row 2 in registers.  Exact only on SU(3); for arbitrary
+    matrices the reconstruction error is bounded by the distance to the
+    nearest unitary (the codec round-trip property tests pin this).
+    """
+
+    NONE = "none"
+    TWO_ROW = "two_row"
+
+
 @dataclasses.dataclass(frozen=True)
 class LatticeShape:
     """Lattice of dimension L^4, matching the paper's ``total_sites = L**4``."""
@@ -151,6 +167,50 @@ def unpack_aosoa(
 
 PLANAR_ROWS = LINKS * SU3 * SU3  # 36 complex entries per site
 
+# Two-row compressed planar form: 4 links x 2 stored rows x 3 cols = 24
+# complex entries per site (48 real words).  Row order is the full form's
+# with every k=2 row deleted, so COMP_ROW_INDICES gathers the compressed
+# rows out of a full 36-row planar array (and is the store-side "drop row
+# 2" map the kernels use).
+PLANAR_COMP_ROWS = LINKS * 2 * SU3  # 24
+GAUGE_COMP_WORDS = PLANAR_COMP_ROWS * 2  # 48 real words per site
+COMP_ROW_INDICES = tuple(
+    (j * SU3 + k) * SU3 + l
+    for j in range(LINKS)
+    for k in range(2)
+    for l in range(SU3)
+)
+
+
+def reconstruct_third_row(r0: jax.Array, r1: jax.Array) -> jax.Array:
+    """row2 = conj(row0 x row1) — the SU(3) unitarity reconstruction.
+
+    ``r0``/``r1`` are complex arrays with the color index last (..., 3).
+    Expanded in *real* arithmetic with the exact operand grouping of the
+    kernels' in-register reconstruction (``su3_matmul._expand_tile``), NOT
+    via complex primitives — same formula, same f32 precision; values agree
+    with the in-kernel reconstruction to ~1 ulp (LLVM FMA contraction can
+    round mul+add pairs differently across compiled programs, so bitwise
+    equality across *different* programs is not guaranteed — see
+    ``_expand_tile`` for what is exactly pinned).  Computed at the input
+    precision; callers wanting f32 reconstruction from narrower storage
+    upcast first.
+    """
+    a_r, a_i = jnp.real(r0), jnp.imag(r0)
+    b_r, b_i = jnp.real(r1), jnp.imag(r1)
+
+    def _comp(i: int, j: int) -> jax.Array:
+        # conj(r0[i]*r1[j] - r0[j]*r1[i]), grouped as in _expand_tile
+        xr = (a_r[..., i] * b_r[..., j] - a_i[..., i] * b_i[..., j]) - (
+            a_r[..., j] * b_r[..., i] - a_i[..., j] * b_i[..., i]
+        )
+        xi = (a_r[..., i] * b_i[..., j] + a_i[..., i] * b_r[..., j]) - (
+            a_r[..., j] * b_i[..., i] + a_i[..., j] * b_r[..., i]
+        )
+        return jax.lax.complex(xr, -xi)
+
+    return jnp.stack([_comp(1, 2), _comp(2, 0), _comp(0, 1)], axis=-1)
+
 
 @dataclasses.dataclass(frozen=True)
 class LayoutCodec:
@@ -164,16 +224,37 @@ class LayoutCodec:
     mixed-precision plans: storage words stream at ``dtype`` (what pack emits
     and the traffic model charges) while the kernel accumulates at
     ``accum_dtype`` — the bf16-storage / f32-accumulate serving scheme.
+
+    ``compression`` selects the stored-row set of each link.  TWO_ROW keeps
+    rows 0 and 1 only (24 planar rows instead of 36); the codec itself never
+    materializes row 2 in the physical array — ``pack`` drops it, kernels
+    reconstruct it in registers, and only ``unpack`` (the canonical escape
+    hatch) rebuilds it, in f32, via :func:`reconstruct_third_row`.
     """
 
     layout: Layout
     tile: int = LANE
     dtype: str = "float32"
     accum_dtype: str = ""  # "" => accumulate at the storage dtype
+    compression: GaugeCompression = GaugeCompression.NONE
 
     @property
     def word_dtype(self) -> Any:
         return jnp.dtype(self.dtype)
+
+    @property
+    def is_compressed(self) -> bool:
+        return self.compression == GaugeCompression.TWO_ROW
+
+    @property
+    def planar_rows(self) -> int:
+        """Planar gauge rows of the physical form: 36 full, 24 two-row."""
+        return PLANAR_COMP_ROWS if self.is_compressed else PLANAR_ROWS
+
+    @property
+    def stored_rows(self) -> int:
+        """SU(3) matrix rows present in storage (3 full, 2 compressed)."""
+        return 2 if self.is_compressed else SU3
 
     @property
     def compute_dtype(self) -> str:
@@ -187,25 +268,51 @@ class LayoutCodec:
     # -- canonical <-> physical ------------------------------------------------
 
     def pack(self, a: jax.Array) -> jax.Array:
-        """Canonical complex (n_sites, 4, 3, 3) -> physical layout array."""
+        """Canonical complex (n_sites, 4, 3, 3) -> physical layout array.
+
+        TWO_ROW drops each link's third row before laying out — the stored
+        form is (2, 24, S) / (tiles, 2, 24, lane); row 2 never exists
+        physically.
+        """
         wdt = self.word_dtype
         if self.layout == Layout.AOS:
             return pack_aos(a).astype(wdt)  # (S, 80)
+        if self.is_compressed:
+            a = a[:, :, :2, :]  # (S, 4, 2, 3): keep rows 0, 1
+        rows = self.planar_rows
         if self.layout == Layout.SOA:
-            return pack_soa(a).reshape(2, PLANAR_ROWS, -1).astype(wdt)  # (2, 36, S)
-        t = pack_aosoa(a, lane=self.tile)
-        return t.reshape(t.shape[0], 2, PLANAR_ROWS, self.tile).astype(wdt)
+            return to_planar(jnp.moveaxis(a, 0, -1)).reshape(2, rows, -1).astype(wdt)
+        # AoSoA: pad sites to the lane, tile-major site order
+        n_sites = a.shape[0]
+        pad = (-n_sites) % self.tile
+        if pad:
+            a = jnp.concatenate([a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0)
+        n_tiles = a.shape[0] // self.tile
+        t = jnp.moveaxis(a.reshape((n_tiles, self.tile) + a.shape[1:]), 1, -1)
+        p = jnp.stack([jnp.real(t), jnp.imag(t)], axis=1)
+        return p.reshape(n_tiles, 2, rows, self.tile).astype(wdt)
 
     def unpack(self, phys: jax.Array, n_sites: int | None = None) -> jax.Array:
-        """Physical -> canonical complex; slice to ``n_sites`` when given."""
+        """Physical -> canonical complex; slice to ``n_sites`` when given.
+
+        For TWO_ROW storage the third row is reconstructed here, in f32, via
+        the unitarity cross product — bit-identical to what the kernels
+        rebuild in registers (same formula, same precision).
+        """
         f32 = phys.astype(jnp.float32)
+        sr = self.stored_rows
         if self.layout == Layout.AOS:
             c = unpack_aos(f32)
         elif self.layout == Layout.SOA:
-            c = unpack_soa(f32.reshape(2, LINKS, SU3, SU3, -1))
+            c = unpack_soa(f32.reshape(2, LINKS, sr, SU3, -1))
         else:
-            t = f32.reshape(phys.shape[0], 2, LINKS, SU3, SU3, self.tile)
-            c = unpack_aosoa(t, phys.shape[0] * self.tile)
+            t = f32.reshape(phys.shape[0], 2, LINKS, sr, SU3, self.tile)
+            cc = jax.lax.complex(t[:, 0], t[:, 1])  # (tiles, 4, sr, 3, lane)
+            cc = jnp.moveaxis(cc, -1, 1).reshape(-1, LINKS, sr, SU3)
+            c = cc.astype(jnp.complex64)
+        if self.is_compressed:
+            r2 = reconstruct_third_row(c[:, :, 0, :], c[:, :, 1, :])
+            c = jnp.concatenate([c, r2[:, :, None, :]], axis=2)
         return c if n_sites is None else c[:n_sites]
 
     def pack_b(self, b: jax.Array) -> jax.Array:
@@ -280,25 +387,39 @@ class LayoutCodec:
         if self.layout == Layout.SOA:
             return phys
         if self.layout == Layout.AOSOA:
-            return jnp.moveaxis(phys, 0, 2).reshape(2, PLANAR_ROWS, -1)
+            return jnp.moveaxis(phys, 0, 2).reshape(2, self.planar_rows, -1)
         raise ValueError(f"{self.layout} has no planar kernel view")
 
     def from_planar_view(self, c_p: jax.Array, like: jax.Array) -> jax.Array:
-        """Planar (2, 36, S) -> physical, shaped like ``like``."""
+        """Planar (2, rows, S) -> physical, shaped like ``like``."""
         if self.layout == Layout.SOA:
             return c_p
         if self.layout == Layout.AOSOA:
-            c_t = c_p.reshape(2, PLANAR_ROWS, like.shape[0], self.tile)
+            c_t = c_p.reshape(2, self.planar_rows, like.shape[0], self.tile)
             return jnp.moveaxis(c_t, 2, 0)
         raise ValueError(f"{self.layout} has no planar kernel view")
 
 
 def make_codec(
-    layout: Layout, tile: int = LANE, dtype: str = "float32", accum_dtype: str = ""
+    layout: Layout,
+    tile: int = LANE,
+    dtype: str = "float32",
+    accum_dtype: str = "",
+    compression: GaugeCompression | str = GaugeCompression.NONE,
 ) -> LayoutCodec:
     """The one construction site for layout codecs."""
+    comp = GaugeCompression(compression)
+    if comp != GaugeCompression.NONE and Layout(layout) == Layout.AOS:
+        # The AoS layout exists to reproduce the paper's 320 B site struct
+        # verbatim; a compressed variant of it is not a form the paper (or
+        # any kernel here) defines.
+        raise ValueError("gauge compression is only defined for SOA/AoSoA layouts")
     return LayoutCodec(
-        layout=Layout(layout), tile=tile, dtype=dtype, accum_dtype=accum_dtype
+        layout=Layout(layout),
+        tile=tile,
+        dtype=dtype,
+        accum_dtype=accum_dtype,
+        compression=comp,
     )
 
 
@@ -328,15 +449,24 @@ class TrafficModel:
     layout: Layout
     n_sites: int
     word_bytes: int  # 4 for fp32, 2 for bf16, 8 for fp64 — STORAGE width
+    compression: GaugeCompression = GaugeCompression.NONE
 
     @classmethod
-    def for_dtype(cls, layout: Layout, n_sites: int, dtype: str) -> "TrafficModel":
-        return cls(layout, n_sites, WORD_BYTES[dtype])
+    def for_dtype(
+        cls,
+        layout: Layout,
+        n_sites: int,
+        dtype: str,
+        compression: GaugeCompression | str = GaugeCompression.NONE,
+    ) -> "TrafficModel":
+        return cls(layout, n_sites, WORD_BYTES[dtype], GaugeCompression(compression))
 
     @property
     def words_per_site(self) -> int:
         if self.layout == Layout.AOS:
             return SITE_WORDS_AOS  # 80: pads are streamed too
+        if self.compression == GaugeCompression.TWO_ROW:
+            return GAUGE_COMP_WORDS  # 48: two stored rows per link
         return GAUGE_WORDS  # 72: SoA/AoSoA carry no metadata
 
     @property

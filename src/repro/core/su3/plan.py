@@ -85,6 +85,27 @@ from repro.launch.mesh import MeshSpec
 PLACEMENTS = ("sharded", "host_scatter", "replicated")
 
 
+def verify_tolerance(
+    dtype: str, accum_dtype: str = "", reconstruct: bool = False
+) -> float:
+    """THE verification tolerance for a plan's fixed-point checks.
+
+    One rule instead of per-call-site constants, keyed on the full precision
+    tuple so a new storage/accumulate/reconstruct combination cannot silently
+    inherit a tolerance it never earned:
+
+    * storage rounding dominates: bf16 words quantize at ~2^-8, so any plan
+      STORING bf16 verifies at 1e-2 even when it accumulates at f32 (the
+      accumulate width fixes the chain, not the stored words);
+    * f32 storage verifies at 1e-5 — two-row ``reconstruct`` plans stay at
+      the same bound because the in-register cross product is ~1 ulp of
+      extra f32 error (documented in ``su3_matmul._expand_tile``), orders of
+      magnitude inside it.
+    """
+    del accum_dtype, reconstruct  # keyed-for-future; today storage decides
+    return 1e-2 if dtype == "bfloat16" else 1e-5
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """The tunable tuple. One instance == one ExecutionPlan identity."""
@@ -98,10 +119,15 @@ class EngineConfig:
     iterations: int = 10
     warmups: int = 2
     accum_dtype: str = ""  # "" = accumulate at dtype; "float32" = bf16-storage plans
+    compression: str = "none"  # gauge storage: "none" (18-real) | "two_row" (12-real)
 
     @property
     def word_bytes(self) -> int:
         return layouts.WORD_BYTES[self.dtype]
+
+    @property
+    def is_compressed(self) -> bool:
+        return self.compression == layouts.GaugeCompression.TWO_ROW.value
 
     @property
     def compute_dtype(self) -> str:
@@ -182,11 +208,13 @@ def _uniform_phys_shard(
         out[:, layouts.GAUGE_WORDS + 5] = idx % 2  # parity
         return out.astype(wdt)
     if codec.layout == Layout.SOA:
-        out = np.zeros((2, layouts.PLANAR_ROWS, n_sites), np.float32)
+        # codec.planar_rows: 36, or 24 for two-row compressed gauge — the
+        # stored rows of the uniform lattice are all (1, 0) either way
+        out = np.zeros((2, codec.planar_rows, n_sites), np.float32)
         out[0] = 1.0  # re plane
         return out.astype(wdt)
     n_tiles = n_sites // codec.tile
-    out = np.zeros((n_tiles, 2, layouts.PLANAR_ROWS, codec.tile), np.float32)
+    out = np.zeros((n_tiles, 2, codec.planar_rows, codec.tile), np.float32)
     out[:, 0] = 1.0
     return out.astype(wdt)
 
@@ -270,6 +298,11 @@ def make_raw_step(
             f"kernel {kernel.name!r} cannot accumulate at {codec.accum_dtype!r} "
             f"over {codec.dtype!r} storage (no accum_dtype support)"
         )
+    if codec.is_compressed and not kernel.supports_compression():
+        raise ValueError(
+            f"kernel {kernel.name!r} cannot stream two-row compressed gauge "
+            f"(no reconstruct-on-load path)"
+        )
 
     if kernel.form == registry.PLANAR:
         if not codec.supports_planar_view:
@@ -283,6 +316,8 @@ def make_raw_step(
             kw: dict[str, Any] = {"tile": tile, "k_iters": k_iters, "alias": alias}
             if codec.is_mixed_precision:
                 kw["accum_dtype"] = codec.accum_dtype
+            if codec.is_compressed:
+                kw["compressed"] = True
             if interpret is not None:
                 kw["interpret"] = interpret
             c_p = kernel.fn(a_p, b_p, **kw)
@@ -412,6 +447,11 @@ def make_raw_batched_step(
             f"kernel {kernel.name!r} cannot accumulate at {codec.accum_dtype!r} "
             f"over {codec.dtype!r} storage (no accum_dtype support)"
         )
+    if codec.is_compressed and not kernel.supports_compression():
+        raise ValueError(
+            f"kernel {kernel.name!r} cannot stream two-row compressed gauge "
+            f"(no reconstruct-on-load path)"
+        )
 
     def raw_batched(
         a_batch: jax.Array, b_batch: jax.Array, slot_k: jax.Array
@@ -420,6 +460,8 @@ def make_raw_batched_step(
         kw: dict[str, Any] = {"tile": tile, "max_k": max_k, "alias": alias}
         if codec.is_mixed_precision:
             kw["accum_dtype"] = codec.accum_dtype
+        if codec.is_compressed:
+            kw["compressed"] = True
         if interpret is not None:
             kw["interpret"] = interpret
         c_p = kernel.fn(a_p, b_batch, slot_k, **kw)
@@ -459,7 +501,11 @@ class ExecutionPlan:
         if cfg.placement not in PLACEMENTS:
             raise ValueError(f"unknown placement {cfg.placement!r}; one of {PLACEMENTS}")
         self.codec = layouts.make_codec(
-            cfg.layout, tile=cfg.tile, dtype=cfg.dtype, accum_dtype=cfg.accum_dtype
+            cfg.layout,
+            tile=cfg.tile,
+            dtype=cfg.dtype,
+            accum_dtype=cfg.accum_dtype,
+            compression=layouts.GaugeCompression(cfg.compression),
         )
         self.kernel = registry.get_kernel(cfg.variant)
         # Lattice padded so every device shard is a whole number of tiles.
@@ -476,8 +522,11 @@ class ExecutionPlan:
         self._batched_steps: dict[
             tuple[int, int], Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
         ] = {}
-        self._stencil_steps: dict[bool, Callable[[jax.Array, jax.Array], jax.Array]] = {}
+        self._stencil_steps: dict[
+            tuple[bool, int], Callable[[jax.Array, jax.Array], jax.Array]
+        ] = {}
         self._stencil_tables: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
+        self._stencil_parts: dict[str, Any] | None = None
 
     @classmethod
     def build(
@@ -593,15 +642,20 @@ class ExecutionPlan:
         ax = self.site_axes if len(self.site_axes) > 1 else self.site_axes[0]
         return NamedSharding(self.mesh, P(None, None, ax))
 
-    def stencil_halo(self) -> dist_sharding.HaloSpec:
+    def stencil_halo(self, depth: int = 1) -> dist_sharding.HaloSpec:
         """Halo spec of the stencil's *vector-field* exchange: same boundary
         geometry as :meth:`halo`, priced at 6 words/site (color 3-vectors
-        travel, not gauge links) and at the plan's storage width."""
+        travel, not gauge links) and at the plan's storage width.
+
+        ``depth=2`` prices the communication-avoiding exchange that feeds two
+        :meth:`stencil_step` applications per transfer (twice the ghost zone,
+        half as many exchanges)."""
         return dist_sharding.HaloSpec(
             L=self.cfg.L,
             n_shards=self.n_hosts,
             word_bytes=self.cfg.word_bytes,
             words_per_site=dist_sharding.VECTOR_WORDS_PER_SITE,
+            depth=depth,
         )
 
     def _stencil_geometry(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -623,9 +677,16 @@ class ExecutionPlan:
                 f"stencil kernel {kernel.name!r} cannot accumulate at "
                 f"{self.codec.accum_dtype!r} over {self.codec.dtype!r} storage"
             )
+        if self.codec.is_compressed and not kernel.supports_compression():
+            raise ValueError(
+                f"stencil kernel {kernel.name!r} cannot stream two-row "
+                f"compressed gauge (no reconstruct-on-load path)"
+            )
         kw: dict[str, Any] = {"tile": self.cfg.tile}
         if self.codec.is_mixed_precision:
             kw["accum_dtype"] = self.codec.accum_dtype
+        if self.codec.is_compressed:
+            kw["compressed"] = True
         return kernel, kw
 
     def raw_stencil_reference(self) -> Callable[[jax.Array, jax.Array], jax.Array]:
@@ -655,13 +716,15 @@ class ExecutionPlan:
         return self.stencil_step(overlap=False)
 
     def stencil_step(
-        self, overlap: bool | None = None
+        self, overlap: bool | None = None, depth: int = 1
     ) -> Callable[[jax.Array, jax.Array], jax.Array]:
         """The stencil dispatch path: ``step(u_phys, v_p) -> out_p``.
 
         ``u_phys`` is the plan's physical gauge lattice, ``v_p`` the planar
         (2, 3, padded_sites) vector field (``codec.pack_vec``), and the
         result is the planar output vector field, sharded like ``v_p``.
+        ``depth`` is the number of stencil applications the returned callable
+        performs (``step(u, v)`` with depth=2 equals two depth-1 steps).
 
         overlap=False (the pinned reference): one jitted dispatch; neighbor
         gathers through the exact periodic table, kernel over all sites.
@@ -686,74 +749,197 @@ class ExecutionPlan:
         computed twice — the classic overlap trade (arXiv:2112.01852) — and
         the result is bit-identical to the reference: same kernel, same
         per-site inputs, same accumulation order.
+
+        depth=2 with overlap (communication avoidance): ONE ±t exchange
+        carries the depth-2 ghost payload — the depth-1 ghosts plus every
+        ``v`` value the *ring* (the ±t neighbors of the boundary sites)
+        reads — and both applications run off it.  Step 2's boundary pass
+        needs step 1's result at the ring; instead of a second exchange it
+        is recomputed locally from the exchanged ``v`` (same kernel, same
+        per-site inputs as the pass that produced it, so the recompute is
+        bit-identical and the whole depth-2 step matches two depth-1
+        steps).  Halves the exchange count per application at the cost of
+        ``2 x ring`` extra boundary-size kernel work — the trade
+        ``autotune.predict_stencil`` prices per mesh.
         """
+        if depth not in (1, 2):
+            raise ValueError(f"stencil exchange depth must be 1 or 2, got {depth}")
         if overlap is None:
             overlap = self.is_multi_host
-        overlap = bool(overlap)
-        if overlap not in self._stencil_steps:
-            self._stencil_steps[overlap] = self._build_stencil_step(overlap)
-        return self._stencil_steps[overlap]
+        key = (bool(overlap), depth)
+        if key not in self._stencil_steps:
+            self._stencil_steps[key] = self._build_stencil_step(*key)
+        return self._stencil_steps[key]
 
-    def _build_stencil_step(
-        self, overlap: bool
-    ) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    def _stencil_overlap_parts(self) -> dict[str, Any]:
+        """The jitted pieces every overlapped stencil schedule shares.
+
+        One construction site so the depth-2 path reuses the SAME compiled
+        interior/boundary programs as depth-1 — the bit-identity argument
+        ("same kernel, same per-site inputs") then needs to cover only the
+        ring recompute, not a re-derived schedule.
+        """
+        if self._stencil_parts is not None:
+            return self._stencil_parts
         kernel, kw = self._stencil_kernel_kwargs()
         glob, local, bidx = self._stencil_geometry()
         codec, tile = self.codec, self.cfg.tile
         out_sh = self.vec_sharding
-
-        if not overlap:
-            # ONE body for the reference: the same raw function the serving
-            # layer vmaps, so the pinned bit-identity oracle and the served
-            # stencil can never silently diverge
-            return jax.jit(self.raw_stencil_reference(), out_shardings=out_sh)
 
         def interior_fn(u_phys: jax.Array, v_p: jax.Array) -> jax.Array:
             # slab-local gathers only: independent of the in-flight exchange
             v_nbr = jnp.moveaxis(v_p[:, :, local], 2, 0)  # (8, 2, 3, S)
             return kernel.fn(codec.planar_view(u_phys), v_nbr, **kw)
 
-        interior_j = jax.jit(interior_fn, out_shardings=out_sh)
-        n_boundary = int(bidx.size)
-        if n_boundary == 0:  # unsharded lattice: local wrap IS the periodic wrap
-            return interior_j
+        parts: dict[str, Any] = {
+            "interior_j": jax.jit(interior_fn, out_shardings=out_sh),
+            "n_boundary": int(bidx.size),
+        }
+        if parts["n_boundary"]:
+            n_boundary = parts["n_boundary"]
+            # +-t ghosts: the true remote neighbors of the boundary sites
+            ghost_fwd_idx, ghost_bwd_idx = glob[3][bidx], glob[7][bidx]
+            xyz_idx = glob[(0, 1, 2, 4, 5, 6), :][:, bidx]  # shard-local dirs
+            pad = (-n_boundary) % tile
 
-        # +-t ghosts: the true remote neighbors of the boundary sites
-        ghost_fwd_idx, ghost_bwd_idx = glob[3][bidx], glob[7][bidx]
-        xyz_idx = glob[(0, 1, 2, 4, 5, 6), :][:, bidx]  # shard-local dirs at boundary
-        pad = (-n_boundary) % tile
+            def exchange_fn(v_p: jax.Array) -> tuple[jax.Array, jax.Array]:
+                return v_p[:, :, ghost_fwd_idx], v_p[:, :, ghost_bwd_idx]
 
-        def exchange_fn(v_p: jax.Array) -> tuple[jax.Array, jax.Array]:
-            return v_p[:, :, ghost_fwd_idx], v_p[:, :, ghost_bwd_idx]
+            def boundary_fn(
+                u_phys: jax.Array,
+                v_p: jax.Array,
+                ghost_fwd: jax.Array,
+                ghost_bwd: jax.Array,
+                out_interior: jax.Array,
+            ) -> jax.Array:
+                u_b = codec.planar_view(u_phys)[:, :, bidx]  # (2, 36|24, B)
+                v6 = jnp.moveaxis(v_p[:, :, xyz_idx], 2, 0)  # (6, 2, 3, B)
+                v_nbr = jnp.concatenate(
+                    [v6[:3], ghost_fwd[None], v6[3:], ghost_bwd[None]], axis=0
+                )  # (8, 2, 3, B) in direction order
+                if pad:
+                    u_b = jnp.pad(u_b, ((0, 0), (0, 0), (0, pad)))
+                    v_nbr = jnp.pad(v_nbr, ((0, 0), (0, 0), (0, 0), (0, pad)))
+                out_b = kernel.fn(u_b, v_nbr, **kw)[:, :, :n_boundary]
+                return out_interior.at[:, :, bidx].set(out_b)
 
-        exchange_j = jax.jit(exchange_fn)
+            parts.update(
+                exchange_j=jax.jit(exchange_fn),
+                boundary_j=jax.jit(boundary_fn, out_shardings=out_sh),
+                ghost_fwd_idx=ghost_fwd_idx,
+                ghost_bwd_idx=ghost_bwd_idx,
+            )
+        self._stencil_parts = parts
+        return parts
 
-        def boundary_fn(
-            u_phys: jax.Array,
+    def _build_stencil_step(
+        self, overlap: bool, depth: int = 1
+    ) -> Callable[[jax.Array, jax.Array], jax.Array]:
+        if not overlap:
+            # ONE body for the reference: the same raw function the serving
+            # layer vmaps, so the pinned bit-identity oracle and the served
+            # stencil can never silently diverge
+            ref = jax.jit(self.raw_stencil_reference(), out_shardings=self.vec_sharding)
+            if depth == 1:
+                return ref
+
+            def double_ref(u_phys: jax.Array, v_p: jax.Array) -> jax.Array:
+                return ref(u_phys, ref(u_phys, v_p))
+
+            return double_ref
+
+        parts = self._stencil_overlap_parts()
+        interior_j = parts["interior_j"]
+        if parts["n_boundary"] == 0:
+            # unsharded lattice: local wrap IS the periodic wrap, and there
+            # is no exchange to avoid — depth just composes the interior pass
+            if depth == 1:
+                return interior_j
+
+            def double_interior(u_phys: jax.Array, v_p: jax.Array) -> jax.Array:
+                return interior_j(u_phys, interior_j(u_phys, v_p))
+
+            return double_interior
+
+        exchange_j, boundary_j = parts["exchange_j"], parts["boundary_j"]
+        if depth == 1:
+
+            def overlapped(u_phys: jax.Array, v_p: jax.Array) -> jax.Array:
+                ghosts = exchange_j(v_p)  # issued FIRST: halo transfer in flight
+                out_i = interior_j(u_phys, v_p)  # overlaps the exchange
+                return boundary_j(u_phys, v_p, *ghosts, out_i)
+
+            return overlapped
+
+        return self._build_stencil_step2(parts)
+
+    def _build_stencil_step2(
+        self, parts: dict[str, Any]
+    ) -> Callable[[jax.Array, jax.Array], jax.Array]:
+        """The communication-avoiding double step (overlap, depth=2).
+
+        Ring geometry: the ring is ``(+t, -t)`` neighbors of the boundary
+        sites — exactly the sites whose step-1 results the second boundary
+        pass consumes as ghosts.  ``exchange2`` ships the depth-2 payload in
+        one dispatch (depth-1 ghosts + the 8-direction ``v`` neighborhoods of
+        the ring); ``ring_j`` then recomputes step-1's output at the ring
+        from that payload, so step 2 never exchanges.  A ring site is either
+        interior to its owning shard (step 1 computed it through the local
+        table, which equals the periodic table there) or a boundary site
+        (step 1 computed it from the same glob-derived ghosts) — either way
+        the recompute feeds the kernel the same per-site inputs, hence the
+        bit-identity with two depth-1 steps.
+        """
+        kernel, kw = self._stencil_kernel_kwargs()
+        glob, _local, _bidx = self._stencil_geometry()
+        codec, tile = self.codec, self.cfg.tile
+        interior_j, boundary_j = parts["interior_j"], parts["boundary_j"]
+        n_boundary = parts["n_boundary"]
+
+        ridx = np.concatenate([parts["ghost_fwd_idx"], parts["ghost_bwd_idx"]])
+        ring_nbr_idx = glob[:, ridx]  # (8, 2B): every v site the ring reads
+        n_ring = int(ridx.size)
+        rpad = (-n_ring) % tile
+
+        def exchange2_fn(
             v_p: jax.Array,
-            ghost_fwd: jax.Array,
-            ghost_bwd: jax.Array,
-            out_interior: jax.Array,
-        ) -> jax.Array:
-            u_b = codec.planar_view(u_phys)[:, :, bidx]  # (2, 36, B)
-            v6 = jnp.moveaxis(v_p[:, :, xyz_idx], 2, 0)  # (6, 2, 3, B)
-            v_nbr = jnp.concatenate(
-                [v6[:3], ghost_fwd[None], v6[3:], ghost_bwd[None]], axis=0
-            )  # (8, 2, 3, B) in direction order
-            if pad:
-                u_b = jnp.pad(u_b, ((0, 0), (0, 0), (0, pad)))
-                v_nbr = jnp.pad(v_nbr, ((0, 0), (0, 0), (0, 0), (0, pad)))
-            out_b = kernel.fn(u_b, v_nbr, **kw)[:, :, :n_boundary]
-            return out_interior.at[:, :, bidx].set(out_b)
+        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+            # ONE dispatch shipping the whole depth-2 ghost zone: the
+            # depth-1 ghosts (step 1's boundary pass) plus the v values
+            # within two faces of the boundary (the ring recompute's reads)
+            return (
+                v_p[:, :, parts["ghost_fwd_idx"]],
+                v_p[:, :, parts["ghost_bwd_idx"]],
+                jnp.moveaxis(v_p[:, :, ring_nbr_idx], 2, 0),  # (8, 2, 3, 2B)
+            )
 
-        boundary_j = jax.jit(boundary_fn, out_shardings=out_sh)
+        exchange2_j = jax.jit(exchange2_fn)
 
-        def overlapped(u_phys: jax.Array, v_p: jax.Array) -> jax.Array:
-            ghosts = exchange_j(v_p)  # issued FIRST: halo transfer in flight
-            out_i = interior_j(u_phys, v_p)  # overlaps the exchange
-            return boundary_j(u_phys, v_p, *ghosts, out_i)
+        def ring_fn(
+            u_phys: jax.Array, ring_vnbr: jax.Array
+        ) -> tuple[jax.Array, jax.Array]:
+            u_r = codec.planar_view(u_phys)[:, :, ridx]  # (2, 36|24, 2B)
+            if rpad:
+                u_r = jnp.pad(u_r, ((0, 0), (0, 0), (0, rpad)))
+                ring_vnbr = jnp.pad(
+                    ring_vnbr, ((0, 0), (0, 0), (0, 0), (0, rpad))
+                )
+            w_r = kernel.fn(u_r, ring_vnbr, **kw)[:, :, :n_ring]
+            # step 1's output at (+t, -t) neighbors of the boundary — the
+            # ghosts step 2's boundary pass would otherwise exchange
+            return w_r[:, :, :n_boundary], w_r[:, :, n_boundary:]
 
-        return overlapped
+        ring_j = jax.jit(ring_fn)
+
+        def overlapped2(u_phys: jax.Array, v_p: jax.Array) -> jax.Array:
+            g_fwd, g_bwd, ring_vnbr = exchange2_j(v_p)  # ONE exchange, 2 apps
+            out_1i = interior_j(u_phys, v_p)  # overlaps the exchange
+            w = boundary_j(u_phys, v_p, g_fwd, g_bwd, out_1i)
+            ring_w = ring_j(u_phys, ring_vnbr)  # recompute, don't re-exchange
+            out_2i = interior_j(u_phys, w)
+            return boundary_j(u_phys, w, *ring_w, out_2i)
+
+        return overlapped2
 
     def init_stencil_data(self) -> tuple[jax.Array, jax.Array]:
         """The canonical stencil benchmark inputs under the plan's placement:
@@ -771,11 +957,28 @@ class ExecutionPlan:
 
     def verify_stencil(self, out_p: jax.Array) -> bool:
         """Fixed-point check for :meth:`init_stencil_data` inputs: every
-        output component must be (1, 0) within the storage dtype's tolerance."""
+        output component must be (1, 0) within the storage dtype's tolerance.
+
+        Two-row compressed plans see a DIFFERENT fixed point: the canonical
+        uniform lattice is not SU(3), so the reconstructed third row is
+        ``conj(r0 x r1) = 0`` rather than the stored all-ones row, and the
+        8-direction sum lands on ``4 (U + U^T) v = (5/6, 5/6, 1/3)`` per
+        component (computed here from the reconstructed link, not hardcoded).
+        """
         c = self.unpack_vec(jax.device_get(out_p))
-        tol = 1e-2 if self.cfg.dtype == "bfloat16" else 1e-5
+        if self.codec.is_compressed:
+            u = np.ones((layouts.SU3, layouts.SU3))
+            u[2] = 0.0  # reconstructed uniform link: row 2 = conj(r0 x r1) = 0
+            expected = jnp.asarray(
+                layouts.LINKS * (u + u.T) @ np.full(layouts.SU3, 1.0 / 24.0)
+            )
+        else:
+            expected = jnp.asarray(1.0)
+        tol = verify_tolerance(
+            self.cfg.dtype, self.cfg.accum_dtype, reconstruct=self.codec.is_compressed
+        )
         return bool(
-            jnp.max(jnp.abs(jnp.real(c) - 1.0)) < tol
+            jnp.max(jnp.abs(jnp.real(c) - expected)) < tol
             and jnp.max(jnp.abs(jnp.imag(c))) < tol
         )
 
@@ -839,9 +1042,20 @@ class ExecutionPlan:
         return self.codec.unpack(c_phys, self.cfg.shape.n_sites)
 
     def verify(self, c_phys: jax.Array) -> bool:
-        """su3_bench check: with A=(1,0), B=(1/3,0) every C element is (1,0)."""
+        """su3_bench check: with A=(1,0), B=(1/3,0) every C element is (1,0).
+
+        Two-row compressed plans check the STORED rows only: the canonical
+        uniform lattice is not SU(3), so ``unpack``'s reconstructed third row
+        is ``conj(r0 x r1) = 0`` by construction — a property of the codec,
+        not of the multiply (whose stored output is exact; its rows 0/1
+        depend only on A's rows 0/1).
+        """
         c = self.unpack(jax.device_get(c_phys))
-        tol = 1e-2 if self.cfg.dtype == "bfloat16" else 1e-5
+        if self.codec.is_compressed:
+            c = c[:, :, : self.codec.stored_rows, :]
+        tol = verify_tolerance(
+            self.cfg.dtype, self.cfg.accum_dtype, reconstruct=self.codec.is_compressed
+        )
         return bool(
             jnp.max(jnp.abs(jnp.real(c) - 1.0)) < tol
             and jnp.max(jnp.abs(jnp.imag(c))) < tol
@@ -855,10 +1069,11 @@ class ExecutionPlan:
         """
         c = self.cfg
         acc = f"+acc-{c.accum_dtype}" if c.is_mixed_precision else ""
+        comp = "+two-row" if c.is_compressed else ""
         hosts = f"x{self.n_hosts}h" if self.is_multi_host else ""
         return (
             f"{c.layout.value}/{c.variant}/t{c.tile}/{c.placement}"
-            f"@{self.n_devices}dev{hosts}/{c.dtype}{acc}"
+            f"@{self.n_devices}dev{hosts}/{c.dtype}{acc}{comp}"
         )
 
 

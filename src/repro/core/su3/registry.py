@@ -68,6 +68,8 @@ class KernelEntry:
         supports_fused: fn accepts ``k_iters`` and chains K multiplies in
             one dispatch.
         supports_accum: fn accepts ``accum_dtype`` (planar mixed-precision).
+        supports_compressed: fn accepts ``compressed`` and can stream two-row
+            (24-planar-row) gauge blocks, reconstructing row 2 in-register.
     """
 
     name: str
@@ -77,6 +79,7 @@ class KernelEntry:
     form: str = CANONICAL
     supports_fused: bool = False
     supports_accum: bool = False
+    supports_compressed: bool = False
 
     def supports_layout(self, layout: Layout) -> bool:
         """Whether this kernel can be planned with ``layout`` (accepts the
@@ -87,6 +90,12 @@ class KernelEntry:
         """Mixed-precision capable: planar kernels must opt in; canonical
         kernels always accumulate in float32 (the codec unpacks to c64)."""
         return self.supports_accum or self.form == CANONICAL
+
+    def supports_compression(self) -> bool:
+        """Two-row gauge capable: planar-view kernels must opt in; canonical
+        kernels get it for free — the codec's unpack reconstructs row 2
+        before they ever see the data (they just don't save the bytes)."""
+        return self.supports_compressed or self.form == CANONICAL
 
 
 _KERNELS: dict[str, KernelEntry] = {}
@@ -100,6 +109,7 @@ def register_kernel(
     form: str = CANONICAL,
     supports_fused: bool = False,
     supports_accum: bool = False,
+    supports_compressed: bool = False,
 ) -> Callable[[Callable], Callable]:
     """Decorator registering ``fn`` as kernel ``name``; returns fn unchanged.
 
@@ -113,6 +123,8 @@ def register_kernel(
         supports_fused: fn accepts ``k_iters`` (in-kernel chained multiply).
         supports_accum: fn accepts ``accum_dtype`` (planar kernels that own
             their upcast; canonical kernels get mixed precision for free).
+        supports_compressed: fn accepts ``compressed`` (two-row gauge blocks
+            with in-register row-2 reconstruction).
 
     Raises:
         ValueError: on an unknown ``form``.
@@ -129,6 +141,7 @@ def register_kernel(
             form=form,
             supports_fused=supports_fused,
             supports_accum=supports_accum,
+            supports_compressed=supports_compressed,
         )
         return fn
 

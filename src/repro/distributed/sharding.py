@@ -333,12 +333,22 @@ class HaloSpec:
             would move); a vector-field stencil (Dslash-style, the
             ``ExecutionPlan.stencil_step`` workload) exchanges color
             3-vectors and prices 6 (:data:`VECTOR_WORDS_PER_SITE`).
+        depth: ghost-zone thickness in faces.  depth=1 is the classic
+            nearest-neighbor halo; depth=2 prices the communication-avoiding
+            exchange that feeds TWO stencil applications per transfer (the
+            ``ExecutionPlan.stencil_step(depth=2)`` schedule): twice the
+            payload per exchange, half as many exchanges per application.
+            The interior/boundary split (``boundary_ranges`` /
+            ``interior_ranges``) stays depth-1 — it describes one
+            application's recompute schedule — while ``ghost_ranges`` and
+            the exchange pricing widen with the depth.
     """
 
     L: int
     n_shards: int
     word_bytes: int = 4
     words_per_site: int = _GAUGE_WORDS_PER_SITE
+    depth: int = 1
 
     @property
     def sites_per_shard(self) -> int:
@@ -360,6 +370,16 @@ class HaloSpec:
         return min(2 * self.face_sites, self.sites_per_shard)
 
     @property
+    def halo_sites(self) -> int:
+        """Sites one shard sends per exchange at this spec's ``depth``: two
+        faces of thickness ``depth``, capped at the slab size (a shard can
+        never ship more than it owns).  Equals :attr:`boundary_sites` at
+        depth 1."""
+        if self.n_shards == 1:
+            return 0
+        return min(2 * self.depth * self.face_sites, self.sites_per_shard)
+
+    @property
     def interior_fraction(self) -> float:
         """Fraction of a shard's sites that touch no boundary — the locality
         argument for routing work to the host that holds the shard."""
@@ -369,11 +389,14 @@ class HaloSpec:
 
     @property
     def halo_bytes_per_exchange(self) -> int:
-        """Bytes one shard sends per stencil application: the exchanged
-        field's words on both faces, at storage width (metadata never
+        """Bytes one shard sends per EXCHANGE: the exchanged field's words
+        on both depth-thick faces, at storage width (metadata never
         travels).  ``words_per_site`` picks the payload: 72 (gauge field,
-        the default) or 6 (the Dslash vector field)."""
-        return self.boundary_sites * self.words_per_site * self.word_bytes
+        the default) or 6 (the Dslash vector field).  At ``depth > 1`` an
+        exchange costs proportionally more but amortizes over ``depth``
+        stencil applications — per-application bytes are
+        ``halo_bytes_per_exchange / depth``."""
+        return self.halo_sites * self.words_per_site * self.word_bytes
 
     # -- interior/boundary/ghost site decomposition ---------------------------
     #
@@ -421,36 +444,53 @@ class HaloSpec:
 
     def ghost_ranges(self, shard: int) -> list[tuple[int, int]]:
         """REMOTE global site ranges ``shard`` must receive per exchange:
-        the +-t neighbors of its boundary sites (the facing faces of the
-        neighboring slabs, wrap-split at the periodic seam).  Empty when the
-        lattice is unsharded."""
+        the sites within ``depth`` +-t faces of its boundary (the facing
+        faces of the neighboring slabs, wrap-split at the periodic seam).
+        Empty when the lattice is unsharded.
+
+        depth=1 reproduces the classic nearest-neighbor ghost faces exactly
+        (same shift-based derivation, including the degenerate sub-face-slab
+        cuts); depth>1 unions the faces at distance 1..depth and merges
+        overlapping segments (thin lattices wrap the two sides into each
+        other before the cap does).
+        """
         if self.n_shards == 1:
             return []
         S = self.L**4
         face = self.face_sites
         out: list[tuple[int, int]] = []
         for b_lo, b_hi in self.boundary_ranges(shard):
-            for shift in (face, -face):  # +t then -t neighbors
-                g_lo = (b_lo + shift) % S
-                g_hi = g_lo + (b_hi - b_lo)
-                if g_hi <= S:
-                    segs = [(g_lo, g_hi)]
-                else:  # periodic wrap: split at the seam
-                    segs = [(g_lo, S), (0, g_hi - S)]
-                lo_s, hi_s = self.shard_range(shard)
-                for lo, hi in segs:
-                    # a degenerate two-face slab's "+t of the lower face" can
-                    # land inside the shard itself; only remote sites are ghosts
-                    cut_lo = max(lo, min(hi, lo_s))
-                    cut_hi = max(lo, min(hi, hi_s))
-                    if lo < cut_lo:
-                        out.append((lo, cut_lo))
-                    if cut_hi < hi:
-                        out.append((cut_hi, hi))
-        return sorted(set(out))
+            for k in range(1, self.depth + 1):
+                for shift in (k * face, -k * face):  # +t then -t neighbors
+                    g_lo = (b_lo + shift) % S
+                    g_hi = g_lo + (b_hi - b_lo)
+                    if g_hi <= S:
+                        segs = [(g_lo, g_hi)]
+                    else:  # periodic wrap: split at the seam
+                        segs = [(g_lo, S), (0, g_hi - S)]
+                    lo_s, hi_s = self.shard_range(shard)
+                    for lo, hi in segs:
+                        # a degenerate slab's shifted face can land (partly)
+                        # inside the shard itself; only remote sites are ghosts
+                        cut_lo = max(lo, min(hi, lo_s))
+                        cut_hi = max(lo, min(hi, hi_s))
+                        if lo < cut_lo:
+                            out.append((lo, cut_lo))
+                        if cut_hi < hi:
+                            out.append((cut_hi, hi))
+        ranges = sorted(set(out))
+        if self.depth == 1:
+            return ranges  # byte-identical to the pre-depth behavior
+        merged: list[tuple[int, int]] = []
+        for lo, hi in ranges:
+            if merged and lo <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], hi))
+            else:
+                merged.append((lo, hi))
+        return merged
 
     def as_dict(self) -> dict[str, Any]:
-        return {
+        d = {
             "L": self.L,
             "n_shards": self.n_shards,
             "sites_per_shard": self.sites_per_shard,
@@ -458,6 +498,9 @@ class HaloSpec:
             "interior_fraction": round(self.interior_fraction, 4),
             "halo_bytes_per_exchange": self.halo_bytes_per_exchange,
         }
+        if self.depth != 1:  # depth-1 dicts stay byte-identical to pre-depth rows
+            d["depth"] = self.depth
+        return d
 
 
 def halo_spec(
@@ -467,6 +510,7 @@ def halo_spec(
     *,
     dtype: str | None = None,
     words_per_site: int = _GAUGE_WORDS_PER_SITE,
+    depth: int = 1,
 ) -> HaloSpec:
     """The halo/boundary spec of an L^4 lattice sharded over ``mesh``'s host
     axis (n_shards=1 on single-host meshes: no boundary, no halo).
@@ -482,6 +526,8 @@ def halo_spec(
             matching how ``TrafficModel.for_dtype`` charges them.
         words_per_site: exchanged-field payload (72 = gauge links, the
             default; 6 = the stencil's color vectors).
+        depth: ghost-zone thickness in faces (2 = the communication-avoiding
+            two-applications-per-exchange schedule).
     """
     hosts = (
         int(mesh.shape[LATTICE_HOST_AXIS])
@@ -503,4 +549,5 @@ def halo_spec(
         n_shards=hosts,
         word_bytes=4 if word_bytes is None else word_bytes,
         words_per_site=words_per_site,
+        depth=depth,
     )

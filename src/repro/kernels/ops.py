@@ -32,6 +32,7 @@ def _use_interpret() -> bool:
     form=registry.PLANAR,
     supports_fused=True,
     supports_accum=True,
+    supports_compressed=True,
 )
 def su3_mult_planar(
     a_p: jax.Array,
@@ -42,19 +43,22 @@ def su3_mult_planar(
     interpret: bool | None = None,
     alias: bool = False,
     accum_dtype: str | None = None,
+    compressed: bool = False,
 ) -> jax.Array:
     """Planar flattened SoA entry point: a_p (2, 36, S), b_p (2, 36).
 
     ``k_iters`` chains K multiplies in one dispatch (fused iteration stepping);
     ``alias`` requests in-place C-into-A writes via input_output_aliases;
     ``accum_dtype`` accumulates the FMA chain at a wider precision than the
-    streamed storage words (bf16-storage / f32-accumulate serving plans).
+    streamed storage words (bf16-storage / f32-accumulate serving plans);
+    ``compressed`` streams two-row gauge blocks a_p (2, 24, S) with
+    in-register third-row reconstruction.
     """
     if interpret is None:
         interpret = _use_interpret()
     return su3_matmul.su3_mult_planar(
         a_p, b_p, tile=tile, k_iters=k_iters, interpret=interpret, alias=alias,
-        accum_dtype=accum_dtype,
+        accum_dtype=accum_dtype, compressed=compressed,
     )
 
 
@@ -65,6 +69,7 @@ def su3_mult_planar(
     form=registry.BATCHED,
     supports_fused=True,
     supports_accum=True,
+    supports_compressed=True,
 )
 def su3_mult_planar_batched(
     a_p: jax.Array,
@@ -76,6 +81,7 @@ def su3_mult_planar_batched(
     interpret: bool | None = None,
     alias: bool = False,
     accum_dtype: str | None = None,
+    compressed: bool = False,
 ) -> jax.Array:
     """Slot-batched megakernel entry: a_p (slots, 2, 36, S), b_p (slots, 2, 36),
     slot_k (slots,) per-slot chain depths — one dispatch for the whole table.
@@ -84,7 +90,7 @@ def su3_mult_planar_batched(
         interpret = _use_interpret()
     return su3_matmul.su3_mult_planar_batched(
         a_p, b_p, slot_k, tile=tile, max_k=max_k, interpret=interpret,
-        alias=alias, accum_dtype=accum_dtype,
+        alias=alias, accum_dtype=accum_dtype, compressed=compressed,
     )
 
 
@@ -94,6 +100,7 @@ def su3_mult_planar_batched(
     backends=("pallas",),
     form=registry.STENCIL,
     supports_accum=True,
+    supports_compressed=True,
 )
 def su3_stencil_planar(
     u_p: jax.Array,
@@ -102,14 +109,17 @@ def su3_stencil_planar(
     tile: int = DEFAULT_TILE,
     interpret: bool | None = None,
     accum_dtype: str | None = None,
+    compressed: bool = False,
 ) -> jax.Array:
-    """Planar nearest-neighbor stencil entry: u_p (2, 36, S) links,
+    """Planar nearest-neighbor stencil entry: u_p (2, 36, S) links — or
+    (2, 24, S) two-row compressed, reconstructed in-register —
     v_nbr (8, 2, 3, S) direction-major shifted neighbor vectors -> (2, 3, S).
     """
     if interpret is None:
         interpret = _use_interpret()
     return su3_stencil.su3_stencil_planar(
         u_p, v_nbr, tile=tile, interpret=interpret, accum_dtype=accum_dtype,
+        compressed=compressed,
     )
 
 

@@ -50,6 +50,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.su3_matmul import COMP_ROWS, _expand_tile
+
 LINKS, SU3 = 4, 3
 ROWS = LINKS * SU3 * SU3  # 36 complex link entries per site
 NBR_DIRS = 2 * LINKS  # +x +y +z +t -x -y -z -t
@@ -62,6 +64,10 @@ STENCIL_FLOPS_PER_SITE = NBR_DIRS * SU3 * SU3 * 8
 # The halo payload constant (6 words per exchanged vector) lives with the
 # pricing rules in distributed.sharding.VECTOR_WORDS_PER_SITE.
 STENCIL_WORDS_PER_SITE = 2 * ROWS + NBR_DIRS * 2 * SU3 + 2 * SU3
+
+# two-row compressed gauge: U shrinks 72 -> 48 words; the vector traffic is
+# unchanged (v is not a gauge field), so 102 words per site total.
+STENCIL_COMP_WORDS_PER_SITE = 2 * COMP_ROWS + NBR_DIRS * 2 * SU3 + 2 * SU3
 
 
 def _flat(j: int, k: int, l: int) -> int:
@@ -102,23 +108,30 @@ def _stencil_tile(u: jax.Array, v_nbr: jax.Array) -> jax.Array:
     )
 
 
-def _su3_stencil_kernel(u_ref, v_ref, o_ref, *, accum_dtype: str | None = None):
+def _su3_stencil_kernel(
+    u_ref, v_ref, o_ref, *, accum_dtype: str | None = None, compressed: bool = False
+):
     """One grid step: the unrolled 8-direction FMA chain on resident tiles.
 
     ``accum_dtype`` widens the VREG working precision exactly as in the
     multiply kernel: tiles upcast once on VMEM load, the chain accumulates
     wide, the out-tile narrows back to storage width on the way out.
+    ``compressed`` streams (2, 24, tile) two-row link blocks; unlike the
+    multiply, the stencil genuinely needs row 2 (the adjoint term reads link
+    COLUMNS), so the reconstruct-on-load cross product is load-bearing here.
     """
-    u = u_ref[...]  # (2, 36, tile) in VMEM
+    u = u_ref[...]  # (2, 36 | 24, tile) in VMEM
     v = v_ref[...]  # (8, 2, 3, tile) in VMEM
     if accum_dtype is not None:
         u = u.astype(accum_dtype)
         v = v.astype(accum_dtype)
+    if compressed:
+        u = _expand_tile(u)  # f32 cross product, shared with su3_matmul
     o_ref[...] = _stencil_tile(u, v).astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("tile", "interpret", "accum_dtype")
+    jax.jit, static_argnames=("tile", "interpret", "accum_dtype", "compressed")
 )
 def su3_stencil_planar(
     u: jax.Array,
@@ -127,24 +140,29 @@ def su3_stencil_planar(
     tile: int = 512,
     interpret: bool = False,
     accum_dtype: str | None = None,
+    compressed: bool = False,
 ) -> jax.Array:
     """Planar SU(3) nearest-neighbor stencil via pallas_call.
 
     See the module docstring for the operator and layout contract.  The grid
-    walks site tiles; per step one (2, 36, tile) link block and one
+    walks site tiles; per step one (2, 36, tile) link block — (2, 24, tile)
+    for two-row ``compressed`` gauge, reconstructed in-register — and one
     (8, 2, 3, tile) neighbor block stream HBM->VMEM and the fully unrolled
     complex FMA chain produces the (2, 3, tile) out block.
     """
-    assert u.ndim == 3 and u.shape[:2] == (2, ROWS), u.shape
+    rows = COMP_ROWS if compressed else ROWS
+    assert u.ndim == 3 and u.shape[:2] == (2, rows), (u.shape, compressed)
     n_sites = u.shape[2]
     assert v_nbr.shape == (NBR_DIRS, 2, SU3, n_sites), (v_nbr.shape, n_sites)
     assert n_sites % tile == 0, (n_sites, tile)
     grid = (n_sites // tile,)
     return pl.pallas_call(
-        functools.partial(_su3_stencil_kernel, accum_dtype=accum_dtype),
+        functools.partial(
+            _su3_stencil_kernel, accum_dtype=accum_dtype, compressed=compressed
+        ),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((2, ROWS, tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((2, rows, tile), lambda i: (0, 0, i)),
             pl.BlockSpec((NBR_DIRS, 2, SU3, tile), lambda i: (0, 0, 0, i)),
         ],
         out_specs=pl.BlockSpec((2, SU3, tile), lambda i: (0, 0, i)),

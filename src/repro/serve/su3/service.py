@@ -96,6 +96,9 @@ class ServiceConfig:
         dtype: storage dtype of every plan in the pool.
         accum_dtype: ``"float32"`` with ``dtype="bfloat16"`` = bf16-storage /
             f32-accumulate serving plans.
+        compression: ``"two_row"`` serves 12-real compressed-gauge plans
+            (row 2 reconstructed in-register by every kernel in the pool);
+            stacks with the bf16/f32 mixed-precision tuple.
         layout: physical lattice layout (planar-view layouts only).
         autotune: build runner configs through the persistent cache.
         tile: explicit Pallas tile when ``autotune=False`` (0 = DEFAULT_TILE).
@@ -126,6 +129,7 @@ class ServiceConfig:
 
     dtype: str = "float32"  # storage dtype of every plan in the pool
     accum_dtype: str = ""  # "float32" + dtype="bfloat16" = bf16 serving plans
+    compression: str = "none"  # "two_row" = 12-real compressed-gauge plans
     layout: Layout = Layout.SOA
     autotune: bool = True  # build runner configs through the persistent cache
     tile: int = 0  # explicit tile when autotune=False (0 = DEFAULT_TILE)
@@ -309,11 +313,13 @@ class SU3Service:
                 self._ecfg[L] = autotune.tuned_engine_config(
                     L=L, dtype=cfg.dtype, cache_directory=cfg.cache_directory,
                     layout=cfg.layout, accum_dtype=cfg.accum_dtype,
+                    compression=cfg.compression,
                 )
             else:
                 self._ecfg[L] = EngineConfig(
                     L=L, dtype=cfg.dtype, layout=cfg.layout,
                     tile=cfg.tile or DEFAULT_TILE, accum_dtype=cfg.accum_dtype,
+                    compression=cfg.compression,
                 )
         return self._ecfg[L]
 
@@ -338,7 +344,7 @@ class SU3Service:
         if host is None:
             host = self.router.host_for(L)
         ecfg = self._engine_config(L)
-        key = (host, L, ecfg.dtype, ecfg.layout.value, ecfg.tile)
+        key = (host, L, ecfg.dtype, ecfg.layout.value, ecfg.tile, ecfg.compression)
         runner = self._pool.get(key)
         if runner is None:
             runner = BatchedLatticeRunner(ecfg, self._host_mesh(host))
@@ -346,7 +352,8 @@ class SU3Service:
         return runner
 
     def pool_keys(self) -> list[tuple]:
-        """Sorted warm-pool keys: ``(host, L, dtype, layout, tile)``."""
+        """Sorted warm-pool keys:
+        ``(host, L, dtype, layout, tile, compression)``."""
         return sorted(self._pool)
 
     def default_k_for(self, L: int) -> int:
@@ -358,6 +365,7 @@ class SU3Service:
         if L not in self._tuned_k:
             self._tuned_k[L] = autotune.tuned_fused_k(
                 L=L, dtype=self.cfg.dtype, accum_dtype=self.cfg.accum_dtype,
+                compression=self.cfg.compression,
                 cache_directory=self.cfg.cache_directory,
             )
         return self._tuned_k[L]
@@ -611,7 +619,7 @@ class SU3Service:
         (the same placement ``BatchedLatticeRunner.run`` gives multiplies).
         """
         ecfg = runner.cfg
-        key = (host, L, ecfg.dtype, ecfg.layout.value, ecfg.tile)
+        key = (host, L, ecfg.dtype, ecfg.layout.value, ecfg.tile, ecfg.compression)
         step = self._stencil_steps.get(key)
         if step is None:
             plan = runner.plan

@@ -39,14 +39,14 @@ def _patch_pipeline(monkeypatch, winners=None):
 
     monkeypatch.setattr(
         autotune, "kernel_instruction_model",
-        lambda dtype="float32", accum_dtype="", tile=256: (100.0, 50.0),
+        lambda dtype="float32", accum_dtype="", tile=256, compression="none": (100.0, 50.0),
     )
     monkeypatch.setattr(
         autotune, "enumerate_candidates",
         lambda tiles=(), ks=(), dtype="float32", accum_dtype="", hw=None: list(_CANDS),
     )
 
-    def fake_measure(cand, L=8, dtype="float32", accum_dtype=""):
+    def fake_measure(cand, L=8, dtype="float32", accum_dtype="", compression="none"):
         calls["measure"] += 1
         calls["accum_arg"] = accum_dtype
         calls["cands"].append((cand.tile, cand.fused_k))
@@ -198,4 +198,10 @@ def test_mixed_precision_tunes_and_caches_separately(tmp_path, monkeypatch):
 def test_cache_key_identity():
     k = autotune.cache_key(backend="tpu", device_kind="v5e", layout="soa",
                            dtype="bfloat16", L=16, n_devices=4)
-    assert k == "v2|tpu|v5e|soa|bfloat16|L16|d4"
+    assert k == "v3|tpu|v5e|soa|bfloat16|none|L16|d4"
+    kc = autotune.cache_key(backend="tpu", device_kind="v5e", layout="soa",
+                            dtype="bfloat16", L=16, n_devices=4,
+                            compression="two_row")
+    assert kc == "v3|tpu|v5e|soa|bfloat16|two_row|L16|d4"
+    # a v2-era key (no compression segment) can never equal any v3 key
+    assert "v2|tpu|v5e|soa|bfloat16|L16|d4" != k

@@ -30,7 +30,7 @@ def test_enumerate_candidates_gates_on_vmem():
 def test_three_term_prediction_shape(monkeypatch):
     monkeypatch.setattr(
         autotune, "kernel_instruction_model",
-        lambda dtype="float32", accum_dtype="", tile=256: (100.0, 50.0),
+        lambda dtype="float32", accum_dtype="", tile=256, compression="none": (100.0, 50.0),
     )
     p = autotune.predict_pipeline(autotune.PipelineCandidate(128, 4), L=4)
     assert set(p) >= {"compute_s", "memory_s", "issue_s", "bound_s",
@@ -58,7 +58,7 @@ def test_pruned_measures_at_most_half_and_lands_within_5pct(monkeypatch):
     sweep's best."""
     monkeypatch.setattr(
         autotune, "kernel_instruction_model",
-        lambda dtype="float32", accum_dtype="", tile=256: (100.0, 50.0),
+        lambda dtype="float32", accum_dtype="", tile=256, compression="none": (100.0, 50.0),
     )
     measured = []
 
@@ -119,7 +119,7 @@ def test_pruned_best_config_end_to_end_real_measurements(tmp_path):
 def test_best_config_persists_pipeline_provenance(tmp_path, monkeypatch):
     monkeypatch.setattr(
         autotune, "kernel_instruction_model",
-        lambda dtype="float32", accum_dtype="", tile=256: (100.0, 50.0),
+        lambda dtype="float32", accum_dtype="", tile=256, compression="none": (100.0, 50.0),
     )
 
     def stub(cand):

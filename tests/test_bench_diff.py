@@ -138,6 +138,111 @@ def test_asymmetric_rows_named_both_directions():
                         ("t", "brand_new")]
 
 
+# -- compression / depth-2 gate ----------------------------------------------
+
+
+def _full_artifact(*, mult_bps=384, mult_bf16_bps=192, st_bps=408,
+                   st_bf16_bps=204, identical=True, tag_comp=True):
+    """A minimal but complete artifact that PASSES the compression gate;
+    keyword knobs break it in each gated way."""
+    comp = "two_row" if tag_comp else "none"
+    t2 = [
+        {"name": "table2_pallas_I5", "variant": "pallas", "dtype": "float32",
+         "compression": "none", "bytes_per_site": 576, "GFLOPS": 1.0},
+        {"name": "table2_pallas_two_row_float32", "variant": "pallas",
+         "dtype": "float32", "compression": comp,
+         "bytes_per_site": mult_bps, "GFLOPS": 1.0},
+        {"name": "table2_pallas_two_row_bfloat16_acc-float32",
+         "variant": "pallas", "dtype": "bfloat16", "compression": comp,
+         "bytes_per_site": mult_bf16_bps, "GFLOPS": 1.0},
+    ]
+    st = [
+        {"name": "stencil_L4_float32_serial", "dtype": "float32",
+         "compression": "none", "bytes_per_site": 504, "GFLOPS": 0.5},
+        {"name": "stencil_L4_float32_two_row_serial", "dtype": "float32",
+         "compression": comp, "bytes_per_site": st_bps, "GFLOPS": 0.5},
+        {"name": "stencil_L4_bfloat16_acc-float32_serial",
+         "dtype": "bfloat16", "compression": "none",
+         "bytes_per_site": 252, "GFLOPS": 0.5},
+        {"name": "stencil_L4_bfloat16_acc-float32_two_row_serial",
+         "dtype": "bfloat16", "compression": comp,
+         "bytes_per_site": st_bf16_bps, "GFLOPS": 0.5},
+    ]
+    for hosts in (1, 2, 4):
+        for t in ("", "_two_row"):
+            st.append({"name": f"stencil_depth2_identity_h{hosts}{t}",
+                       "hosts": hosts, "identical": identical,
+                       "t_two_depth1_us": 100.0, "t_one_depth2_us": 90.0})
+    return _payload({"table2_variants": t2, "stencil": st})
+
+
+def test_compression_gate_passes_on_honest_artifact(capsys):
+    problems = bench_diff.compression_gate(_full_artifact())
+    assert problems == []
+    out = capsys.readouterr().out
+    # deltas reported alongside GFLOPS: 384/576 and 408/504
+    assert "-33.3%" in out and "-19.0%" in out and "GF/s" in out
+    assert "1 exchange saved per 2 applications" in out
+
+
+def test_compression_gate_fails_silent_fallback_to_18_real():
+    # fallback symptom 1: full bytes/site under a two_row name
+    problems = bench_diff.compression_gate(
+        _full_artifact(mult_bps=576, st_bps=504))
+    assert any("ceiling" in p and "two_row_float32" in p for p in problems)
+    assert any("stencil_L4_float32_two_row" in p for p in problems)
+    # fallback symptom 2: the compression tag itself lost
+    problems = bench_diff.compression_gate(_full_artifact(tag_comp=False))
+    assert any("does not declare compression" in p for p in problems)
+    # 19% stencil reduction passes the 85% ceiling, 15% must not
+    assert bench_diff.compression_gate(_full_artifact(st_bps=408)) == []
+    assert bench_diff.compression_gate(_full_artifact(st_bps=429))  # 85.1%
+
+
+def test_compression_gate_fails_missing_and_nonidentical_rows():
+    art = _full_artifact()
+    art["tables"]["table2_variants"] = [art["tables"]["table2_variants"][0]]  # drop compressed
+    art["tables"]["stencil"] = [
+        r for r in art["tables"]["stencil"]
+        if not r["name"].startswith("stencil_depth2_identity_h4")
+    ]
+    problems = bench_diff.compression_gate(art)
+    assert any("no table2_pallas_two_row_* row for float32" in p
+               for p in problems)
+    assert any("no table2_pallas_two_row_* row for bfloat16" in p
+               for p in problems)
+    assert any("stencil_depth2_identity_h4 row missing" in p for p in problems)
+    # a depth-2 row that ran but broke bit-identity is a hard failure
+    problems = bench_diff.compression_gate(_full_artifact(identical=False))
+    assert sum("NOT bit-identical" in p for p in problems) == 6
+
+
+def test_main_runs_compression_gate_only_on_harness_artifacts(tmp_path):
+    import json
+    # gated tables present + compressed rows honest -> rc 0 (no baseline)
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(_full_artifact()))
+    assert bench_diff.main(["--current", str(good),
+                            "--baseline", str(tmp_path / "absent.json")]) == 0
+    # same artifact with the stencil compressed rows dropped -> rc 1
+    bad_art = _full_artifact()
+    bad_art["tables"]["stencil"] = [
+        r for r in bad_art["tables"]["stencil"] if "_two_row" not in r["name"]]
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(bad_art))
+    assert bench_diff.main(["--current", str(bad),
+                            "--baseline", str(tmp_path / "absent.json")]) == 1
+    # ... unless the gate is explicitly skipped (pre-compression artifact)
+    assert bench_diff.main(["--current", str(bad),
+                            "--baseline", str(tmp_path / "absent.json"),
+                            "--no-compression-gate"]) == 0
+    # ad-hoc payloads without the gated tables are not gated at all
+    adhoc = tmp_path / "adhoc.json"
+    adhoc.write_text(json.dumps(_payload({"t": [{"name": "r", "GFLOPS": 1.0}]})))
+    assert bench_diff.main(["--current", str(adhoc),
+                            "--baseline", str(tmp_path / "absent.json")]) == 0
+
+
 def test_main_prints_asymmetric_warnings(tmp_path, capsys):
     import json
     base_p = tmp_path / "base.json"

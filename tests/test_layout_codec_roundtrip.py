@@ -108,6 +108,104 @@ def test_b_roundtrip_all_dtypes():
             assert float(jnp.max(jnp.abs(back - b))) < 4e-2
 
 
+# -- two-row compressed codec -------------------------------------------------
+
+
+def _su3(n_sites: int, seed: int) -> np.ndarray:
+    """Random SU(3) links (n_sites, 4, 3, 3) complex128: QR orthonormalizes,
+    the principal cube root of det rotates U(3) -> SU(3)."""
+    rng = np.random.default_rng(seed)
+    g = rng.standard_normal((n_sites, 4, 3, 3)) + 1j * rng.standard_normal(
+        (n_sites, 4, 3, 3))
+    q, r = np.linalg.qr(g)
+    # fix the QR phase ambiguity, then divide out the residual determinant
+    q = q * (np.diagonal(r, axis1=-2, axis2=-1)
+             / np.abs(np.diagonal(r, axis1=-2, axis2=-1)))[..., None, :]
+    q = q / np.linalg.det(q)[..., None, None] ** (1.0 / 3.0)
+    return q
+
+
+def _nearest_su3(a: np.ndarray) -> np.ndarray:
+    """SVD polar projection to U(3), det-normalized to SU(3)."""
+    w, _s, vh = np.linalg.svd(a)
+    p = w @ vh
+    return p / np.linalg.det(p)[..., None, None] ** (1.0 / 3.0)
+
+
+# stored rows round-trip at storage precision (f32 exact); the RECONSTRUCTED
+# third row additionally pays the f64->storage rounding of rows 0/1 amplified
+# through the cross product — a few ulp at f32, bf16-mantissa-sized at bf16.
+_COMP_TOL = {"float32": 1e-5, "bfloat16": 6e-2}
+
+
+@hypothesis.settings(deadline=None, max_examples=12)
+@hypothesis.given(
+    layout=st.sampled_from([Layout.SOA, Layout.AOSOA]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    tile=st.sampled_from([8, 16, 128]),
+    n_sites=st.sampled_from([16, 81, 130]),  # 81, 130: padding path
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_compressed_roundtrip_reconstructs_su3_row2(
+        layout, dtype, tile, n_sites, seed):
+    """TWO_ROW pack stores 24 planar rows; unpack rebuilds row 2 within the
+    storage-precision tolerance on genuine SU(3) input, and the two STORED
+    rows round-trip exactly at f32 (they never left storage)."""
+    codec = layouts.make_codec(layout, tile=tile, dtype=dtype,
+                               compression="two_row")
+    u = _su3(n_sites, seed)
+    a = jnp.asarray(u, jnp.complex64)
+    phys = codec.pack(a)
+    assert phys.dtype == codec.word_dtype
+    if layout == Layout.SOA:
+        assert phys.shape == (2, layouts.PLANAR_COMP_ROWS, n_sites)
+    else:
+        padded = ((n_sites + tile - 1) // tile) * tile
+        assert phys.shape == (padded // tile, 2, layouts.PLANAR_COMP_ROWS, tile)
+    back = codec.unpack(phys, n_sites)
+    assert back.shape == a.shape and back.dtype == a.dtype
+    if dtype == "float32":
+        assert bool(jnp.all(back[:, :, :2, :] == a[:, :, :2, :])), \
+            "stored rows must round-trip exactly at f32"
+    err = float(jnp.max(jnp.abs(back - jnp.asarray(u, jnp.complex64))))
+    assert err < _COMP_TOL[dtype], f"row-2 reconstruction err {err}"
+
+
+@hypothesis.settings(deadline=None, max_examples=8)
+@hypothesis.given(
+    eps=st.sampled_from([1e-3, 1e-2, 1e-1]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_compressed_reconstruction_error_bounded_by_unitarity_violation(
+        eps, seed):
+    """Off the SU(3) manifold the codec is lossy BY THE SAME ORDER as the
+    input's own distance from SU(3): |unpack(pack(A)) - A| on row 2 is
+    bounded by a generous constant times |A - nearest_SU3(A)|.  (On-manifold
+    input is the eps -> 0 limit: both sides vanish.)"""
+    rng = np.random.default_rng(seed)
+    a = _su3(32, seed) + eps * (
+        rng.standard_normal((32, 4, 3, 3))
+        + 1j * rng.standard_normal((32, 4, 3, 3)))
+    dist = float(np.max(np.linalg.norm(a - _nearest_su3(a), axis=(-2, -1))))
+    codec = layouts.make_codec(Layout.SOA, compression="two_row")
+    back = np.asarray(codec.unpack(codec.pack(jnp.asarray(a, jnp.complex64)), 32))
+    err = float(np.max(np.abs(back[:, :, 2, :] - a[:, :, 2, :])))
+    # C covers the cross-product's Lipschitz factor on O(1) rows, plus an
+    # absolute f32 storage floor so the eps=1e-3 cases aren't noise-gated
+    assert err <= 25.0 * dist + 1e-4, (err, dist)
+
+
+def test_compressed_planar_view_roundtrip_and_aos_rejected():
+    codec = layouts.make_codec(Layout.AOSOA, tile=8, compression="two_row")
+    a = jnp.asarray(_su3(32, 7), jnp.complex64)
+    phys = codec.pack(a)
+    view = codec.planar_view(phys)
+    assert view.shape == (2, layouts.PLANAR_COMP_ROWS, 32)
+    assert bool(jnp.all(codec.from_planar_view(view, phys) == phys))
+    with pytest.raises(ValueError, match="only defined for SOA/AoSoA"):
+        layouts.make_codec(Layout.AOS, compression="two_row")
+
+
 def test_aos_roundtrip_preserves_gauge_and_drops_metadata():
     """AOS carries 8 dead metadata words per site; unpack must return the
     gauge field untouched and ignore the metadata block."""
