@@ -10,6 +10,13 @@ empty for analytic tables; ``derived`` carries the table-specific payload.
 rows, grouped per table, with GFLOPS/GBYTES where measured) so the perf
 trajectory is tracked across PRs; ``scripts/smoke.sh`` wires it into the
 quick-mode smoke run.
+
+Every artifact carries a ``provenance`` block (git sha, jax/jaxlib
+versions, backend, device kind, XLA flags, autotune cache schema —
+``repro.obs.provenance_block``): numbers without the environment that
+produced them are not comparable, and ``scripts/bench_diff.py`` refuses a
+diff whose current side lacks the block or whose jax/backend pair changed
+without a re-baseline note (``REPRO_BENCH_REBASELINE="why"``).
 """
 from __future__ import annotations
 
@@ -72,9 +79,12 @@ def main(argv: list[str] | None = None) -> None:
         _emit(rows, collected, table)
 
     if json_path:
+        from repro.obs import provenance_block
+
         payload = {
             "schema": "su3-bench-rows/v1",
             "quick": quick,
+            "provenance": provenance_block(),
             "tables": collected,
         }
         with open(json_path, "w") as f:

@@ -29,6 +29,11 @@ Load models over ``repro.serve.su3.SU3Service``:
   bf16 row     the same request stream served by a bf16-storage /
                f32-accumulate plan pool vs the f32 pool: measured HLO
                bytes/site must drop, results must agree within 1e-2.
+  traced row   ONE Poisson stream replayed tracer-off vs tracer-on
+               (``repro.obs``): sustained-GFLOPS delta, full request
+               lifecycle + stencil exchange/interior/boundary phase
+               coverage, trace exported as JSONL + Chrome trace-event
+               JSON (``serve_trace.jsonl`` / ``serve_trace.chrome.json``).
 
 Rows land in ``BENCH_su3.json`` under ``serve`` via ``benchmarks.run``;
 standalone CLI:
@@ -52,6 +57,28 @@ from repro.serve.su3 import BatcherConfig, ServiceConfig, SU3Service
 
 OVERLOAD = 4.0  # offered load multiple of one-dispatch service capacity
 TILE = 128  # explicit tile for the fixed-plan (non-autotuned) pools
+
+# prefixed with an `L, tile, reps = ...` line by traced_serving; runs the
+# 2-host overlap schedule under an enabled tracer (warm pass untraced, so
+# only steady-state phases land in the records) and prints the span records
+_PHASES_SUBPROC = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax
+from repro.core.su3.plan import EngineConfig, build_plan
+from repro.launch.mesh import MeshSpec
+from repro.obs import Tracer
+
+plan = build_plan(EngineConfig(L=L, tile=tile, iterations=1, warmups=0),
+                  MeshSpec(hosts=2, devices_per_host=1))
+u, v = plan.init_stencil_data()
+step = plan.stencil_step(overlap=True)
+step(u, v).block_until_ready()  # compile + warm untraced
+plan.tracer = Tracer(enabled=True, capacity=4096)
+for _ in range(reps):
+    step(u, v)
+print(json.dumps([s.as_dict() for s in plan.tracer.spans()]))
+"""
 
 
 def _random_request(rng: np.random.Generator, n_sites: int):
@@ -175,7 +202,7 @@ def closed_loop(
 
 
 def _make_slot_service(slots: int, continuous: bool, megakernel: bool = False,
-                       horizon: int = 1) -> SU3Service:
+                       horizon: int = 1, tracer=None) -> SU3Service:
     """Fixed-slot service (every dispatch padded to ``slots``) so occupancy
     is directly comparable across batch / continuous / megakernel modes."""
     return SU3Service(ServiceConfig(
@@ -184,7 +211,7 @@ def _make_slot_service(slots: int, continuous: bool, megakernel: bool = False,
         batcher=BatcherConfig(
             max_batch=slots, warm_batch_sizes=(slots,), max_queue_depth=256,
         ),
-    ))
+    ), tracer=tracer)
 
 
 def _replay_open_loop(
@@ -282,6 +309,109 @@ def continuous_comparison(
         ),
         "sustained_gflops_busy": cont_snap["sustained_gflops_busy"],
     }
+
+
+def traced_serving(
+    L: int = 2, n_requests: int = 16, seed: int = 0, slots: int = 4,
+    ks: tuple[int, ...] = (1, 2), n_stencil: int = 4,
+    stencil_L: int = 4, trace_prefix: str = "serve_trace",
+) -> dict:
+    """Tracing-overhead and lifecycle/phase-coverage row (``repro.obs``).
+
+    Replays ONE Poisson mixed-k stream twice — tracer disabled (the
+    production default: every hot-path site is one ``tracer.enabled``
+    predicate) and enabled (flight-recorder ring) — and reports the
+    sustained-GFLOPS delta between the two.  The traced service then
+    serves a short stencil stream, and the 2-host overlap schedule runs
+    under the SAME tracer (oversubscribed on the local device), so one
+    exported trace covers the full request lifecycle (admit -> queue ->
+    seat -> dispatch -> complete, multiply AND stencil kinds) plus the
+    stencil exchange/interior/boundary phases.  The row asserts both
+    coverages and names the trace files (``{trace_prefix}.jsonl`` and
+    ``{trace_prefix}.chrome.json`` — the latter loads in
+    chrome://tracing / Perfetto and carries the provenance block in
+    ``otherData``).
+    """
+    from repro.obs import Tracer, attribution_report, provenance_block
+
+    probe = _make_slot_service(slots, continuous=False)
+    rng = np.random.default_rng(seed)
+    probe.warm((L,), ks=ks, batch_sizes=(slots,))
+    iter_s = _measure_step_s(probe, L, 1, slots, rng)
+    rate = 1.5 / max(iter_s, 1e-5)
+
+    # min-of-N walls: the first continuous-mode replay pays the chain jit
+    # compiles and every replay carries scheduler/sleep jitter; the min
+    # discards both while any persistent per-span tracer cost survives
+    def best_replay(tracer, reps=3):
+        best, svc = None, None
+        for _ in range(reps):
+            svc = _make_slot_service(slots, continuous=True, tracer=tracer)
+            snap = _replay_open_loop(svc, (L,), ks, n_requests, rate, seed, slots)
+            if best is None or snap["wall_s"] < best["wall_s"]:
+                best = snap
+        return best, svc
+
+    off_snap, _ = best_replay(None)
+    tracer = Tracer(enabled=True, capacity=1 << 16)
+    on_snap, svc = best_replay(tracer)
+
+    # a short stencil stream through the SAME service + tracer (request
+    # lifecycle of the second workload kind)
+    n_sites = L**4
+    for _ in range(n_stencil):
+        u, _ = _random_request(rng, n_sites)
+        vv = rng.standard_normal((n_sites, 3, 2)).astype(np.float32)
+        svc.submit_stencil(u, jnp.asarray(vv[..., 0] + 1j * vv[..., 1],
+                                          jnp.complex64))
+    svc.run_until_drained()
+    svc.pop_ready()
+
+    # the overlap schedule's three phases need a real 2-host mesh; the
+    # forced device count locks at first jax init, so (exactly like the
+    # stencil benchmark's identity rows) a subprocess runs the traced
+    # schedule and its span records merge into THIS trace via absorb()
+    from benchmarks.stencil import _subprocess_json
+    code = (f"L, tile, reps = {stencil_L}, {min(64, stencil_L**3)}, 2\n"
+            + _PHASES_SUBPROC)
+    phase_records, phase_err = _subprocess_json(code)
+    if phase_records:
+        tracer.absorb(phase_records, lane_offset=200)
+
+    names = {s.name for s in tracer.spans()}
+    lifecycle = {"admit", "seat", "dispatch", "request"}
+    phases = {"stencil.exchange", "stencil.interior", "stencil.boundary"}
+    jsonl_path = f"{trace_prefix}.jsonl"
+    chrome_path = f"{trace_prefix}.chrome.json"
+    n_records = tracer.to_jsonl(jsonl_path)
+    tracer.to_chrome_trace(chrome_path, metadata=provenance_block())
+    # tracing cost shows up in the replay wall of the identical Poisson
+    # schedule (busy_s can NOT see it: spans are recorded outside the timed
+    # dispatch region by design); at quick scale the delta is noise-level —
+    # which is the acceptance point
+    row = {
+        "name": "serve_traced",
+        "L": L, "mix_k": list(ks), "n_requests": n_requests, "slots": slots,
+        "n_stencil_requests": n_stencil, "stencil_hosts": 2,
+        "stencil_L": stencil_L,
+        "gflops_untraced": off_snap["sustained_gflops_wall"],
+        "gflops_traced": on_snap["sustained_gflops_wall"],
+        "wall_s_untraced": off_snap["wall_s"],
+        "wall_s_traced": on_snap["wall_s"],
+        "tracing_overhead_frac": round(
+            on_snap["wall_s"] / max(off_snap["wall_s"], 1e-9) - 1.0, 4),
+        "spans_recorded": n_records,
+        "spans_dropped": tracer.dropped,
+        "lifecycle_covered": lifecycle <= names,
+        "phases_covered": phases <= names,
+        "span_names": sorted(names),
+        "attribution_rows": len(attribution_report(tracer.spans())),
+        "trace_jsonl": jsonl_path,
+        "trace_chrome": chrome_path,
+    }
+    if phase_err:
+        row["phase_subprocess_error"] = phase_err
+    return row
 
 
 def dispatch_overhead(
@@ -396,6 +526,7 @@ def run(quick: bool = True, seed: int = 0, use_autotune: bool = False) -> list[d
         continuous_comparison(min(Ls), n_requests=16 if quick else 48, seed=seed),
         dispatch_overhead(Ls, n_requests=12 if quick else 32, seed=seed),
         bf16_plan_comparison(max(Ls), seed),
+        traced_serving(min(Ls), n_requests=12 if quick else 32, seed=seed),
     ]
     return rows
 
@@ -434,6 +565,12 @@ def main(argv: list[str] | None = None) -> int:
             r["bf16_fewer_bytes"] and r["within_1e-2"] and r["bf16_verified"]
         ):
             print("FAIL: bf16-storage plan acceptance", file=sys.stderr)
+            ok = False
+        if r["name"] == "serve_traced" and not (
+            r["lifecycle_covered"] and r["phases_covered"]
+        ):
+            print("FAIL: trace did not cover the request lifecycle and the "
+                  "stencil exchange/interior/boundary phases", file=sys.stderr)
             ok = False
     return 0 if ok else 1
 

@@ -25,6 +25,15 @@ row families land in ``BENCH_su3.json`` under ``stencil``:
                   dispatches serialize, so efficiency ~<= 1 here; the
                   schedule claim on CPU is dispatch-ORDER only — see
                   ROADMAP for the TPU validation item.
+  attribution     ``stencil_phase_attribution_h{hosts}_d{depth}`` — the
+                  traced schedule's per-phase seconds (exchange / interior
+                  / boundary spans, ``repro.obs``) joined against
+                  ``predict_stencil`` at the SAME (overlap, depth, hosts)
+                  config: measured-vs-modeled delta and which term
+                  dominates.  The identity row additionally carries
+                  ``overlap_efficiency_measured = sum_phases /
+                  t_overlap_untraced`` — the phase-accounted form of the
+                  efficiency the untraced walls can only infer.
   depth-2 rows    ``stencil_depth2_identity_h{hosts}`` — a forced-device
                   subprocess builds 1/2/4-host meshes and checks the
                   communication-avoiding depth-2 step (ONE widened exchange,
@@ -75,10 +84,17 @@ def best(step):
         t = min(t, time.perf_counter() - t0)
     return t
 t_serial, t_overlap = best(serial), best(overlap)
+# traced passes AFTER the untraced timings: per-phase spans synchronize at
+# phase boundaries (repro.obs), so they measure the phases, not the hiding
+from repro.obs import Tracer
+plan.tracer = Tracer(enabled=True, capacity=4096)
+for _ in range(reps):
+    overlap(u, v)
 print(json.dumps({
     "identical": identical, "verified": bool(plan.verify_stencil(r_o)),
     "t_serial_s": t_serial, "t_overlap_s": t_overlap,
     "halo": plan.stencil_halo().as_dict(),
+    "spans": [s.as_dict() for s in plan.tracer.spans()],
 }))
 """
 
@@ -206,7 +222,7 @@ def _overlap_identity_row(L: int, tile: int, reps: int) -> dict:
     if payload is None:
         return {"name": "stencil_overlap_identity", "error": err}
     eff = payload["t_serial_s"] / payload["t_overlap_s"]
-    return {
+    row = {
         "name": "stencil_overlap_identity",
         "hosts": 2, "L": L, "tile": tile,
         "identical": payload["identical"],
@@ -219,6 +235,59 @@ def _overlap_identity_row(L: int, tile: int, reps: int) -> dict:
         "dispatch_order_only": True,
         **payload["halo"],
     }
+    # phase-level accounting (repro.obs): traced spans give the per-phase
+    # seconds; dividing their sum by the UNTRACED overlapped wall measures
+    # what the schedule actually hides (traced walls can't — each phase
+    # blocks so it can be timed at all)
+    from repro.obs.attribution import (
+        overlap_efficiency, overlap_efficiency_from_spans,
+    )
+    acct = overlap_efficiency_from_spans(payload.get("spans", []))
+    if acct:
+        row.update(
+            phase_us={k: round(v * 1e6, 1) for k, v in acct["phase_s"].items()},
+            sum_phases_us=round(acct["sum_phases_s"] * 1e6, 1),
+            overlap_efficiency_measured=round(overlap_efficiency(
+                acct["sum_phases_s"], payload["t_overlap_s"]), 3),
+            dominant_phase=(max(acct["phase_s"], key=acct["phase_s"].get)
+                            if acct["phase_s"] else None),
+        )
+    row["_spans"] = payload.get("spans", [])  # popped by run(); not a column
+    return row
+
+
+def _phase_attribution_rows(payload_spans: list[dict]) -> list[dict]:
+    """Model-vs-measured rows for the traced schedule configs: the paper's
+    attribution method (which roofline term binds, and by how much the
+    model misses) applied to the stencil overlap schedule."""
+    from repro.obs.attribution import attribution_report
+
+    rows = []
+    for arow in attribution_report(payload_spans):
+        if arow["workload"] != "stencil_schedule":
+            continue
+        sched = f"h{arow['hosts']}_d{arow['depth']}"
+        rows.append({
+            "name": f"stencil_phase_attribution_{sched}",
+            "L": arow["L"], "tile": arow["tile"], "hosts": arow["hosts"],
+            "depth": arow["depth"], "overlap": arow["overlap"],
+            "n_steps": arow["n_spans"],
+            "measured_us_per_app": round(arow["measured_unit_s"] * 1e6, 1),
+            "predicted_us_per_app": (
+                round(arow["predicted_s"] * 1e6, 1)
+                if arow["predicted_s"] is not None else None),
+            "delta_frac": (round(arow["delta_frac"], 3)
+                           if arow["delta_frac"] is not None else None),
+            "model_dominant": arow["model_dominant"],
+            "measured_dominant_phase": arow["measured_dominant_phase"],
+            "phase_us": {k: round(v * 1e6, 1)
+                         for k, v in arow["phase_s"].items()},
+            # the model is the TPU-v5e roofline; CPU-measured deltas are
+            # large and expected — the row's value is the phase breakdown
+            # and WHICH term dominates, not the absolute seconds
+            "model_hw": "tpu_v5e",
+        })
+    return rows
 
 
 def _depth2_identity_rows(L: int, tile: int, reps: int) -> list[dict]:
@@ -258,7 +327,10 @@ def run(quick: bool = True) -> list[dict]:
                     L, dtype, accum, overlap, tile, reps,
                     compression=compression))
     rows.extend(_roofline_rows(L, "float32"))
-    rows.append(_overlap_identity_row(L, tile=min(64, L**3), reps=reps))
+    overlap_row = _overlap_identity_row(L, tile=min(64, L**3), reps=reps)
+    spans = overlap_row.pop("_spans", [])
+    rows.append(overlap_row)
+    rows.extend(_phase_attribution_rows(spans))
     rows.extend(_depth2_identity_rows(
         2 if quick else 4, tile=min(16, L**3), reps=reps))
     return rows

@@ -46,6 +46,15 @@ deterministic model quantity, so there is no retry either):
 A silent fallback to the 18-real layout fails all three ways: the row
 keeps the full bytes/site, loses its ``compression`` tag, or vanishes.
 ``--no-compression-gate`` skips this block (pre-compression artifacts).
+
+The gate also verifies run PROVENANCE (``repro.obs.provenance_block``):
+a harness artifact without a provenance block fails, as does a diff whose
+jax/jaxlib/backend/device identity changed between baseline and current
+without a re-baseline note — environment swaps masquerading as perf wins
+(or losses) are the oldest benchmark lie.  Notes come from
+``REPRO_BENCH_REBASELINE="why"`` at generation time or
+``--rebaseline-note "why"`` here; ``--no-provenance-gate`` skips the block
+(pre-provenance artifacts).
 """
 from __future__ import annotations
 
@@ -56,6 +65,13 @@ import statistics
 import subprocess
 import sys
 import tempfile
+
+try:
+    from repro.obs.provenance import provenance_problems
+except ImportError:  # direct invocation without PYTHONPATH=src
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+    from repro.obs.provenance import provenance_problems
 
 DEFAULT_ARTIFACT = "BENCH_su3.json"
 RETRY_RUNS = 2  # re-measurements per flagged gate (median of 1 + RETRY_RUNS)
@@ -373,6 +389,13 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--no-compression-gate", action="store_true",
                     help="skip the compressed-gauge/depth-2 row checks "
                          "(pre-compression artifacts)")
+    ap.add_argument("--no-provenance-gate", action="store_true",
+                    help="skip the provenance-block checks "
+                         "(pre-provenance artifacts)")
+    ap.add_argument("--rebaseline-note", default="",
+                    help="acknowledge a changed jax/backend environment "
+                         "(required when the identity keys drift between "
+                         "baseline and current)")
     args = ap.parse_args(argv)
 
     try:
@@ -389,18 +412,34 @@ def main(argv: list[str] | None = None) -> int:
     # without them have nothing to prove.
     tables = current.get("tables", {})
     gate_applies = "table2_variants" in tables or "stencil" in tables
+    baseline = load_baseline(args.baseline)
+
     problems: list[str] = []
+    if not args.no_provenance_gate and gate_applies:
+        prov_problems = provenance_problems(
+            current, baseline, rebaseline_note=args.rebaseline_note)
+        if prov_problems:
+            for p in prov_problems:
+                print(f"  FAIL provenance: {p}", file=sys.stderr)
+            problems.extend(prov_problems)
+        else:
+            prov = current.get("provenance", {})
+            print(f"bench_diff: provenance ok — jax {prov.get('jax_version')}"
+                  f"/{prov.get('jaxlib_version')} on {prov.get('backend')}"
+                  f" ({prov.get('device_kind')}), git "
+                  f"{str(prov.get('git_sha'))[:12]}, autotune schema "
+                  f"v{prov.get('autotune_cache_schema')}")
     if not args.no_compression_gate and gate_applies:
         print("bench_diff: compression / depth-2 gate (current artifact):")
-        problems = compression_gate(current)
-        for p in problems:
+        comp_problems = compression_gate(current)
+        for p in comp_problems:
             print(f"  FAIL {p}", file=sys.stderr)
+        problems.extend(comp_problems)
 
-    baseline = load_baseline(args.baseline)
     if baseline is None:
         print(f"bench_diff: no baseline at {args.baseline!r}; nothing to diff")
         if problems:
-            print(f"bench_diff: compression gate failed "
+            print(f"bench_diff: artifact gate failed "
                   f"({len(problems)} problem(s))", file=sys.stderr)
             return 1
         return 0

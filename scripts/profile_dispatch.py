@@ -17,6 +17,12 @@ trajectory is gated like every other row:
       dispatch — the dispatch-count collapse the slot-table serving mode
       banks every iteration.
 
+All timing runs through the ``repro.obs`` tracer — every rep is a
+``profile.dispatch`` span on the same monotonic clock and span schema the
+serving stack emits, and the table rows are derived from those spans
+(``--trace PATH`` exports them as flat JSONL for ``scripts/trace_report.py``
+or, with a ``.json`` suffix, as Chrome trace-event JSON).
+
 Usage (wired into scripts/smoke.sh quick mode):
 
     PYTHONPATH=src python scripts/profile_dispatch.py --quick --json BENCH_su3.json
@@ -26,8 +32,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import statistics
 import sys
-import time
 
 import numpy as np
 
@@ -35,19 +41,24 @@ import jax.numpy as jnp
 
 from repro.core.su3.engine import EngineConfig, SU3Engine
 from repro.core.su3.layouts import Layout
+from repro.obs import Tracer
 
 SLOTS = 4
 FUSED_K = 4
 TILE = 128
 
+# One clock, one span schema: every timed rep is a span on this tracer, and
+# the table rows below are reductions over those spans.
+TRACER = Tracer(enabled=True, capacity=4096)
 
-def _median_wall(fn, reps: int) -> float:
-    times = []
+
+def _median_wall(fn, reps: int, label: str, **attrs) -> float:
+    spans = []
     for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+        with TRACER.span("profile.dispatch", label=label, **attrs) as sp:
+            fn()
+        spans.append(sp)
+    return float(statistics.median(s.dur_s for s in spans))
 
 
 def dispatch_overhead_row(L: int, k: int = FUSED_K, reps: int = 5) -> dict:
@@ -99,8 +110,8 @@ def megakernel_amortization_row(L: int, slots: int = SLOTS, reps: int = 5) -> di
 
     per_chain()  # warm both compiled shapes before timing
     megakernel()
-    chain_s = _median_wall(per_chain, reps)
-    mega_s = _median_wall(megakernel, reps)
+    chain_s = _median_wall(per_chain, reps, "per_chain", L=L, slots=slots)
+    mega_s = _median_wall(megakernel, reps, "megakernel", L=L, slots=slots)
     useful_flops = 864.0 * (L**4) * slots
     return {
         "name": f"megakernel_amortization_L{L}",
@@ -128,12 +139,18 @@ def run(quick: bool = True) -> list[dict]:
 
 def merge_into_artifact(rows: list[dict], path: str) -> None:
     """Land the ``dispatch`` table inside the benchmark artifact (creating a
-    minimal payload when the harness has not run yet)."""
+    minimal payload when the harness has not run yet).  The provenance block
+    is stamped if absent so a standalone profiler artifact still passes the
+    bench_diff provenance gate."""
     payload = {"schema": "su3-bench-rows/v1", "tables": {}}
     if os.path.exists(path):
         with open(path) as f:
             payload = json.load(f)
     payload.setdefault("tables", {})["dispatch"] = rows
+    if "provenance" not in payload:
+        from repro.obs import provenance_block
+
+        payload["provenance"] = provenance_block()
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, default=str)
 
@@ -143,6 +160,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", default="",
                     help="merge rows into this BENCH_su3.json artifact")
+    ap.add_argument("--trace", default="",
+                    help="export the profiling spans (.jsonl flat / "
+                         ".json Chrome trace-event)")
     args = ap.parse_args(argv)
     rows = run(quick=args.quick)
     for r in rows:
@@ -150,6 +170,12 @@ def main(argv: list[str] | None = None) -> int:
     if args.json:
         merge_into_artifact(rows, args.json)
         print(f"# merged dispatch table into {args.json}", file=sys.stderr)
+    if args.trace:
+        if args.trace.endswith(".jsonl"):
+            n = TRACER.to_jsonl(args.trace)
+        else:
+            n = TRACER.to_chrome_trace(args.trace)
+        print(f"# wrote {n} spans to {args.trace}", file=sys.stderr)
     bad = [r for r in rows if "verified" in r and not r["verified"]]
     return 1 if bad else 0
 

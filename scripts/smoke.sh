@@ -60,6 +60,11 @@ if [[ "$RUN_BENCH" == 1 ]]; then
   python -m benchmarks.run --quick --json BENCH_su3.json
   echo "== dispatch profiler (dispatch table -> BENCH_su3.json) =="
   python scripts/profile_dispatch.py --quick --json BENCH_su3.json
+  echo "== trace report (serve_trace from the traced serve row) =="
+  # benchmarks.run's serve section exported serve_trace.jsonl/.chrome.json;
+  # the report must render (span tree + attribution) or the obs layer broke
+  python scripts/trace_report.py serve_trace.jsonl > /dev/null
+  python scripts/trace_report.py serve_trace.chrome.json | tail -8
   echo "== bench diff vs last committed artifact (>15% GFLOPS drop fails) =="
   # BENCH_DIFF_THRESHOLD loosens the gate on noisy shared dev hosts; flagged
   # rows are re-measured (median of 3) by scripts/bench_diff.py before the

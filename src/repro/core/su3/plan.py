@@ -81,6 +81,7 @@ from repro.core.su3.layouts import Layout, LatticeShape, LayoutCodec
 from repro.distributed import sharding as dist_sharding
 from repro.kernels import ops as _kops  # noqa: F401  (registers the Pallas kernel)
 from repro.launch.mesh import MeshSpec
+from repro.obs.tracer import NULL_TRACER
 
 PLACEMENTS = ("sharded", "host_scatter", "replicated")
 
@@ -527,6 +528,13 @@ class ExecutionPlan:
         ] = {}
         self._stencil_tables: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
         self._stencil_parts: dict[str, Any] | None = None
+        # Phase tracer for the stencil schedule (repro.obs).  Disabled by
+        # default: the untraced closures are byte-identical to pre-obs code.
+        # When enabled, each schedule phase (exchange / interior / boundary)
+        # blocks at its end so the span measures that phase — tracing
+        # synchronizes the schedule (the only way to time a phase); the real
+        # overlapped wall comes from an untraced run of the same step.
+        self.tracer = NULL_TRACER
 
     @classmethod
     def build(
@@ -832,42 +840,87 @@ class ExecutionPlan:
         self._stencil_parts = parts
         return parts
 
+    def _stencil_trace_attrs(self, overlap: bool, depth: int) -> dict[str, Any]:
+        """Attrs every ``stencil.step`` span carries — the join key the
+        attribution report matches against ``autotune.predict_stencil``."""
+        from repro.kernels.su3_stencil import STENCIL_FLOPS_PER_SITE
+
+        cfg = self.cfg
+        return {
+            "L": cfg.L, "tile": cfg.tile, "dtype": cfg.dtype,
+            "compression": cfg.compression, "hosts": self.n_hosts,
+            "overlap": bool(overlap), "depth": depth,
+            "flops": float(STENCIL_FLOPS_PER_SITE) * cfg.shape.n_sites * depth,
+        }
+
     def _build_stencil_step(
         self, overlap: bool, depth: int = 1
     ) -> Callable[[jax.Array, jax.Array], jax.Array]:
+        plan = self  # closures read plan.tracer at CALL time (set post-build)
         if not overlap:
             # ONE body for the reference: the same raw function the serving
             # layer vmaps, so the pinned bit-identity oracle and the served
             # stencil can never silently diverge
             ref = jax.jit(self.raw_stencil_reference(), out_shardings=self.vec_sharding)
-            if depth == 1:
-                return ref
+            attrs = self._stencil_trace_attrs(False, depth)
 
-            def double_ref(u_phys: jax.Array, v_p: jax.Array) -> jax.Array:
-                return ref(u_phys, ref(u_phys, v_p))
+            def serial(u_phys: jax.Array, v_p: jax.Array) -> jax.Array:
+                tr = plan.tracer
+                if not tr.enabled:
+                    if depth == 1:
+                        return ref(u_phys, v_p)
+                    return ref(u_phys, ref(u_phys, v_p))
+                with tr.span("stencil.step", **attrs):
+                    out = ref(u_phys, v_p)
+                    if depth == 2:
+                        out = ref(u_phys, out)
+                    out = jax.block_until_ready(out)
+                return out
 
-            return double_ref
+            return serial
 
         parts = self._stencil_overlap_parts()
         interior_j = parts["interior_j"]
+        attrs = self._stencil_trace_attrs(True, depth)
         if parts["n_boundary"] == 0:
             # unsharded lattice: local wrap IS the periodic wrap, and there
             # is no exchange to avoid — depth just composes the interior pass
-            if depth == 1:
-                return interior_j
 
-            def double_interior(u_phys: jax.Array, v_p: jax.Array) -> jax.Array:
-                return interior_j(u_phys, interior_j(u_phys, v_p))
+            def local_only(u_phys: jax.Array, v_p: jax.Array) -> jax.Array:
+                tr = plan.tracer
+                if not tr.enabled:
+                    if depth == 1:
+                        return interior_j(u_phys, v_p)
+                    return interior_j(u_phys, interior_j(u_phys, v_p))
+                with tr.span("stencil.step", **attrs):
+                    for _ in range(depth):
+                        with tr.span("stencil.interior"):
+                            v_p = jax.block_until_ready(interior_j(u_phys, v_p))
+                return v_p
 
-            return double_interior
+            return local_only
 
         exchange_j, boundary_j = parts["exchange_j"], parts["boundary_j"]
         if depth == 1:
 
             def overlapped(u_phys: jax.Array, v_p: jax.Array) -> jax.Array:
-                ghosts = exchange_j(v_p)  # issued FIRST: halo transfer in flight
-                out_i = interior_j(u_phys, v_p)  # overlaps the exchange
-                return boundary_j(u_phys, v_p, *ghosts, out_i)
+                tr = plan.tracer
+                if not tr.enabled:
+                    ghosts = exchange_j(v_p)  # issued FIRST: transfer in flight
+                    out_i = interior_j(u_phys, v_p)  # overlaps the exchange
+                    return boundary_j(u_phys, v_p, *ghosts, out_i)
+                # traced: each phase blocks so its span is a measurement —
+                # phase times come from here, the hidden-vs-exposed wall
+                # from an untraced run (see benchmarks/stencil.py)
+                with tr.span("stencil.step", **attrs):
+                    with tr.span("stencil.exchange"):
+                        ghosts = jax.block_until_ready(exchange_j(v_p))
+                    with tr.span("stencil.interior"):
+                        out_i = jax.block_until_ready(interior_j(u_phys, v_p))
+                    with tr.span("stencil.boundary"):
+                        out = jax.block_until_ready(
+                            boundary_j(u_phys, v_p, *ghosts, out_i))
+                return out
 
             return overlapped
 
@@ -931,13 +984,35 @@ class ExecutionPlan:
 
         ring_j = jax.jit(ring_fn)
 
+        plan = self
+        attrs = self._stencil_trace_attrs(True, 2)
+
         def overlapped2(u_phys: jax.Array, v_p: jax.Array) -> jax.Array:
-            g_fwd, g_bwd, ring_vnbr = exchange2_j(v_p)  # ONE exchange, 2 apps
-            out_1i = interior_j(u_phys, v_p)  # overlaps the exchange
-            w = boundary_j(u_phys, v_p, g_fwd, g_bwd, out_1i)
-            ring_w = ring_j(u_phys, ring_vnbr)  # recompute, don't re-exchange
-            out_2i = interior_j(u_phys, w)
-            return boundary_j(u_phys, w, *ring_w, out_2i)
+            tr = plan.tracer
+            if not tr.enabled:
+                g_fwd, g_bwd, ring_vnbr = exchange2_j(v_p)  # ONE exchange, 2 apps
+                out_1i = interior_j(u_phys, v_p)  # overlaps the exchange
+                w = boundary_j(u_phys, v_p, g_fwd, g_bwd, out_1i)
+                ring_w = ring_j(u_phys, ring_vnbr)  # recompute, don't re-exchange
+                out_2i = interior_j(u_phys, w)
+                return boundary_j(u_phys, w, *ring_w, out_2i)
+            with tr.span("stencil.step", **attrs):
+                with tr.span("stencil.exchange"):
+                    g_fwd, g_bwd, ring_vnbr = jax.block_until_ready(
+                        exchange2_j(v_p))
+                with tr.span("stencil.interior"):
+                    out_1i = jax.block_until_ready(interior_j(u_phys, v_p))
+                with tr.span("stencil.boundary"):
+                    w = jax.block_until_ready(
+                        boundary_j(u_phys, v_p, g_fwd, g_bwd, out_1i))
+                with tr.span("stencil.ring"):
+                    ring_w = jax.block_until_ready(ring_j(u_phys, ring_vnbr))
+                with tr.span("stencil.interior"):
+                    out_2i = jax.block_until_ready(interior_j(u_phys, w))
+                with tr.span("stencil.boundary"):
+                    out = jax.block_until_ready(
+                        boundary_j(u_phys, w, *ring_w, out_2i))
+            return out
 
         return overlapped2
 

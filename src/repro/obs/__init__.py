@@ -1,0 +1,52 @@
+"""repro.obs — spans / counters / histograms observability core.
+
+The paper's method is attribution: phase-level measurement joined against
+a roofline model (PIUMA turned out issue-bound, not bandwidth-bound —
+something no best-iteration GFLOPS number could show).  This package is
+that layer for the repro:
+
+  Tracer / Span        nested spans on a monotonic clock, bounded
+                       flight-recorder ring buffer, JSONL + Chrome
+                       trace-event export.  ``NULL_TRACER`` is the shared
+                       disabled instance — every hot-path hook is a single
+                       ``if tracer.enabled`` branch, so the untraced
+                       serving path allocates nothing.
+  Reservoir / RunningStat
+                       bounded streaming statistics (exact below capacity)
+                       backing ServiceMetrics' latency/occupancy/queue
+                       accounting in long-running services.
+  provenance_block     the run-identity stamp (git sha, jax/jaxlib,
+                       backend, device kind, XLA flags, autotune cache
+                       schema) written into BENCH_su3.json and gated by
+                       scripts/bench_diff.py.
+  attribution_report   joins measured dispatch/phase spans against
+                       predict_pipeline / predict_stencil modeled terms
+                       per (tile, fused_k, compression, depth) config and
+                       emits model-vs-measured deltas.
+"""
+from repro.obs.attribution import (
+    attribution_report,
+    overlap_efficiency_from_spans,
+    render_attribution,
+)
+from repro.obs.provenance import (
+    REQUIRED_PROVENANCE_KEYS,
+    provenance_block,
+    provenance_problems,
+)
+from repro.obs.stats import Reservoir, RunningStat
+from repro.obs.tracer import NULL_TRACER, Span, Tracer
+
+__all__ = [
+    "NULL_TRACER",
+    "REQUIRED_PROVENANCE_KEYS",
+    "Reservoir",
+    "RunningStat",
+    "Span",
+    "Tracer",
+    "attribution_report",
+    "overlap_efficiency_from_spans",
+    "provenance_block",
+    "provenance_problems",
+    "render_attribution",
+]

@@ -1,0 +1,142 @@
+"""Run provenance: the identity stamp on every BENCH_su3.json row set.
+
+Bench numbers are only comparable when the environment that produced them
+is pinned next to them.  ``provenance_block()`` captures the run identity
+— git sha, jax/jaxlib versions, backend, device kind, XLA flags, autotune
+cache schema — and ``benchmarks.run`` / ``scripts/profile_dispatch.py``
+stamp it into the artifact.  ``scripts/bench_diff.py`` then refuses to
+diff artifacts with a missing/incomplete block, and refuses a changed
+jax/backend pair unless the current block carries a re-baseline note
+(``REPRO_BENCH_REBASELINE="why"`` at generation time, or
+``--rebaseline-note`` on the diff).
+"""
+from __future__ import annotations
+
+import os
+import platform as _platform
+import subprocess
+import sys
+import time
+from typing import Any
+
+# The keys bench_diff requires; absence of any one fails the gate.
+REQUIRED_PROVENANCE_KEYS = (
+    "git_sha",
+    "jax_version",
+    "jaxlib_version",
+    "backend",
+    "device_kind",
+    "xla_flags",
+    "autotune_cache_schema",
+)
+
+# Keys whose change across baseline->current demands a re-baseline note.
+ENV_IDENTITY_KEYS = ("jax_version", "jaxlib_version", "backend", "device_kind")
+
+REBASELINE_ENV = "REPRO_BENCH_REBASELINE"
+
+
+def _git_sha(cwd: str | None = None) -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=cwd, timeout=10,
+        )
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def _git_dirty(cwd: str | None = None) -> bool | None:
+    try:
+        out = subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True, text=True,
+            cwd=cwd, timeout=10,
+        )
+        if out.returncode == 0:
+            return bool(out.stdout.strip())
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return None
+
+
+def provenance_block(cwd: str | None = None) -> dict[str, Any]:
+    """Capture this process's run identity. Never raises.
+
+    jax is imported lazily so trace/report tooling can read artifacts on
+    machines without the accelerator stack; missing pieces degrade to
+    "unknown" rather than omitting the key (bench_diff checks presence).
+    """
+    block: dict[str, Any] = {
+        "git_sha": _git_sha(cwd),
+        "git_dirty": _git_dirty(cwd),
+        "python_version": sys.version.split()[0],
+        "platform": _platform.platform(),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "generated_unix_s": time.time(),
+    }
+    try:
+        import jax
+        import jaxlib
+
+        block["jax_version"] = jax.__version__
+        block["jaxlib_version"] = jaxlib.__version__
+        block["backend"] = jax.default_backend()
+        devices = jax.devices()
+        block["device_kind"] = devices[0].device_kind if devices else "none"
+        block["device_count"] = len(devices)
+    except Exception as exc:  # pragma: no cover - no-jax environments
+        block.update({
+            "jax_version": "unknown", "jaxlib_version": "unknown",
+            "backend": "unknown", "device_kind": "unknown",
+            "device_count": 0, "provenance_error": repr(exc),
+        })
+    try:
+        from repro.core import autotune
+
+        block["autotune_cache_schema"] = autotune.SCHEMA_VERSION
+    except Exception:  # pragma: no cover
+        block["autotune_cache_schema"] = "unknown"
+    note = os.environ.get(REBASELINE_ENV, "").strip()
+    if note:
+        block["rebaseline"] = note
+    return block
+
+
+def provenance_problems(current: dict[str, Any],
+                        baseline: dict[str, Any] | None = None,
+                        rebaseline_note: str = "") -> list[str]:
+    """Gate logic shared by bench_diff and tests.
+
+    Returns human-readable problems: missing block / missing required keys
+    in ``current``, and — when a ``baseline`` block is available — any
+    ENV_IDENTITY_KEYS drift not covered by a re-baseline note (either
+    stamped into the current block or passed on the command line).
+    """
+    problems: list[str] = []
+    block = current.get("provenance")
+    if not isinstance(block, dict):
+        return ["current artifact has no provenance block "
+                "(regenerate with benchmarks.run)"]
+    missing = [k for k in REQUIRED_PROVENANCE_KEYS if k not in block]
+    if missing:
+        problems.append(
+            "provenance block missing required keys: " + ", ".join(missing))
+    base_block = (baseline or {}).get("provenance")
+    if isinstance(base_block, dict):
+        changed = [
+            f"{k}: {base_block.get(k)!r} -> {block.get(k)!r}"
+            for k in ENV_IDENTITY_KEYS
+            if k in base_block and base_block.get(k) != block.get(k)
+        ]
+        note = (rebaseline_note or "").strip() or str(
+            block.get("rebaseline", "")).strip()
+        if changed and not note:
+            problems.append(
+                "environment identity changed without a re-baseline note ("
+                + "; ".join(changed)
+                + f") — set {REBASELINE_ENV} when regenerating or pass "
+                  "--rebaseline-note to bench_diff")
+    return problems

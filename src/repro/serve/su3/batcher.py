@@ -72,6 +72,8 @@ class ServeRequest:
     k: int
     arrival_s: float = 0.0  # perf_counter timestamp at admission
     kind: str = "multiply"  # "multiply" | "stencil"
+    seated_s: float = 0.0  # perf_counter timestamp when seated in a slot/batch
+    # (0.0 until seated; the request-lifecycle span derives queue_wait from it)
 
     @property
     def n_sites(self) -> int:

@@ -17,15 +17,25 @@ traffic benchmark report identical quantities:
 
 Everything exports as one flat dict (``snapshot()``) so benchmark rows,
 logs, and tests consume the same schema.
+
+Memory is bounded for long-running services: latencies feed a fixed-size
+:class:`repro.obs.Reservoir` (exact percentiles below capacity — the pinned
+small-sample tests see identical numbers — uniform subsample beyond it, with
+count/mean always exact), and occupancy/queue-depth series keep only running
+count/sum/max (:class:`repro.obs.RunningStat`) since only their mean/max are
+ever exported.  No per-sample list grows with traffic.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 
-import numpy as np
+from repro.obs.stats import Reservoir, RunningStat
 
 FLOPS_PER_SITE = 864  # 4 links x 3x3x3 complex MACs x 8 real flops (paper §3.1)
+
+
+LATENCY_RESERVOIR_CAPACITY = 4096  # exact percentiles below this many samples
 
 
 def request_flops(n_sites: int, k: int) -> float:
@@ -46,9 +56,10 @@ class ServiceMetrics:
     live_slots: int = 0
     busy_s: float = 0.0
     useful_flops: float = 0.0
-    latencies_s: list = dataclasses.field(default_factory=list)
-    occupancies: list = dataclasses.field(default_factory=list)
-    queue_depths: list = dataclasses.field(default_factory=list)
+    latencies_s: Reservoir = dataclasses.field(
+        default_factory=lambda: Reservoir(LATENCY_RESERVOIR_CAPACITY))
+    occupancies: RunningStat = dataclasses.field(default_factory=RunningStat)
+    queue_depths: RunningStat = dataclasses.field(default_factory=RunningStat)
     compiles: int = 0  # cold (first-shape) dispatches, charged to busy_s too
     midchain_admits: int = 0  # continuous mode: requests seated into an
     # already-running chain (the admissions batch-per-step cannot make)
@@ -66,7 +77,7 @@ class ServiceMetrics:
 
     def record_admit(self, queue_depth: int) -> None:
         self.admitted += 1
-        self.queue_depths.append(queue_depth)
+        self.queue_depths.add(queue_depth)
 
     def record_reject(self) -> None:
         self.rejected += 1
@@ -87,7 +98,7 @@ class ServiceMetrics:
         self.padded_slots += padded - live
         self.busy_s += step_s
         self.useful_flops += flops
-        self.occupancies.append(live / padded if padded else 0.0)
+        self.occupancies.add(live / padded if padded else 0.0)
         self.host_dispatches[host] = self.host_dispatches.get(host, 0) + 1
         if cold:
             self.compiles += 1
@@ -103,15 +114,15 @@ class ServiceMetrics:
 
     def record_completion(self, latency_s: float) -> None:
         self.completed += 1
-        self.latencies_s.append(latency_s)
+        self.latencies_s.add(latency_s)
 
     def record_queue_depth(self, depth: int) -> None:
-        self.queue_depths.append(depth)
+        self.queue_depths.add(depth)
 
     # -- export --------------------------------------------------------------
 
     def _pct(self, q: float) -> float:
-        return float(np.percentile(self.latencies_s, q)) if self.latencies_s else 0.0
+        return self.latencies_s.percentile(q)
 
     def snapshot(self) -> dict:
         wall = time.perf_counter() - self.started_s
@@ -125,18 +136,14 @@ class ServiceMetrics:
             "latency_p50_ms": round(self._pct(50) * 1e3, 3),
             "latency_p95_ms": round(self._pct(95) * 1e3, 3),
             "latency_p99_ms": round(self._pct(99) * 1e3, 3),
-            "latency_mean_ms": round(
-                float(np.mean(self.latencies_s)) * 1e3, 3
-            ) if self.latencies_s else 0.0,
+            "latency_mean_ms": round(self.latencies_s.mean() * 1e3, 3),
             "sustained_gflops_busy": round(
                 self.useful_flops / self.busy_s / 1e9, 3
             ) if self.busy_s else 0.0,
             "sustained_gflops_wall": round(
                 self.useful_flops / wall / 1e9, 3
             ) if wall else 0.0,
-            "mean_batch_occupancy": round(
-                float(np.mean(self.occupancies)), 3
-            ) if self.occupancies else 0.0,
+            "mean_batch_occupancy": round(self.occupancies.mean(), 3),
             "mean_live_batch": round(
                 self.live_slots / self.dispatches, 3
             ) if self.dispatches else 0.0,
@@ -149,10 +156,8 @@ class ServiceMetrics:
                 self.dispatches / self.iterations, 3
             ) if self.iterations else 0.0,
             "host_dispatches": {str(h): n for h, n in sorted(self.host_dispatches.items())},
-            "queue_depth_max": max(self.queue_depths) if self.queue_depths else 0,
-            "queue_depth_mean": round(
-                float(np.mean(self.queue_depths)), 3
-            ) if self.queue_depths else 0.0,
+            "queue_depth_max": int(self.queue_depths.max_or(0)),
+            "queue_depth_mean": round(self.queue_depths.mean(), 3),
             "busy_s": round(self.busy_s, 4),
             "wall_s": round(wall, 4),
         }

@@ -74,6 +74,7 @@ from repro.core.su3.layouts import Layout
 from repro.core.su3.plan import BatchedLatticeRunner, EngineConfig
 from repro.kernels.su3_stencil import STENCIL_FLOPS_PER_SITE
 from repro.launch.mesh import MeshSpec
+from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.serve.su3.batcher import (
     BatcherConfig,
     DynamicBatcher,
@@ -85,6 +86,17 @@ from repro.serve.su3.batcher import (
 from repro.serve.su3.metrics import ServiceMetrics, request_flops
 
 DEFAULT_TILE = 128  # small enough that every L >= 2 bucket is a few tiles
+
+# Chrome-trace lane assignment: dispatch spans ride the host's lane so one
+# timeline row per host shows the dispatch cadence; request-lifecycle spans
+# spread over a block of per-request lanes so overlapping requests don't
+# fake nesting in the viewer.
+_REQUEST_LANE_BASE = 100
+_REQUEST_LANES = 32
+
+
+def _request_lane(req_id: int) -> int:
+    return _REQUEST_LANE_BASE + req_id % _REQUEST_LANES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -267,10 +279,17 @@ class SU3Service:
         mesh: optional explicit mesh every runner plans against (single-host
             only; mutually exclusive with ``cfg.hosts > 1``, where each
             host's runners plan on their own submesh).
+        tracer: optional :class:`repro.obs.Tracer` recording the request
+            lifecycle (admit → queue wait → seat → dispatch → complete) and
+            per-dispatch spans.  Defaults to the shared disabled tracer —
+            every instrumentation site is one ``if tracer.enabled`` branch,
+            so untraced serving allocates nothing.
     """
 
-    def __init__(self, cfg: ServiceConfig | None = None, mesh: Any = None):
+    def __init__(self, cfg: ServiceConfig | None = None, mesh: Any = None,
+                 tracer: Tracer | None = None):
         self.cfg = cfg if cfg is not None else ServiceConfig()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         if self.cfg.hosts > 1 and mesh is not None:
             raise ValueError(
                 "pass EITHER an explicit mesh (single-host pool) OR "
@@ -432,6 +451,32 @@ class SU3Service:
         the jit cache keys on."""
         return (L, k, bsz + (-bsz) % runner.n_devices)
 
+    # -- tracing -------------------------------------------------------------
+
+    def _trace_dispatch(self, runner: BatchedLatticeRunner, host: int,
+                        kind: str, L: int, k: int, mode: str, t0: float,
+                        step_s: float, live: int, padded: int, flops: float,
+                        cold: bool) -> None:
+        """One retroactive dispatch span (the timed block already ran —
+        zero extra clock reads on the hot path).  Callers guard with
+        ``if self.tracer.enabled``."""
+        ecfg = runner.cfg
+        self.tracer.add_span(
+            "dispatch", t0, t0 + step_s, lane=host,
+            kind=kind, mode=mode, host=host, L=L, k=k,
+            tile=ecfg.tile, dtype=ecfg.dtype, compression=ecfg.compression,
+            live=live, padded=padded, flops=flops, cold=cold)
+
+    def _trace_request(self, req: ServeRequest, done_s: float, host: int,
+                       mode: str) -> None:
+        """Whole-lifecycle span for one completed request: admission →
+        completion, with the queue wait (admit → first seat) as an attr."""
+        seated = req.seated_s or req.arrival_s
+        self.tracer.add_span(
+            "request", req.arrival_s, done_s, lane=_request_lane(req.req_id),
+            req_id=req.req_id, kind=req.kind, L=req.L, k=req.k, host=host,
+            mode=mode, queue_wait_s=seated - req.arrival_s)
+
     # -- request intake ------------------------------------------------------
 
     @staticmethod
@@ -476,6 +521,11 @@ class SU3Service:
         self.router.record_load(host, request_flops(req.n_sites, req.k))
         self._next_id += 1
         self.metrics.record_admit(depth + 1)
+        if self.tracer.enabled:
+            self.tracer.event(
+                "admit", lane=_request_lane(req.req_id), req_id=req.req_id,
+                kind="multiply", L=L, k=req.k, host=host,
+                queue_depth=depth + 1)
         return req.req_id
 
     def submit_stencil(self, u: jax.Array, v: jax.Array) -> int | None:
@@ -511,6 +561,10 @@ class SU3Service:
         self.router.record_load(host, float(STENCIL_FLOPS_PER_SITE) * req.n_sites)
         self._next_id += 1
         self.metrics.record_admit(depth + 1)
+        if self.tracer.enabled:
+            self.tracer.event(
+                "admit", lane=_request_lane(req.req_id), req_id=req.req_id,
+                kind="stencil", L=L, k=1, host=host, queue_depth=depth + 1)
         return req.req_id
 
     # -- dispatch ------------------------------------------------------------
@@ -603,10 +657,18 @@ class SU3Service:
             flops=request_flops(n_sites, batch.k) * len(reqs), cold=cold,
             host=host,
         )
+        if self.tracer.enabled:
+            self._trace_dispatch(
+                runner, host, "multiply", batch.L, batch.k, "batch", t0,
+                step_s, live=len(reqs), padded=batch.padded_size,
+                flops=request_flops(n_sites, batch.k) * len(reqs), cold=cold)
         done_s = time.perf_counter()
         for i, r in enumerate(reqs):
             self._results[r.req_id] = c[i]
             self.metrics.record_completion(done_s - r.arrival_s)
+            if self.tracer.enabled:
+                r.seated_s = t0  # batch mode: seating IS the dispatch start
+                self._trace_request(r, done_s, host, "batch")
         self.metrics.record_queue_depth(self.queued())
         return len(reqs)
 
@@ -670,10 +732,19 @@ class SU3Service:
             flops=float(STENCIL_FLOPS_PER_SITE) * n_sites * len(reqs),
             cold=cold, host=host,
         )
+        if self.tracer.enabled:
+            self._trace_dispatch(
+                runner, host, "stencil", batch.L, 1, "batch", t0, step_s,
+                live=len(reqs), padded=dispatched,
+                flops=float(STENCIL_FLOPS_PER_SITE) * n_sites * len(reqs),
+                cold=cold)
         done_s = time.perf_counter()
         for i, r in enumerate(reqs):
             self._results[r.req_id] = plan.codec.unpack_vec(out_p[i], n_sites)
             self.metrics.record_completion(done_s - r.arrival_s)
+            if self.tracer.enabled:
+                r.seated_s = t0
+                self._trace_request(r, done_s, host, "batch")
         self.metrics.record_queue_depth(self.queued())
         return len(reqs)
 
@@ -705,6 +776,12 @@ class SU3Service:
             for req in admitted:
                 slot = chain.admit(req)
                 arrays.seat(slot, req.a, req.b)
+                if self.tracer.enabled:
+                    req.seated_s = time.perf_counter()
+                    self.tracer.event(
+                        "seat", lane=_request_lane(req.req_id),
+                        req_id=req.req_id, slot=slot, L=L, host=host,
+                        midchain=chain.midchain)
             if admitted and chain.midchain:
                 self.metrics.record_midchain_admits(len(admitted))
 
@@ -733,11 +810,18 @@ class SU3Service:
                 live=live, padded=slots, step_s=step_s,
                 flops=request_flops(n_sites, 1) * live, cold=cold, host=host,
             )
+            if self.tracer.enabled:
+                self._trace_dispatch(
+                    runner, host, "multiply", L, 1, "continuous", t0, step_s,
+                    live=live, padded=slots,
+                    flops=request_flops(n_sites, 1) * live, cold=cold)
             done_s = time.perf_counter()
             for slot, req in chain.advance():
                 self._results[req.req_id] = arrays.result(slot, n_sites)
                 arrays.clear(slot)
                 self.metrics.record_completion(done_s - req.arrival_s)
+                if self.tracer.enabled:
+                    self._trace_request(req, done_s, host, "continuous")
                 completed += 1
         self.metrics.record_queue_depth(self.queued())
         return completed
@@ -791,6 +875,12 @@ class SU3Service:
                 for req in admitted:
                     slot = table.admit(req)
                     arrays.seat(slot, req.a, req.b)
+                    if self.tracer.enabled:
+                        req.seated_s = time.perf_counter()
+                        self.tracer.event(
+                            "seat", lane=_request_lane(req.req_id),
+                            req_id=req.req_id, slot=slot, L=L, host=host,
+                            midchain=table.midchain)
                 if admitted and table.midchain:
                     self.metrics.record_midchain_admits(len(admitted))
         table, arrays = self._tables[host]
@@ -809,19 +899,28 @@ class SU3Service:
             arrays.a_phys.block_until_ready()
             step_s = time.perf_counter() - t0
             self._seen_shapes.add(shape_key)
+            dispatch_flops = sum(
+                request_flops(req.n_sites, ks[slot])
+                for slot, req, _rem in occupants
+            )
             self.metrics.record_dispatch(
                 live=live, padded=table.slots, step_s=step_s,
-                flops=sum(
-                    request_flops(req.n_sites, ks[slot])
-                    for slot, req, _rem in occupants
-                ),
+                flops=dispatch_flops,
                 cold=cold, host=host,
             )
+            if self.tracer.enabled:
+                self._trace_dispatch(
+                    arrays.runner, host, "multiply", arrays.cap_L,
+                    self.cfg.chain_horizon, "megakernel", t0, step_s,
+                    live=live, padded=table.slots, flops=dispatch_flops,
+                    cold=cold)
             done_s = time.perf_counter()
             for slot, req in table.advance(ks):
                 self._results[req.req_id] = arrays.result(slot, req.n_sites)
                 arrays.clear(slot)
                 self.metrics.record_completion(done_s - req.arrival_s)
+                if self.tracer.enabled:
+                    self._trace_request(req, done_s, host, "megakernel")
                 completed += 1
         self.metrics.record_queue_depth(self.queued())
         return completed

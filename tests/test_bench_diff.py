@@ -141,10 +141,20 @@ def test_asymmetric_rows_named_both_directions():
 # -- compression / depth-2 gate ----------------------------------------------
 
 
+def _provenance(**over):
+    block = {"git_sha": "deadbeef" * 5, "git_dirty": False,
+             "jax_version": "0.4.37", "jaxlib_version": "0.4.36",
+             "backend": "cpu", "device_kind": "cpu", "device_count": 1,
+             "xla_flags": "", "autotune_cache_schema": 3,
+             "python_version": "3.11.0", "platform": "linux"}
+    block.update(over)
+    return block
+
+
 def _full_artifact(*, mult_bps=384, mult_bf16_bps=192, st_bps=408,
                    st_bf16_bps=204, identical=True, tag_comp=True):
-    """A minimal but complete artifact that PASSES the compression gate;
-    keyword knobs break it in each gated way."""
+    """A minimal but complete artifact that PASSES the compression and
+    provenance gates; keyword knobs break it in each gated way."""
     comp = "two_row" if tag_comp else "none"
     t2 = [
         {"name": "table2_pallas_I5", "variant": "pallas", "dtype": "float32",
@@ -173,7 +183,9 @@ def _full_artifact(*, mult_bps=384, mult_bf16_bps=192, st_bps=408,
             st.append({"name": f"stencil_depth2_identity_h{hosts}{t}",
                        "hosts": hosts, "identical": identical,
                        "t_two_depth1_us": 100.0, "t_one_depth2_us": 90.0})
-    return _payload({"table2_variants": t2, "stencil": st})
+    art = _payload({"table2_variants": t2, "stencil": st})
+    art["provenance"] = _provenance()
+    return art
 
 
 def test_compression_gate_passes_on_honest_artifact(capsys):
@@ -260,3 +272,60 @@ def test_main_prints_asymmetric_warnings(tmp_path, capsys):
     assert rc == 0  # warnings, not failures
     assert "WARNING row t/dropped" in err and "MISSING" in err
     assert "WARNING row t/brand_new" in err and "new in the current" in err
+
+
+# -- provenance gate ----------------------------------------------------------
+
+
+def test_main_fails_harness_artifact_without_provenance(tmp_path, capsys):
+    import json
+    art = _full_artifact()
+    del art["provenance"]
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps(art))
+    absent = str(tmp_path / "absent.json")
+    assert bench_diff.main(["--current", str(cur), "--baseline", absent]) == 1
+    assert "provenance" in capsys.readouterr().err
+    # escape hatch for pre-provenance artifacts
+    assert bench_diff.main(["--current", str(cur), "--baseline", absent,
+                            "--no-provenance-gate"]) == 0
+    # ad-hoc payloads (no gated tables) are never provenance-gated
+    adhoc = tmp_path / "adhoc.json"
+    adhoc.write_text(json.dumps(_payload({"t": [{"name": "r", "GFLOPS": 1.0}]})))
+    assert bench_diff.main(["--current", str(adhoc), "--baseline", absent]) == 0
+
+
+def test_main_fails_env_drift_without_rebaseline_note(tmp_path, capsys):
+    import json
+    base = _full_artifact()
+    cur = _full_artifact()
+    cur["provenance"] = _provenance(jax_version="0.5.0", jaxlib_version="0.5.0")
+    base_p, cur_p = tmp_path / "base.json", tmp_path / "cur.json"
+    base_p.write_text(json.dumps(base))
+    cur_p.write_text(json.dumps(cur))
+    argv = ["--baseline", str(base_p), "--current", str(cur_p)]
+    assert bench_diff.main(argv) == 1
+    assert "jax_version" in capsys.readouterr().err
+    # acknowledged drift passes: CLI note ...
+    assert bench_diff.main(argv + ["--rebaseline-note", "jax upgrade"]) == 0
+    # ... or a rebaseline field stamped into the artifact itself
+    cur["provenance"]["rebaseline"] = "jax upgrade"
+    cur_p.write_text(json.dumps(cur))
+    assert bench_diff.main(argv) == 0
+
+
+def test_provenance_problems_unit():
+    from repro.obs.provenance import provenance_problems
+    art = _full_artifact()
+    assert provenance_problems(art) == []
+    # missing required key is named
+    broken = _full_artifact()
+    del broken["provenance"]["backend"]
+    assert any("backend" in p for p in provenance_problems(broken))
+    # identical env vs baseline is clean; drifted backend is not
+    assert provenance_problems(art, _full_artifact()) == []
+    drifted = _full_artifact()
+    drifted["provenance"]["backend"] = "tpu"
+    probs = provenance_problems(drifted, art)
+    assert any("backend" in p and "REPRO_BENCH_REBASELINE" in p for p in probs)
+    assert provenance_problems(drifted, art, rebaseline_note="tpu run") == []
