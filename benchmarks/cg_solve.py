@@ -1,0 +1,203 @@
+"""CG solver benchmark: residual-vs-time + per-iteration GFLOPS (``cg``).
+
+The flagship iterative workload: the shifted staggered solve
+``(sigma I + S) x = b`` through ``ExecutionPlan.cg_solve``.  Three row
+families land in ``BENCH_su3.json`` under ``cg``:
+
+  headline row   ``cg_residual_vs_time`` — the fused f32 solve on the
+                 reference constant-per-direction SU(3) problem, one
+                 ``(t_ms, rel_res)`` sample per iteration (each iteration
+                 synced so the samples are honest walls), with
+                 ``iters_to_tol`` at tol=1e-6.  ``scripts/bench_diff.py``
+                 gates on this row: a diff that needs >10% more iterations
+                 to the same tol than the committed artifact fails.
+  grid rows      ``cg_iter_L{L}_{layout}_{dtype}[_acc][_two_row]_{fused|
+                 composed}`` — per-iteration GFLOPS (useful flops =
+                 ``CG_ITER_FLOPS_PER_SITE``/site) across the layout x dtype
+                 x compression grid, fused vs composed.  ``verified`` means
+                 fused matched composed BITWISE at f32 storage (the
+                 bit-identity contract) / within ``plan.verify_tolerance``
+                 at bf16.
+  tuned row      ``cg_tuned`` — the ``autotune.best_cg_config`` decision
+                 (tile, fused) with its provenance; persisted under the
+                 dedicated ``soa-cg-h{hosts}`` cache key so the CG tuple
+                 never aliases the multiply or stencil decisions.
+
+Standalone CLI:  PYTHONPATH=src python -m benchmarks.cg_solve --quick
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.core.su3.layouts import Layout
+from repro.core.su3.plan import (
+    CG_SHIFT,
+    CGMaxItersError,
+    EngineConfig,
+    build_plan,
+    verify_tolerance,
+)
+from repro.kernels.su3_stencil import CG_ITER_FLOPS_PER_SITE
+
+TOL_F32 = 1e-6
+TOL_BF16 = 2e-2  # bf16 storage stalls near its rounding floor (~1e-2)
+MAX_ITERS = 64
+
+
+def _problem(L: int, seed: int = 7):
+    """The deterministic convergent solve problem (same construction the
+    autotuner measures on): constant-per-direction SU(3) links — exactly
+    Hermitian under the site-local-adjoint stencil — and a unit-scale b."""
+    return autotune._cg_measure_problem(L, seed)
+
+
+def _build(L: int, layout: Layout, dtype: str, accum: str, compression: str,
+           tile: int):
+    cfg = EngineConfig(
+        L=L, dtype=dtype, accum_dtype=accum, layout=layout, tile=tile,
+        iterations=1, warmups=0, compression=compression,
+    )
+    plan = build_plan(cfg)
+    u, b = _problem(L)
+    return plan, plan.pack_gauge(u), plan.pack_rhs(b)
+
+
+def residual_vs_time_row(L: int, tile: int, tol: float = TOL_F32) -> dict:
+    """The headline row: per-iteration (wall, relative residual) samples of
+    the fused f32 solve.  Each iteration is synced before the clock is read,
+    so the series is a true residual-vs-time curve, not a dispatch queue."""
+    plan, u_phys, b_p = _build(L, Layout.SOA, "float32", "", "none", tile)
+    # warm/compile one throwaway solve so the curve measures iterations,
+    # not the first-call compile
+    plan.cg_solve(u_phys, b_p, tol=tol, max_iters=MAX_ITERS)
+
+    state = plan.cg_state_init(b_p)
+    b_rs = float(jax.device_get(state["rs"]))
+    stop2 = tol * tol * b_rs
+    series: list[tuple[float, float]] = []
+    t0 = time.perf_counter()
+    iters = 0
+    while iters < MAX_ITERS:
+        state = plan.cg_iterate(u_phys, state)
+        rs = float(jax.device_get(state["rs"]))  # syncs the iteration
+        iters += 1
+        series.append(
+            (round((time.perf_counter() - t0) * 1e3, 4),
+             float((rs / b_rs) ** 0.5))
+        )
+        if rs <= stop2:
+            break
+    wall = time.perf_counter() - t0
+    n_sites = L**4
+    return {
+        "name": "cg_residual_vs_time",
+        "us_per_call": round(wall / iters * 1e6, 1),
+        "L": L, "tile": tile, "dtype": "float32", "fused": True,
+        "sigma": CG_SHIFT, "tol": tol,
+        "iters_to_tol": iters,
+        "converged": series[-1][1] <= tol,
+        "final_rel_residual": series[-1][1],
+        "residual_vs_time_ms": series,
+        "GFLOPS": round(
+            CG_ITER_FLOPS_PER_SITE * n_sites * iters / wall / 1e9, 3),
+        "flops_per_site_per_iter": CG_ITER_FLOPS_PER_SITE,
+    }
+
+
+def _grid_row(L: int, layout: Layout, dtype: str, accum: str,
+              compression: str, tile: int, fused: bool) -> dict:
+    tol = TOL_BF16 if dtype == "bfloat16" else TOL_F32
+    plan, u_phys, b_p = _build(L, layout, dtype, accum, compression, tile)
+    acc_tag = f"_acc-{accum}" if accum else ""
+    comp_tag = "_two_row" if compression == "two_row" else ""
+    name = (f"cg_iter_L{L}_{layout.value}_{dtype}{acc_tag}{comp_tag}_"
+            f"{'fused' if fused else 'composed'}")
+    try:
+        plan.cg_solve(u_phys, b_p, tol=tol, max_iters=MAX_ITERS, fused=fused)
+        res = plan.cg_solve(u_phys, b_p, tol=tol, max_iters=MAX_ITERS,
+                            fused=fused)
+        converged, iters, final = True, res.iterations, res.residuals[-1]
+        x = res.x_p
+        wall = res.wall_s
+    except CGMaxItersError as e:
+        # bf16 can stall above a too-ambitious tol; the row still reports
+        # the measured iteration throughput
+        converged, iters, final, x, wall = False, e.iterations, e.residual, None, 0.0
+    if not wall:
+        # re-time a fixed iteration count when the solve path didn't
+        t0 = time.perf_counter()
+        state = plan.cg_state_init(b_p)
+        for _ in range(iters):
+            state = plan.cg_iterate(u_phys, state, fused=fused)
+        jax.block_until_ready(state["rs"])
+        wall = time.perf_counter() - t0
+        x = state["x"]
+    verified = True
+    if fused:
+        try:
+            oracle = plan.cg_solve(u_phys, b_p, tol=tol, max_iters=MAX_ITERS,
+                                   fused=False)
+            if dtype == "float32":
+                verified = bool(jnp.array_equal(x, oracle.x_p))
+            else:
+                verified = abs(final - oracle.residuals[-1]) <= verify_tolerance(
+                    dtype, accum, reconstruct=compression == "two_row")
+        except CGMaxItersError:
+            verified = not converged  # both paths stalled the same way
+    n_sites = L**4
+    return {
+        "name": name,
+        "us_per_call": round(wall / max(iters, 1) * 1e6, 1),
+        "L": L, "layout": layout.value, "dtype": dtype,
+        "accum_dtype": accum or dtype, "compression": compression,
+        "tile": tile, "fused": fused, "tol": tol,
+        "iterations": iters, "converged": converged,
+        "final_rel_residual": float(final),
+        "GFLOPS": round(
+            CG_ITER_FLOPS_PER_SITE * n_sites * max(iters, 1) / wall / 1e9, 3),
+        "verified": verified,
+    }
+
+
+def tuned_row(L: int, quick: bool) -> dict:
+    """The persisted CG tuning decision (its own cache key segment)."""
+    cfg = autotune.best_cg_config(
+        L=L,
+        measure_fn=lambda c: autotune.measure_cg_candidate(
+            c, L=L, iters=2 if quick else 4),
+    )
+    return {
+        "name": "cg_tuned",
+        "L": L, "tile": cfg["tile"], "fused": cfg["fused"],
+        "variant": cfg["variant"], "cached": cfg.get("cached", False),
+        "cache_layout_segment": f"soa-cg-h{cfg['cg'].get('hosts', 1)}",
+        **{f"cg_{k}": v for k, v in cfg["cg"].items()},
+    }
+
+
+def run(quick: bool = True) -> list[dict]:
+    L = 4 if quick else 8
+    tile = min(128, L**3)
+    rows = [residual_vs_time_row(L, tile)]
+    grid = [
+        (Layout.SOA, "float32", "", "none"),
+        (Layout.SOA, "bfloat16", "float32", "none"),
+        (Layout.SOA, "float32", "", "two_row"),
+        (Layout.AOSOA, "float32", "", "none"),
+    ]
+    for layout, dtype, accum, compression in grid:
+        for fused in (True, False):
+            rows.append(_grid_row(L, layout, dtype, accum, compression,
+                                  tile, fused))
+    rows.append(tuned_row(L, quick))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick="--quick" in sys.argv[1:]):
+        print({k: v for k, v in r.items() if k != "residual_vs_time_ms"})

@@ -48,7 +48,7 @@ def main(argv: list[str] | None = None) -> None:
         json_path = nxt if nxt and not nxt.startswith("--") else DEFAULT_JSON
 
     from benchmarks import (
-        fig7_strong_scaling, fig9_gemm_vs_dot, fig10_arch_compare,
+        cg_solve, fig7_strong_scaling, fig9_gemm_vs_dot, fig10_arch_compare,
         lm_step, serve_traffic, stencil, table1_roofline, table2_variants,
         table3_placement,
     )
@@ -68,6 +68,7 @@ def main(argv: list[str] | None = None) -> None:
         ("lm_step", lambda: lm_step.run()),
         ("serve", lambda: serve_traffic.run(quick=quick)),
         ("stencil", lambda: stencil.run(quick=quick)),
+        ("cg", lambda: cg_solve.run(quick=quick)),
     ]
     for table, fn in tables:
         # one broken table must not take the other rows or the JSON

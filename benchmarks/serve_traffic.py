@@ -29,6 +29,12 @@ Load models over ``repro.serve.su3.SU3Service``:
   bf16 row     the same request stream served by a bf16-storage /
                f32-accumulate plan pool vs the f32 pool: measured HLO
                bytes/site must drop, results must agree within 1e-2.
+  solve row    one CG solve (data-dependent scheduling-turn count) mixed
+               with a multiply stream on the same service: multiplies keep
+               completing while the solve is in flight (kind alternation),
+               the solve retires mid-stream on its residual test, per-kind
+               iteration metrics split the work, and the served solution
+               matches the plain-jnp reference solver.
   traced row   ONE Poisson stream replayed tracer-off vs tracer-on
                (``repro.obs``): sustained-GFLOPS delta, full request
                lifecycle + stencil exchange/interior/boundary phase
@@ -513,6 +519,87 @@ def bf16_plan_comparison(L: int, seed: int) -> dict:
     }
 
 
+def solve_mix(L: int = 2, n_multiply: int = 6, seed: int = 0,
+              iters_per_step: int = 2) -> dict:
+    """Mixed solve + multiply traffic: the data-dependent-length request kind.
+
+    One CG solve (unknown-many scheduling turns: it retires on a residual
+    test, not a known chain depth) rides the SAME service as a stream of
+    multiply requests.  The acceptance points this row records:
+
+      * kind alternation keeps the multiplies flowing WHILE the solve is in
+        flight (``multiplies_done_mid_solve`` > 0 — no starvation either way);
+      * the solve retires mid-stream the moment its residual crosses tol —
+        not at a padded max_iters — freeing its host budget
+        (``solve_iterations`` < max_iters);
+      * per-kind iteration metrics split the work
+        (``kind_iterations['solve']`` == solve iterations dispatched);
+      * the served solution matches the plain-jnp :func:`cg_reference_solve`
+        oracle on the identical problem.
+    """
+    from benchmarks.cg_solve import _problem
+    from repro.core.su3.plan import CG_SHIFT, cg_reference_solve
+
+    rng = np.random.default_rng(seed)
+    n_sites = L**4
+    svc = SU3Service(ServiceConfig(
+        autotune=False, tile=min(TILE, n_sites),
+        solve_iters_per_step=iters_per_step,
+        batcher=BatcherConfig(
+            max_batch=4, warm_batch_sizes=(1, 2, 4), max_queue_depth=64,
+        ),
+    ))
+    u, b = _problem(L)
+    tol = 1e-6
+    max_iters = 64
+    solve_id = svc.submit_solve(u, b, tol=tol, max_iters=max_iters)
+    mult_ids = [svc.submit(*_random_request(rng, n_sites), k=1)
+                for _ in range(n_multiply)]
+
+    solve_x = None
+    solve_done_step = None
+    mult_done_mid_solve = 0
+    steps = 0
+    t0 = time.perf_counter()
+    while svc.pending():
+        steps += 1
+        svc.step()
+        for rid, out in svc.pop_ready().items():
+            if rid == solve_id:
+                solve_done_step = steps
+                solve_x = out
+            elif solve_done_step is None:
+                mult_done_mid_solve += 1
+    wall = time.perf_counter() - t0
+
+    x_ref, _, _ = cg_reference_solve(u, b, L, sigma=CG_SHIFT, tol=tol,
+                                     max_iters=max_iters)
+    err = float(jnp.max(jnp.abs(solve_x - x_ref))) / max(
+        float(jnp.max(jnp.abs(x_ref))), 1e-30)
+    snap = svc.metrics.snapshot()
+    kind_iters = snap.get("kind_iterations", {})
+    solve_iters = kind_iters.get("solve", 0)
+    return {
+        "name": "serve_solve_mix",
+        "L": L,
+        "n_multiply": n_multiply,
+        "solve_iters_per_step": iters_per_step,
+        "tol": tol,
+        "max_iters": max_iters,
+        "steps": steps,
+        "wall_s": round(wall, 3),
+        "solve_retired_step": solve_done_step,
+        "solve_iterations": solve_iters,
+        "solve_retired_early": 0 < solve_iters < max_iters,
+        "multiplies_done_mid_solve": mult_done_mid_solve,
+        "kinds_interleaved": mult_done_mid_solve > 0,
+        "kind_iterations": kind_iters,
+        "completed": snap["completed"],
+        "solve_max_rel_err_vs_reference": round(err, 9),
+        "solve_matches_reference": err < 1e-5,
+    }
+
+
 def run(quick: bool = True, seed: int = 0, use_autotune: bool = False) -> list[dict]:
     """The ``serve`` benchmark section (wired into benchmarks.run)."""
     if quick:
@@ -527,6 +614,7 @@ def run(quick: bool = True, seed: int = 0, use_autotune: bool = False) -> list[d
         dispatch_overhead(Ls, n_requests=12 if quick else 32, seed=seed),
         bf16_plan_comparison(max(Ls), seed),
         traced_serving(min(Ls), n_requests=12 if quick else 32, seed=seed),
+        solve_mix(min(Ls), n_multiply=4 if quick else 8, seed=seed),
     ]
     return rows
 
@@ -565,6 +653,13 @@ def main(argv: list[str] | None = None) -> int:
             r["bf16_fewer_bytes"] and r["within_1e-2"] and r["bf16_verified"]
         ):
             print("FAIL: bf16-storage plan acceptance", file=sys.stderr)
+            ok = False
+        if r["name"] == "serve_solve_mix" and not (
+            r["solve_retired_early"] and r["kinds_interleaved"]
+            and r["solve_matches_reference"]
+        ):
+            print("FAIL: solve-mix acceptance (early retire / interleave / "
+                  "reference match)", file=sys.stderr)
             ok = False
         if r["name"] == "serve_traced" and not (
             r["lifecycle_covered"] and r["phases_covered"]

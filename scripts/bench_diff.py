@@ -47,6 +47,16 @@ A silent fallback to the 18-real layout fails all three ways: the row
 keeps the full bytes/site, loses its ``compression`` tag, or vanishes.
 ``--no-compression-gate`` skips this block (pre-compression artifacts).
 
+The CG convergence gate pins the SOLVER'S iteration count, not just its
+throughput: the current artifact's ``cg_residual_vs_time`` row must exist
+and report convergence, every fused ``cg_iter_*`` row must carry
+``verified: true`` (the fused/composed bit-identity contract), and — when
+the committed baseline measured the same tol — the fresh run may not need
+more than 10% more iterations to reach it.  Iteration counts are
+deterministic (fixed seed, fixed problem), so like the compression gate
+there is no noise retry: more iterations means the numerics changed.
+``--no-cg-gate`` skips the block (pre-solver artifacts).
+
 The gate also verifies run PROVENANCE (``repro.obs.provenance_block``):
 a harness artifact without a provenance block fails, as does a diff whose
 jax/jaxlib/backend/device identity changed between baseline and current
@@ -84,6 +94,7 @@ _METRICS = (("GFLOPS", 0.05), ("sustained_gflops_busy", 0.01))
 # stream passes with margin.
 MULTIPLY_BYTES_RATIO = 0.70   # true: 96/144 words = 0.667
 STENCIL_BYTES_RATIO = 0.85    # true: 102/126 words = 0.810
+CG_ITERS_HEADROOM = 0.10      # >10% more iterations to the same tol fails
 DEPTH2_HOSTS = (1, 2, 4)
 _WORD_BYTES = {"float32": 4, "bfloat16": 2, "float64": 8}
 
@@ -373,6 +384,61 @@ def compression_gate(current: dict) -> list[str]:
     return problems
 
 
+def cg_gate(current: dict, baseline: dict | None) -> list[str]:
+    """Convergence checks on the CG solver rows; -> problems (empty = pass).
+
+    Iteration counts on the fixed-seed reference problem are deterministic,
+    so there is no noise retry: a solve that needs more iterations to the
+    same tolerance changed numerically, full stop.
+    """
+    problems: list[str] = []
+    cur = _rows_by_name(current, "cg")
+    row = cur.get("cg_residual_vs_time")
+    if row is None:
+        problems.append("cg: cg_residual_vs_time row missing — solver "
+                        "convergence not measured")
+        return problems
+    if row.get("converged") is not True:
+        problems.append(f"cg_residual_vs_time: solve did NOT converge to "
+                        f"tol={row.get('tol')} within the iteration budget")
+    # fused grid rows must carry their verification verdict (bitwise vs the
+    # composed oracle at f32 storage, verify_tolerance at bf16)
+    for name in sorted(cur):
+        r = cur[name]
+        if (name.startswith("cg_iter_") and r.get("fused")
+                and r.get("verified") is not True):
+            problems.append(f"{name}: fused path failed verification "
+                            f"against the composed oracle")
+    iters = row.get("iters_to_tol")
+    if not isinstance(iters, (int, float)) or iters <= 0:
+        problems.append("cg_residual_vs_time: iters_to_tol missing")
+        return problems
+    base_row = (_rows_by_name(baseline, "cg").get("cg_residual_vs_time")
+                if baseline else None)
+    if base_row is None:
+        print(f"  cg_residual_vs_time: {int(iters)} iterations to "
+              f"tol={row.get('tol')} (no committed baseline — the count "
+              f"gates from the next artifact on)")
+        return problems
+    base_iters = base_row.get("iters_to_tol")
+    if (base_row.get("tol") != row.get("tol")
+            or not isinstance(base_iters, (int, float)) or base_iters <= 0):
+        print("  cg_residual_vs_time: baseline measured a different tol — "
+              "iteration counts not comparable")
+        return problems
+    ceiling = base_iters * (1.0 + CG_ITERS_HEADROOM)
+    print(f"  cg_residual_vs_time: {int(iters)} iterations to "
+          f"tol={row.get('tol')} vs baseline {int(base_iters)} "
+          f"(ceiling {ceiling:.1f})")
+    if iters > ceiling:
+        problems.append(
+            f"cg_residual_vs_time: {int(iters)} iterations to "
+            f"tol={row.get('tol')} vs {int(base_iters)} in the committed "
+            f"artifact (>{CG_ITERS_HEADROOM:.0%} more) — solver "
+            f"convergence regressed")
+    return problems
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default=DEFAULT_ARTIFACT,
@@ -389,6 +455,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--no-compression-gate", action="store_true",
                     help="skip the compressed-gauge/depth-2 row checks "
                          "(pre-compression artifacts)")
+    ap.add_argument("--no-cg-gate", action="store_true",
+                    help="skip the CG iterations-to-tolerance checks "
+                         "(pre-solver artifacts)")
     ap.add_argument("--no-provenance-gate", action="store_true",
                     help="skip the provenance-block checks "
                          "(pre-provenance artifacts)")
@@ -435,6 +504,12 @@ def main(argv: list[str] | None = None) -> int:
         for p in comp_problems:
             print(f"  FAIL {p}", file=sys.stderr)
         problems.extend(comp_problems)
+    if not args.no_cg_gate and gate_applies:
+        print("bench_diff: CG convergence gate (iterations to tolerance):")
+        cg_problems = cg_gate(current, baseline)
+        for p in cg_problems:
+            print(f"  FAIL {p}", file=sys.stderr)
+        problems.extend(cg_problems)
 
     if baseline is None:
         print(f"bench_diff: no baseline at {args.baseline!r}; nothing to diff")

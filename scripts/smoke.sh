@@ -38,6 +38,17 @@ python -m pytest -x -q \
   tests/test_compression.py::test_compressed_multiply_matches_full_kernel_on_su3 \
   "tests/test_compression.py::test_stencil_depth2_single_host_bit_identical[two_row]"
 
+echo "== CG solver spot check (convergence pin + fused bit-identity) =="
+# The flagship solve, in seconds: ONE end-to-end convergence check against
+# the independent oracle and ONE fused-vs-composed bit-identity check, so
+# a numerically broken solver surfaces before the full tiers and the
+# benchmark harness spin up.  The full grid (layout x dtype x compression
+# property tests, multi-host subprocess identity, serving mixes) stays in
+# the pytest tiers below.
+python -m pytest -x -q \
+  tests/test_cg_solve.py::test_cg_converges_and_solves_the_system \
+  tests/test_cg_solve.py::test_fused_composed_bit_identical_f32
+
 echo "== fast tier (-m 'not slow') =="
 python -m pytest -x -q -m "not slow"
 
@@ -70,6 +81,8 @@ if [[ "$RUN_BENCH" == 1 ]]; then
   # rows are re-measured (median of 3) by scripts/bench_diff.py before the
   # gate fails, so residual failures are real regressions, not timer noise.
   # Rows present on only one side are named WARNINGs, never silent skips.
+  # The CG gate rides in the same call: cg_residual_vs_time must converge,
+  # and may not need >10% more iterations to the committed tol.
   python scripts/bench_diff.py --current BENCH_su3.json --baseline git:HEAD \
     --threshold "${BENCH_DIFF_THRESHOLD:-0.15}"
 fi

@@ -992,6 +992,333 @@ def best_stencil_config(
     return dict(config, cached=False)
 
 
+# ---------------------------------------------------------------------------
+# CG iteration tuning: the solve's hot loop is ONE fused stencil+axpy pass
+# plus a shared scalar epilogue per iteration, so its decision axes are the
+# Pallas tile and whether to run the fused kernel at all — the fused pass
+# saves materializing the search direction p' as a standalone HBM round trip
+# but pays a SECOND gathered neighbor field, so which side wins is a
+# measured question, not a modeled one.  Decisions persist under their own
+# cache key (layout "soa-cg-h{hosts}") so multiply/stencil/CG tuples for the
+# same (dtype, L) never alias.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CGCandidate:
+    """One point of the CG iteration grid: Pallas site tile x whether the
+    iteration body runs the fused stencil+axpy kernel or the composed
+    (axpy, stencil, shift) oracle path."""
+
+    tile: int
+    fused: bool = True
+
+
+def enumerate_cg_candidates(
+    tiles: tuple[int, ...] = DEFAULT_TILES,
+    fused: tuple[bool, ...] = (True, False),
+    dtype: str = "float32",
+    accum_dtype: str = "",
+    hw: roofline.HardwareSpec = roofline.TPU_V5E,
+) -> list[CGCandidate]:
+    """The VMEM-fitting (tile, fused) grid the CG pruner ranks.  The fused
+    grid step resides the stencil tile set PLUS the second gathered field,
+    so its VMEM bound is tighter than the stencil's at the same tile; the
+    composed path is bounded by the plain stencil step."""
+    word_b = layouts.WORD_BYTES[dtype]
+    accum_b = layouts.WORD_BYTES[accum_dtype] if accum_dtype else None
+    out = []
+    for tile in tiles:
+        for f in fused:
+            bound = (su3_stencil.cg_vmem_bytes(tile, word_b, accum_b) if f
+                     else su3_stencil.stencil_vmem_bytes(tile, word_b, accum_b))
+            if bound <= hw.vmem_bytes:
+                out.append(CGCandidate(tile, f))
+    return out
+
+
+# streamed storage words per site of ONE CG iteration (coarse, for ranking
+# only — selection is by measurement).  Fused: the kernel streams U, BOTH
+# gathered fields, the two center vectors, and two outputs; composed swaps
+# the second gather for a standalone axpy round trip.  Both pay the shared
+# epilogue (shift + x/r update + two reductions).
+_CG_EPILOGUE_WORDS = 18 + 30 + 12 + 6  # shift, update, <p,Ap>, <r,r>
+
+
+def _cg_words_per_site(fused: bool, compressed: bool) -> int:
+    u_words = 2 * (layouts.PLANAR_COMP_ROWS if compressed else layouts.PLANAR_ROWS)
+    if fused:
+        body = u_words + 2 * 48 + 2 * 6 + 2 * 6  # u, r/p gathers, r/p, p'/s out
+    else:
+        body = 18 + (u_words + 48 + 6)  # axpy pass, then stencil pass
+    return body + _CG_EPILOGUE_WORDS
+
+
+def predict_cg(
+    cand: CGCandidate,
+    L: int,
+    dtype: str = "float32",
+    accum_dtype: str = "",
+    hosts: int = 1,
+    hw: roofline.HardwareSpec = roofline.TPU_V5E,
+    compression: str = "none",
+) -> dict[str, Any]:
+    """Roofline prediction for one CG iteration variant.
+
+    Same three core terms as the stencil model (the stencil chain dominates
+    the iteration's compute), with the memory stream swapped for the CG word
+    count and the per-iteration halo charged like a depth-1 stencil exchange
+    — the fused path's overlap schedule ships the ±t ghosts of BOTH fields
+    but still pays one exchange per iteration.  Deliberately coarse: the
+    model ranks tiles, measurement separates fused from composed.
+    """
+    n_sites = L**4
+    padded = ((n_sites + cand.tile - 1) // cand.tile) * cand.tile
+    wb = layouts.WORD_BYTES[dtype]
+    compressed = compression == layouts.GaugeCompression.TWO_ROW.value
+    stream_bytes = padded * _cg_words_per_site(cand.fused, compressed) * wb
+    flops_site = float(su3_stencil.CG_ITER_FLOPS_PER_SITE)
+    compute_s = flops_site * padded / hw.peak_flops_vpu
+    memory_s = stream_bytes / hw.hbm_bw
+    issue_s = 0.0
+    n_dispatches = (4 if hosts > 1 else 2) if cand.fused else (5 if hosts > 1 else 3)
+    if hw.issue_rate:
+        per_step = stencil_instruction_model(dtype, accum_dtype, compression)
+        instrs = (padded // cand.tile) * per_step + DISPATCH_ISSUE_SLOTS * n_dispatches
+        issue_s = instrs / hw.issue_rate
+    core_s = max(compute_s, memory_s, issue_s)
+    core_shard_s = core_s / max(hosts, 1)
+    halo = _stencil_halo_spec(L, hosts, wb, depth=1)
+    halo_s = HALO_EXCHANGE_LATENCY_S + 2 * halo.halo_bytes_per_exchange / hw.ici_bw
+    bound_s = core_s if hosts == 1 else max(core_shard_s, halo_s)
+    useful = flops_site * n_sites
+    return {
+        "tile": cand.tile,
+        "fused": cand.fused,
+        "compression": compression,
+        "hosts": hosts,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "issue_s": issue_s,
+        "bound_s": bound_s,
+        "bandwidth_bytes": stream_bytes,
+        "predicted_gflops": round(useful / bound_s / 1e9, 3),
+    }
+
+
+def _cg_measure_problem(L: int, seed: int = 7) -> tuple[Any, Any]:
+    """Deterministic convergent CG problem: a constant-per-direction SU(3)
+    gauge field (each U_mu constant along mu, so the site-local-adjoint
+    stencil is exactly Hermitian) and a unit-scale right-hand side."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(4, 3, 3)) + 1j * rng.normal(size=(4, 3, 3))
+    q, r = np.linalg.qr(a)
+    d = np.diagonal(r, axis1=-2, axis2=-1)
+    q = q * (d / np.abs(d))[..., None, :]
+    q = q / np.linalg.det(q)[..., None, None] ** (1.0 / 3.0)
+    n = L**4
+    u = np.broadcast_to(q, (n, 4, 3, 3)).astype(np.complex64)
+    b = (rng.normal(size=(n, 3)) + 1j * rng.normal(size=(n, 3))).astype(
+        np.complex64
+    )
+    return jnp.asarray(u), jnp.asarray(b)
+
+
+def measure_cg_candidate(
+    cand: CGCandidate, L: int = 8, dtype: str = "float32",
+    accum_dtype: str = "", compression: str = "none", iters: int = 4,
+) -> dict[str, Any]:
+    """Measured per-iteration GFLOPS of one CG variant on the local mesh
+    (useful flops = ``CG_ITER_FLOPS_PER_SITE``/site/iteration).  Fused
+    candidates are verified against the composed oracle — BITWISE at f32
+    storage (the bit-identity contract), within ``plan.verify_tolerance``
+    otherwise; the composed candidate is the oracle and verifies by its
+    residual actually shrinking."""
+    from repro.core.su3.plan import build_plan
+    from repro.core.su3.engine import EngineConfig
+
+    word_b = layouts.WORD_BYTES[dtype]
+    accum_b = layouts.WORD_BYTES[accum_dtype] if accum_dtype else None
+    cfg = EngineConfig(
+        L=L, dtype=dtype, variant="pallas", layout=Layout.SOA,
+        tile=cand.tile, accum_dtype=accum_dtype, iterations=2, warmups=1,
+        compression=compression,
+    )
+    plan = build_plan(cfg)
+    u, b = _cg_measure_problem(L)
+    u_phys = plan.pack_gauge(u)
+    b_p = plan.pack_rhs(b)
+
+    def run(fused: bool, n: int):
+        state = plan.cg_state_init(b_p)
+        for _ in range(n):
+            state = plan.cg_iterate(u_phys, state, fused=fused)
+        jax.block_until_ready(state["rs"])
+        return state
+
+    state = run(cand.fused, iters)  # warm/compile; also the verify subject
+    import time as _time
+
+    best = float("inf")
+    for _ in range(2):
+        t0 = _time.perf_counter()
+        run(cand.fused, iters)
+        best = min(best, _time.perf_counter() - t0)
+
+    b_rs = float(jax.device_get(plan.cg_state_init(b_p)["rs"]))
+    rs = float(jax.device_get(state["rs"]))
+    if cand.fused:
+        oracle = run(False, iters)
+        if dtype == "float32":
+            verified = bool(jnp.array_equal(state["x"], oracle["x"])) and bool(
+                jnp.array_equal(state["r"], oracle["r"])
+            )
+        else:
+            tol = plan.verify_tolerance()
+            o_rs = float(jax.device_get(oracle["rs"]))
+            verified = abs((rs / b_rs) ** 0.5 - (o_rs / b_rs) ** 0.5) <= tol
+    else:
+        verified = rs < b_rs  # the oracle must at least be converging
+    vmem = (su3_stencil.cg_vmem_bytes(cand.tile, word_b, accum_b) if cand.fused
+            else su3_stencil.stencil_vmem_bytes(cand.tile, word_b, accum_b))
+    gf = (
+        su3_stencil.CG_ITER_FLOPS_PER_SITE * (L**4) * iters / best / 1e9
+    )
+    return {
+        "tile": cand.tile,
+        "fused": cand.fused,
+        "vmem_kib": vmem // 1024,
+        "measured_gflops": round(gf, 3),
+        "verified": verified,
+    }
+
+
+def cg_sweep(
+    L: int = 8,
+    dtype: str = "float32",
+    accum_dtype: str = "",
+    *,
+    hosts: int = 1,
+    compression: str = "none",
+    prune: float = DEFAULT_PRUNE,
+    tiles: tuple[int, ...] = DEFAULT_TILES,
+    fused: tuple[bool, ...] = (True, False),
+    measure_fn: Callable[[CGCandidate], dict[str, Any]] | None = None,
+    hw: roofline.HardwareSpec = roofline.TPU_V5E,
+) -> dict[str, Any]:
+    """Rank the CG (tile, fused) grid with the coarse iteration roofline;
+    measure only the top ``prune`` fraction — same return structure and
+    selection contract as :func:`pipeline_sweep` / :func:`stencil_sweep`."""
+    cands = enumerate_cg_candidates(tiles, fused, dtype, accum_dtype, hw)
+    if not cands:
+        raise RuntimeError("no VMEM-fitting CG candidate")
+    preds = [
+        predict_cg(c, L, dtype, accum_dtype, hosts, hw, compression=compression)
+        for c in cands
+    ]
+    order = sorted(range(len(cands)), key=lambda i: -preds[i]["predicted_gflops"])
+    n_meas = len(cands) if prune >= 1 else max(1, math.ceil(prune * len(cands)))
+    if measure_fn is None:
+        measure_fn = lambda c: measure_cg_candidate(  # noqa: E731
+            c, L=L, dtype=dtype, accum_dtype=accum_dtype, compression=compression
+        )
+    rows = []
+    for rank, i in enumerate(order[:n_meas]):
+        row = dict(preds[i])
+        row.update(measure_fn(cands[i]))
+        row["predicted_rank"] = rank
+        rows.append(row)
+    return {
+        "rows": rows,
+        "candidates_total": len(cands),
+        "candidates_measured": n_meas,
+        "prune": prune,
+    }
+
+
+# CG cache entries carry (tile, fused, cg provenance) under their own layout
+# key ("soa-cg-h{hosts}") so they never alias multiply or stencil decisions.
+_REQUIRED_CG_KEYS = frozenset({"layout", "variant", "tile", "fused", "cg"})
+
+
+def _valid_cg_hit(hit: Any) -> dict[str, Any] | None:
+    if not isinstance(hit, dict):
+        return None
+    config = hit.get("config")
+    if not isinstance(config, dict) or not _REQUIRED_CG_KEYS <= config.keys():
+        return None
+    return config
+
+
+def best_cg_config(
+    L: int = 8,
+    dtype: str = "float32",
+    *,
+    accum_dtype: str = "",
+    compression: str = "none",
+    hosts: int = 1,
+    cache: bool = True,
+    cache_directory: str | None = None,
+    refresh: bool = False,
+    prune: float = DEFAULT_PRUNE,
+    measure_fn: Callable[[CGCandidate], dict[str, Any]] | None = None,
+) -> dict[str, Any]:
+    """The tuned CG iteration: the (tile, fused) point with the best
+    MEASURED per-iteration GFLOPS among the verified candidates.
+
+    Same contract as :func:`best_config` / :func:`best_stencil_config` —
+    ranked by model, selected by measurement among verified candidates,
+    persisted with provenance under a versioned key (layout
+    ``soa-cg-h{hosts}``, so the CG decision never aliases the multiply or
+    stencil tuple for the same dtype/L).  ``fused`` is a genuinely measured
+    axis: the fused kernel trades a standalone p' round trip for a second
+    gathered neighbor field, and which side of that trade wins depends on
+    the gather cost of the backend actually serving the solve.
+    """
+    backend, device_kind, n_devices = _device_identity()
+    dtype_key = f"{dtype}+acc-{accum_dtype}" if accum_dtype else dtype
+    key = cache_key(
+        backend=backend, device_kind=device_kind, layout=f"soa-cg-h{hosts}",
+        dtype=dtype_key, L=L, n_devices=n_devices, compression=compression,
+    )
+    if cache and not refresh:
+        config = _valid_cg_hit(load_cache(cache_directory).get(key))
+        if config is not None:
+            return dict(config, cached=True)
+
+    sweep = cg_sweep(
+        L=L, dtype=dtype, accum_dtype=accum_dtype, hosts=hosts,
+        compression=compression, prune=prune, measure_fn=measure_fn,
+    )
+    rows = [r for r in sweep["rows"] if r["verified"]]
+    if not rows:
+        raise RuntimeError("no verified CG candidate in the measured set")
+    winner = max(rows, key=lambda r: r["measured_gflops"])
+    config = {
+        "layout": "soa", "variant": "pallas_cg",
+        "tile": winner["tile"], "fused": winner["fused"],
+        "cg": {
+            "schema": SCHEMA_VERSION,
+            "prune": sweep["prune"],
+            "hosts": hosts,
+            "compression": compression,
+            "candidates_total": sweep["candidates_total"],
+            "candidates_measured": sweep["candidates_measured"],
+            "predicted_gflops": winner.get("predicted_gflops", 0.0),
+            "predicted_rank": winner.get("predicted_rank", 0),
+        },
+    }
+    if cache:
+        store_cache_entry(
+            key,
+            {"config": config, "measured_gflops": winner["measured_gflops"], "key": key},
+            cache_directory,
+        )
+    return dict(config, cached=False)
+
+
 def tuned_engine_config(
     L: int = 8, dtype: str = "float32", *, cache_directory: str | None = None, **overrides
 ) -> EngineConfig:

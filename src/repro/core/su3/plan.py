@@ -292,6 +292,11 @@ def make_raw_step(
             f"kernel {kernel.name!r} is a nearest-neighbor stencil; it "
             f"dispatches through ExecutionPlan.stencil_step, not a multiply step"
         )
+    if kernel.form == registry.STENCIL_AXPY:
+        raise ValueError(
+            f"kernel {kernel.name!r} is a fused CG iteration body; it "
+            f"dispatches through ExecutionPlan.cg_solve, not a multiply step"
+        )
     if k_iters > 1 and kernel.form == registry.PLANAR and not kernel.supports_fused:
         raise ValueError(f"kernel {kernel.name!r} does not support fused iteration")
     if codec.is_mixed_precision and not kernel.supports_accum_dtype():
@@ -341,6 +346,18 @@ def make_raw_step(
 
 MEGAKERNEL_VARIANT = "pallas_megakernel"
 STENCIL_VARIANT = "pallas_stencil"
+CG_VARIANT = "pallas_cg"
+
+# Default SPD shift of the CG operator A = CG_SHIFT I + S.  Each of the 8
+# stencil terms applies one unitary SU(3) row, so ||S|| <= 8; sigma = 16
+# keeps the symmetric part positive definite with condition number <= 3
+# ((16 + 8) / (16 - 8)), which is what makes the solver a *short*-chain
+# serving workload (O(10) iterations to 1e-6) rather than a batch job.
+# Note the simplified site-local-adjoint stencil is Hermitian exactly when
+# every U_mu is constant along its own direction mu (e.g. uniform or
+# per-direction-constant SU(3) fields) — the family the convergence tier
+# pins; on general fields A is only near-symmetric and CG is best-effort.
+CG_SHIFT = 16.0
 
 
 # -- stencil neighbor geometry ------------------------------------------------
@@ -410,6 +427,96 @@ def init_stencil_canonical(n_sites: int) -> tuple[jax.Array, jax.Array]:
     a, _ = init_canonical(n_sites)
     v = jnp.full((n_sites, layouts.SU3), (1.0 / 24.0) + 0.0j, jnp.complex64)
     return a, v
+
+
+class CGMaxItersError(RuntimeError):
+    """``cg_solve`` exhausted ``max_iters`` without reaching tolerance.
+
+    Raised — never a hang — the Python-level iteration loop is bounded by
+    ``max_iters`` and every residual sync is a finite device fetch.
+    """
+
+    def __init__(self, iterations: int, residual: float, tol: float):
+        super().__init__(
+            f"CG did not converge: relative residual {residual:.3e} > tol "
+            f"{tol:.1e} after {iterations} iterations"
+        )
+        self.iterations = iterations
+        self.residual = residual
+        self.tol = tol
+
+
+@dataclasses.dataclass
+class CGResult:
+    """One CG solve: the planar solution plus its residual history.
+
+    ``residuals[i]`` is the relative residual ``||r|| / ||b||`` after
+    iteration ``i + 1`` — the iterate-by-iterate series the convergence
+    tier pins against :func:`cg_reference_solve`.
+    """
+
+    x_p: jax.Array
+    iterations: int
+    residuals: list[float]
+    converged: bool
+    wall_s: float
+
+
+def stencil_apply_reference(u: jax.Array, v: jax.Array, L: int) -> jax.Array:
+    """Plain-jnp 8-direction stencil on canonical complex arrays.
+
+    ``u (S, 4, 3, 3)`` complex links, ``v (S, 3)`` complex vector field —
+    no planar packing, no Pallas, no neighbor-table sharing with the kernel
+    path beyond the geometry itself: the independent oracle the CG tier
+    pins convergence against.
+    """
+    S = L**4
+    glob, _local, _b = stencil_neighbor_tables(L, S, 1)
+    out = jnp.zeros_like(v)
+    for mu in range(layouts.LINKS):
+        out = out + jnp.einsum("skl,sl->sk", u[:, mu], v[glob[mu]])
+        out = out + jnp.einsum("slk,sl->sk", jnp.conj(u[:, mu]), v[glob[4 + mu]])
+    return out
+
+
+def cg_reference_solve(
+    u: jax.Array,
+    b: jax.Array,
+    L: int,
+    *,
+    tol: float = 1e-6,
+    max_iters: int = 200,
+    sigma: float = CG_SHIFT,
+) -> tuple[jax.Array, list[float], bool]:
+    """Plain-jnp CG on the shifted operator ``A = sigma I + S`` — the
+    convergence-pinning oracle for :meth:`ExecutionPlan.cg_solve`.
+
+    Complex-arithmetic textbook CG on canonical arrays; returns
+    ``(x, relative residuals per iteration, converged)``.  Never raises on
+    exhaustion (the oracle reports, the plan enforces).
+    """
+    apply_j = jax.jit(lambda p: sigma * p + stencil_apply_reference(u, p, L))
+    b_rs = float(jnp.sum(jnp.real(b) ** 2 + jnp.imag(b) ** 2))
+    if b_rs == 0.0:
+        return jnp.zeros_like(b), [], True
+    x = jnp.zeros_like(b)
+    r = b
+    p = b
+    rs = jnp.sum(jnp.real(r) ** 2 + jnp.imag(r) ** 2)
+    residuals: list[float] = []
+    for _ in range(max_iters):
+        ap = apply_j(p)
+        pap = jnp.real(jnp.vdot(p, ap))
+        alpha = rs / pap
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.sum(jnp.real(r) ** 2 + jnp.imag(r) ** 2)
+        residuals.append(float(rs_new / b_rs) ** 0.5)
+        if residuals[-1] <= tol:
+            return x, residuals, True
+        p = r + (rs_new / rs) * p
+        rs = rs_new
+    return x, residuals, False
 
 
 def make_raw_batched_step(
@@ -528,6 +635,8 @@ class ExecutionPlan:
         ] = {}
         self._stencil_tables: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
         self._stencil_parts: dict[str, Any] | None = None
+        self._cg_help: dict[str, Any] | None = None
+        self._cg_applies: dict[tuple[bool, bool], Callable[..., Any]] = {}
         # Phase tracer for the stencil schedule (repro.obs).  Disabled by
         # default: the untraced closures are byte-identical to pre-obs code.
         # When enabled, each schedule phase (exchange / interior / boundary)
@@ -673,8 +782,10 @@ class ExecutionPlan:
             )
         return self._stencil_tables
 
-    def _stencil_kernel_kwargs(self) -> tuple[registry.KernelEntry, dict[str, Any]]:
-        kernel = registry.get_kernel(STENCIL_VARIANT)
+    def _stencil_kernel_kwargs(
+        self, variant: str = STENCIL_VARIANT
+    ) -> tuple[registry.KernelEntry, dict[str, Any]]:
+        kernel = registry.get_kernel(variant)
         if not kernel.supports_layout(self.codec.layout):
             raise ValueError(
                 f"stencil kernel {kernel.name!r} does not support layout "
@@ -1030,6 +1141,26 @@ class ExecutionPlan:
         """Planar stencil output -> canonical complex (n_sites, 3)."""
         return self.codec.unpack_vec(out_p, self.cfg.shape.n_sites)
 
+    def pack_gauge(self, u: jax.Array) -> jax.Array:
+        """Canonical complex ``(n_sites, 4, 3, 3)`` gauge field -> physical
+        packed layout, zero-padded to ``padded_sites``.  Padding sites
+        self-neighbor in the stencil tables and carry zero links, so they
+        contribute nothing to any stencil or CG output."""
+        n = u.shape[0]
+        if n < self.padded_sites:
+            u = jnp.concatenate(
+                [u, jnp.zeros((self.padded_sites - n,) + u.shape[1:], u.dtype)]
+            )
+        return self.codec.pack(u)
+
+    def pack_rhs(self, b: jax.Array) -> jax.Array:
+        """Canonical complex ``(n_sites, 3)`` vector field -> planar
+        ``(2, 3, padded_sites)`` under the plan's vector sharding (zero
+        padding keeps every CG reduction over the padded array exact)."""
+        return jax.device_put(
+            self.codec.pack_vec(b, self.padded_sites), self.vec_sharding
+        )
+
     def verify_stencil(self, out_p: jax.Array) -> bool:
         """Fixed-point check for :meth:`init_stencil_data` inputs: every
         output component must be (1, 0) within the storage dtype's tolerance.
@@ -1056,6 +1187,312 @@ class ExecutionPlan:
             jnp.max(jnp.abs(jnp.real(c) - expected)) < tol
             and jnp.max(jnp.abs(jnp.imag(c))) < tol
         )
+
+    # -- conjugate-gradient solver (fused stencil+axpy iteration) --------------
+
+    def _cg_helpers(self) -> dict[str, Any]:
+        """Jitted scalar/elementwise CG pieces, built once per plan.
+
+        Shared VERBATIM by the fused and composed iteration paths, so the
+        fused-vs-composed bit-identity contract reduces to the kernel-level
+        argument (same f32 expressions on the same operands): alpha, beta,
+        the x/r updates and both global reductions are literally the same
+        compiled programs on both paths.
+        """
+        if self._cg_help is not None:
+            return self._cg_help
+        vec_sh, rep = self.vec_sharding, self.replicated
+        f32 = jnp.float32
+
+        def _rr(v: jax.Array) -> jax.Array:
+            v = v.astype(f32)
+            return jnp.sum(v * v)
+
+        def _dot(a: jax.Array, b: jax.Array) -> jax.Array:
+            return jnp.sum(a.astype(f32) * b.astype(f32))
+
+        def _update(x, r, p, ap, alpha):
+            a = alpha.astype(f32)
+            return (
+                (x.astype(f32) + a * p.astype(f32)).astype(x.dtype),
+                (r.astype(f32) - a * ap.astype(f32)).astype(r.dtype),
+            )
+
+        def _axpy(r, beta, p):  # composed-path search-direction update
+            return (r.astype(f32) + beta.astype(f32) * p.astype(f32)).astype(r.dtype)
+
+        def _shift(p, sigma, s):  # composed-path shifted apply epilogue
+            return (
+                sigma.astype(f32) * p.astype(f32) + s.astype(f32)
+            ).astype(p.dtype)
+
+        def _coef(beta, sigma):
+            return jnp.stack(
+                [jnp.asarray(beta, f32), jnp.asarray(sigma, f32)]
+            ).reshape(1, 2)
+
+        self._cg_help = {
+            "rr": jax.jit(_rr, out_shardings=rep),
+            "dot": jax.jit(_dot, out_shardings=rep),
+            "update": jax.jit(_update, out_shardings=(vec_sh, vec_sh)),
+            "axpy": jax.jit(_axpy, out_shardings=vec_sh),
+            "shift": jax.jit(_shift, out_shardings=vec_sh),
+            "scal": jax.jit(lambda num, den: num / den, out_shardings=rep),
+            "coef": jax.jit(_coef, out_shardings=rep),
+            "init": jax.jit(
+                lambda b: (jnp.zeros_like(b), b, b),
+                out_shardings=(vec_sh, vec_sh, vec_sh),
+            ),
+        }
+        return self._cg_help
+
+    def _cg_apply(self, fused: bool, overlap: bool) -> Callable[..., Any]:
+        """The per-iteration apply ``(u_phys, r_p, p_p, coefs) -> (p', ap)``
+        with ``p' = r + beta p`` and ``ap = sigma p' + S(p')``.
+
+        fused=True: ONE pallas_call per pass — the search-direction axpy is
+        formed on the gathered (r, p) neighbor tiles in VMEM and the raw
+        apply S(p') lands in the same pass (``registry.STENCIL_AXPY`` form);
+        the sigma shift then runs in the SAME shared jitted program as the
+        composed path, which is what pins f32 iterates bit-identical
+        (an in-kernel shift FMA-contracts differently across programs).
+        On a multi-host mesh with ``overlap`` the pass splits into the same
+        exchange / interior / boundary schedule as ``stencil_step`` — the
+        ±t ghosts of BOTH r and p ship first, the slab-local fused pass
+        overlaps the transfer (p' is elementwise, so the interior pass's p'
+        is already exact everywhere; only ap needs the boundary scatter).
+
+        fused=False: the composed oracle — the shared jitted axpy, then
+        ``stencil_step(overlap)``, then the shared shift epilogue.  At f32
+        storage its iterates are pinned bit-identical to the fused path.
+        """
+        key = (bool(fused), bool(overlap))
+        if key in self._cg_applies:
+            return self._cg_applies[key]
+        plan = self
+        h = self._cg_helpers()
+
+        if not fused:
+            step = self.stencil_step(overlap=overlap)
+
+            def composed(u_phys, r_p, p_p, coefs):
+                beta, sigma = coefs[0, 0], coefs[0, 1]
+                p_new = h["axpy"](r_p, beta, p_p)
+                return p_new, h["shift"](p_new, sigma, step(u_phys, p_new))
+
+            self._cg_applies[key] = composed
+            return composed
+
+        kernel, kw = self._stencil_kernel_kwargs(CG_VARIANT)
+        glob, local, bidx = self._stencil_geometry()
+        codec, tile = self.codec, self.cfg.tile
+        vec_sh = self.vec_sharding
+        n_boundary = int(bidx.size)
+        gather_idx = local if (overlap and n_boundary) else glob
+
+        def whole_fn(u_phys, r_p, p_p, coefs):
+            r_nbr = jnp.moveaxis(r_p[:, :, gather_idx], 2, 0)  # (8, 2, 3, S)
+            p_nbr = jnp.moveaxis(p_p[:, :, gather_idx], 2, 0)
+            return kernel.fn(
+                codec.planar_view(u_phys), r_nbr, p_nbr, r_p, p_p, coefs, **kw
+            )
+
+        whole_j = jax.jit(whole_fn, out_shardings=(vec_sh, vec_sh))
+
+        if not (overlap and n_boundary):
+            # single shard (or overlap off): the periodic/local gather is one
+            # fused pass; nothing to exchange
+            def fused_whole(u_phys, r_p, p_p, coefs):
+                tr = plan.tracer
+                if not tr.enabled:
+                    p_new, s = whole_j(u_phys, r_p, p_p, coefs)
+                    return p_new, h["shift"](p_new, coefs[0, 1], s)
+                with tr.span("cg.interior"):
+                    p_new, s = jax.block_until_ready(
+                        whole_j(u_phys, r_p, p_p, coefs))
+                return p_new, h["shift"](p_new, coefs[0, 1], s)
+
+            self._cg_applies[key] = fused_whole
+            return fused_whole
+
+        # overlap schedule: same geometry as _stencil_overlap_parts, but the
+        # exchange ships BOTH fields' ±t ghosts (p' at the boundary is
+        # r_ghost + beta p_ghost — computed in-kernel, never exchanged);
+        # the boundary pass scatters the RAW apply S(p') and the sigma shift
+        # runs once on the merged array via the shared epilogue
+        ghost_fwd_idx, ghost_bwd_idx = glob[3][bidx], glob[7][bidx]
+        xyz_idx = glob[(0, 1, 2, 4, 5, 6), :][:, bidx]
+        pad = (-n_boundary) % tile
+
+        def exchange_fn(r_p, p_p):
+            return (
+                r_p[:, :, ghost_fwd_idx], r_p[:, :, ghost_bwd_idx],
+                p_p[:, :, ghost_fwd_idx], p_p[:, :, ghost_bwd_idx],
+            )
+
+        def boundary_fn(u_phys, r_p, p_p, r_gf, r_gb, p_gf, p_gb, coefs, s_i):
+            u_b = codec.planar_view(u_phys)[:, :, bidx]  # (2, 36|24, B)
+            r6 = jnp.moveaxis(r_p[:, :, xyz_idx], 2, 0)  # (6, 2, 3, B)
+            p6 = jnp.moveaxis(p_p[:, :, xyz_idx], 2, 0)
+            r_nbr = jnp.concatenate(
+                [r6[:3], r_gf[None], r6[3:], r_gb[None]], axis=0
+            )
+            p_nbr = jnp.concatenate(
+                [p6[:3], p_gf[None], p6[3:], p_gb[None]], axis=0
+            )
+            r_b, p_b = r_p[:, :, bidx], p_p[:, :, bidx]
+            if pad:
+                u_b = jnp.pad(u_b, ((0, 0), (0, 0), (0, pad)))
+                r_nbr = jnp.pad(r_nbr, ((0, 0), (0, 0), (0, 0), (0, pad)))
+                p_nbr = jnp.pad(p_nbr, ((0, 0), (0, 0), (0, 0), (0, pad)))
+                r_b = jnp.pad(r_b, ((0, 0), (0, 0), (0, pad)))
+                p_b = jnp.pad(p_b, ((0, 0), (0, 0), (0, pad)))
+            _p_new_b, s_b = kernel.fn(u_b, r_nbr, p_nbr, r_b, p_b, coefs, **kw)
+            return s_i.at[:, :, bidx].set(s_b[:, :, :n_boundary])
+
+        exchange_j = jax.jit(exchange_fn)
+        boundary_j = jax.jit(boundary_fn, out_shardings=vec_sh)
+
+        def fused_overlapped(u_phys, r_p, p_p, coefs):
+            tr = plan.tracer
+            if not tr.enabled:
+                ghosts = exchange_j(r_p, p_p)  # ±t transfer in flight
+                p_new, s_i = whole_j(u_phys, r_p, p_p, coefs)  # slab-local
+                s = boundary_j(u_phys, r_p, p_p, *ghosts, coefs, s_i)
+                return p_new, h["shift"](p_new, coefs[0, 1], s)
+            with tr.span("cg.exchange"):
+                ghosts = jax.block_until_ready(exchange_j(r_p, p_p))
+            with tr.span("cg.interior"):
+                p_new, s_i = jax.block_until_ready(whole_j(u_phys, r_p, p_p, coefs))
+            with tr.span("cg.boundary"):
+                s = jax.block_until_ready(
+                    boundary_j(u_phys, r_p, p_p, *ghosts, coefs, s_i))
+            return p_new, h["shift"](p_new, coefs[0, 1], s)
+
+        self._cg_applies[key] = fused_overlapped
+        return fused_overlapped
+
+    def cg_state_init(self, b_p: jax.Array) -> dict[str, Any]:
+        """Initial CG state for planar right-hand side ``b_p``: x = 0,
+        r = b, p-seed = b, beta = 0 — the first :meth:`cg_iterate` then
+        forms ``p_1 = r + 0 p = b``, the textbook start."""
+        h = self._cg_helpers()
+        x, r, p = h["init"](b_p)
+        return {
+            "x": x, "r": r, "p": p, "rs": h["rr"](r),
+            "beta": jnp.float32(0.0), "iterations": 0,
+        }
+
+    def cg_iterate(
+        self,
+        u_phys: jax.Array,
+        state: dict[str, Any],
+        *,
+        sigma: float = CG_SHIFT,
+        fused: bool = True,
+        overlap: bool | None = None,
+    ) -> dict[str, Any]:
+        """Advance the CG state by ONE iteration; everything stays device-
+        resident.  The caller decides when to sync on ``state["rs"]`` (the
+        global residual reduction): ``cg_solve`` fetches it one iteration
+        late, so the reduce's host round trip overlaps the next iteration's
+        interior pass; the serving layer syncs per scheduling turn.
+        """
+        if overlap is None:
+            overlap = self.is_multi_host
+        h = self._cg_helpers()
+        apply_fn = self._cg_apply(fused, bool(overlap))
+        coefs = h["coef"](state["beta"], sigma)
+        p, ap = apply_fn(u_phys, state["r"], state["p"], coefs)
+        alpha = h["scal"](state["rs"], h["dot"](p, ap))
+        x, r = h["update"](state["x"], state["r"], p, ap, alpha)
+        rs_new = h["rr"](r)
+        return {
+            "x": x, "r": r, "p": p, "rs": rs_new,
+            "beta": h["scal"](rs_new, state["rs"]),
+            "iterations": state["iterations"] + 1,
+        }
+
+    def cg_solve(
+        self,
+        u_phys: jax.Array,
+        b_p: jax.Array,
+        *,
+        tol: float = 1e-6,
+        max_iters: int = 200,
+        sigma: float = CG_SHIFT,
+        fused: bool = True,
+        overlap: bool | None = None,
+    ) -> CGResult:
+        """Conjugate gradients on ``A = sigma I + S`` to ``||r|| <= tol ||b||``.
+
+        The flagship iterative workload: each iteration is one fused
+        stencil+axpy pallas pass (``fused=True``; ``fused=False`` composes
+        ``stencil_step`` + the shared axpy — the bit-identity oracle) plus
+        the shared scalar updates.  Convergence is checked one iteration
+        LATE: iteration ``i+1`` is dispatched before iteration ``i``'s
+        residual scalar is pulled to the host, so the global reduction
+        (``cg.reduce`` span) overlaps the in-flight interior pass — the CG
+        analogue of the stencil's exchange/interior overlap.  At most one
+        extra iteration is dispatched past convergence.
+
+        Args:
+            u_phys: the plan's physical gauge lattice (``init_data`` /
+                ``codec.pack`` form, padded to ``padded_sites``).
+            b_p: planar right-hand side ``(2, 3, padded_sites)``
+                (``codec.pack_vec``), sharded like :attr:`vec_sharding`.
+            tol: relative residual target.
+            max_iters: hard bound; exhaustion RAISES :class:`CGMaxItersError`
+                (never hangs — the loop is host-bounded).
+            sigma: SPD shift (see :data:`CG_SHIFT`).
+            fused / overlap: iteration body selection, as above.
+
+        Raises:
+            CGMaxItersError: tolerance not reached within ``max_iters``.
+        """
+        tr = self.tracer
+        h = self._cg_helpers()
+        t0 = time.perf_counter()
+        b_rs = float(jax.device_get(h["rr"](b_p)))
+        if b_rs == 0.0:
+            x, _r, _p = h["init"](b_p)
+            return CGResult(x_p=x, iterations=0, residuals=[], converged=True,
+                            wall_s=time.perf_counter() - t0)
+        stop2 = (tol * tol) * b_rs
+        state = self.cg_state_init(b_p)
+        residuals: list[float] = []
+        prev: tuple[jax.Array, jax.Array] | None = None  # (x_i, rs_i)
+        for i in range(1, max_iters + 1):
+            if tr.enabled:
+                # traced: the iter span blocks so it measures the iteration —
+                # tracing synchronizes, as with the stencil schedule spans
+                with tr.span("cg.iter", it=i, fused=bool(fused)):
+                    state = self.cg_iterate(
+                        u_phys, state, sigma=sigma, fused=fused, overlap=overlap)
+                    jax.block_until_ready(state["rs"])
+            else:
+                state = self.cg_iterate(
+                    u_phys, state, sigma=sigma, fused=fused, overlap=overlap)
+            if prev is not None:
+                # lagged check: iteration i is already in flight; this fetch
+                # is the previous iteration's global reduce landing
+                if tr.enabled:
+                    with tr.span("cg.reduce", it=i - 1):
+                        rs_host = float(jax.device_get(prev[1]))
+                else:
+                    rs_host = float(jax.device_get(prev[1]))
+                residuals.append((rs_host / b_rs) ** 0.5)
+                if rs_host <= stop2:
+                    return CGResult(
+                        x_p=prev[0], iterations=i - 1, residuals=residuals,
+                        converged=True, wall_s=time.perf_counter() - t0)
+            prev = (state["x"], state["rs"])
+        rs_host = float(jax.device_get(prev[1]))
+        residuals.append((rs_host / b_rs) ** 0.5)
+        if rs_host <= stop2:
+            return CGResult(x_p=prev[0], iterations=max_iters, residuals=residuals,
+                            converged=True, wall_s=time.perf_counter() - t0)
+        raise CGMaxItersError(max_iters, (rs_host / b_rs) ** 0.5, tol)
 
     # -- placement policies ----------------------------------------------------
 

@@ -24,6 +24,13 @@ enough metadata for a plan to validate and wire a kernel without per-kernel
       nearest-neighbor Dslash-style operator.  Consumed only by
       ``ExecutionPlan.stencil_step`` / ``stencil_reference_step`` — a
       stencil kernel cannot serve as a plan's multiply ``step``.
+      ``"stencil_axpy"`` — fn(u_p, r_nbr, p_nbr, r_p, p_p, coefs, *, tile,
+      interpret, accum_dtype?) -> (p_new, s): one fused conjugate-gradient
+      iteration body — the search-direction axpy ``p' = r + beta p`` formed
+      on the resident neighbor tiles plus the raw stencil apply ``S(p')``
+      in the same pallas_call.  The sigma shift ``ap = sigma p' + S(p')``
+      runs in the plan's shared epilogue program (bit-identity contract).
+      Consumed only by ``ExecutionPlan.cg_solve`` / ``cg_iterate``.
   ``layouts``
       which physical layouts the kernel can be planned with.
   ``backends``
@@ -48,6 +55,7 @@ CANONICAL = "canonical"
 PLANAR = "planar"
 BATCHED = "batched"
 STENCIL = "stencil"
+STENCIL_AXPY = "stencil_axpy"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,7 +137,7 @@ def register_kernel(
     Raises:
         ValueError: on an unknown ``form``.
     """
-    if form not in (CANONICAL, PLANAR, BATCHED, STENCIL):
+    if form not in (CANONICAL, PLANAR, BATCHED, STENCIL, STENCIL_AXPY):
         raise ValueError(f"unknown kernel form {form!r}")
 
     def deco(fn: Callable) -> Callable:

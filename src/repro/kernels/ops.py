@@ -123,6 +123,39 @@ def su3_stencil_planar(
     )
 
 
+@registry.register_kernel(
+    "pallas_cg",
+    layouts=(Layout.SOA, Layout.AOSOA),
+    backends=("pallas",),
+    form=registry.STENCIL_AXPY,
+    supports_accum=True,
+    supports_compressed=True,
+)
+def su3_cg_fused_planar(
+    u_p: jax.Array,
+    r_nbr: jax.Array,
+    p_nbr: jax.Array,
+    r_p: jax.Array,
+    p_p: jax.Array,
+    coefs: jax.Array,
+    *,
+    tile: int = DEFAULT_TILE,
+    interpret: bool | None = None,
+    accum_dtype: str | None = None,
+    compressed: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused CG iteration entry: u_p (2, 36 | 24, S) links, (r_nbr, p_nbr)
+    (8, 2, 3, S) gathered neighbors, (r_p, p_p) (2, 3, S) planar vectors,
+    coefs (1, 2) [beta, sigma] -> (p_new, S(p_new)); the sigma shift runs
+    in the plan's shared epilogue, not in-kernel."""
+    if interpret is None:
+        interpret = _use_interpret()
+    return su3_stencil.su3_cg_fused_planar(
+        u_p, r_nbr, p_nbr, r_p, p_p, coefs, tile=tile, interpret=interpret,
+        accum_dtype=accum_dtype, compressed=compressed,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def su3_mult(
     a: jax.Array, b: jax.Array, *, tile: int = DEFAULT_TILE, interpret: bool | None = None

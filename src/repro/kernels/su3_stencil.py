@@ -171,6 +171,133 @@ def su3_stencil_planar(
     )(u, v_nbr)
 
 
+# -- fused CG iteration kernel (stencil + search-direction axpy) --------------
+#
+# One conjugate-gradient iteration on the shifted operator A = sigma I + S
+# spends most of its bytes re-reading the vector fields: the composed form
+# materializes p' = r + beta p (one full read+write pass), gathers p' 's
+# neighbors, then runs the stencil.  The fused kernel folds the axpy INTO the
+# stencil pallas_call: the gathered neighbor tiles arrive as (r_nbr, p_nbr)
+# pairs and the kernel forms p'_nbr = r_nbr + beta p_nbr in VMEM registers,
+# so p' is never written to and re-read from HBM as a standalone pass, and
+# the shifted apply ap = sigma p' + S(p') lands in the same epilogue.
+#
+# Bit-identity contract (the fused-vs-composed regression tier): gathering is
+# indexing, so gather(r + beta p) == gather(r) + beta gather(p) ELEMENTWISE,
+# and at f32 storage every fused expression (the axpy, the fixed-order
+# stencil chain, the shift-add) is the same f32 op on the same operands as
+# the composed path — the iterates match bit for bit.  Mixed-precision plans
+# round at different points (the fused path rounds ap once, the composed
+# path rounds S before the shift-add), so only f32 is pinned bitwise.
+
+CG_COEFS = 2  # coefficient block columns: [beta, sigma]
+
+# fused-iteration extra flops per site on top of the 576-flop stencil chain:
+# 6 real words per color 3-vector, so each axpy/shift/dot costs 12 flops/site
+# (6 mul + 6 add).  Per CG iteration: shift (12), x += alpha p (12),
+# r -= alpha ap (12), p = r + beta p (12), <p, Ap> (12), <r, r> (12).
+CG_ITER_FLOPS_PER_SITE = STENCIL_FLOPS_PER_SITE + 72
+
+
+def _su3_cg_fused_kernel(
+    u_ref, rn_ref, pn_ref, r_ref, p_ref, c_ref, pnew_ref, s_ref,
+    *, accum_dtype: str | None = None, compressed: bool = False,
+):
+    """One grid step of the fused CG iteration.
+
+    Forms the new search direction p' = r + beta p on the resident center
+    AND neighbor tiles, then runs the fixed-order stencil chain on p'_nbr
+    and writes S(p') next to p' — the axpy and the operator apply share one
+    HBM round trip.  The sigma shift-add deliberately stays OUT of the
+    kernel: it runs in the plan's shared jitted epilogue for both the fused
+    and composed paths, because an in-kernel ``sigma p' + chain`` gets
+    FMA-contracted differently than the composed path's separate shift
+    program and breaks the f32 bit-identity contract (observed at ~2 ulp).
+    """
+    u = u_ref[...]        # (2, 36 | 24, tile)
+    r_nbr = rn_ref[...]   # (8, 2, 3, tile)
+    p_nbr = pn_ref[...]
+    r = r_ref[...]        # (2, 3, tile)
+    p = p_ref[...]
+    if accum_dtype is not None:
+        u = u.astype(accum_dtype)
+        r_nbr = r_nbr.astype(accum_dtype)
+        p_nbr = p_nbr.astype(accum_dtype)
+        r = r.astype(accum_dtype)
+        p = p.astype(accum_dtype)
+    if compressed:
+        u = _expand_tile(u)
+    beta = c_ref[0, 0].astype(p.dtype)
+    p_new = r + beta * p
+    v_nbr = r_nbr + beta * p_nbr  # == gather(p_new): gathers are indexing
+    pnew_ref[...] = p_new.astype(pnew_ref.dtype)
+    s_ref[...] = _stencil_tile(u, v_nbr).astype(s_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "interpret", "accum_dtype", "compressed")
+)
+def su3_cg_fused_planar(
+    u: jax.Array,
+    r_nbr: jax.Array,
+    p_nbr: jax.Array,
+    r_p: jax.Array,
+    p_p: jax.Array,
+    coefs: jax.Array,
+    *,
+    tile: int = 512,
+    interpret: bool = False,
+    accum_dtype: str | None = None,
+    compressed: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused CG iteration kernel: ``(p', S(p'))`` in one pass.
+
+    u:            (2, 36 | 24, S) planar gauge links (two-row when compressed)
+    r_nbr, p_nbr: (8, 2, 3, S) direction-major shifted neighbors of r and p
+    r_p, p_p:     (2, 3, S) planar residual / old search direction
+    coefs:        (1, 2) float32 [beta, sigma] — data, not static, so the
+                  compiled program serves every iteration of every solve.
+                  Only beta is consumed in-kernel; sigma rides along for the
+                  plan's shared shift epilogue ``ap = sigma p' + S(p')``,
+                  which runs OUTSIDE the kernel so the fused and composed
+                  paths round identically (f32 bit-identity contract).
+    -> (p_new, s): both (2, 3, S) in the storage dtype.
+    """
+    rows = COMP_ROWS if compressed else ROWS
+    assert u.ndim == 3 and u.shape[:2] == (2, rows), (u.shape, compressed)
+    n_sites = u.shape[2]
+    assert r_nbr.shape == (NBR_DIRS, 2, SU3, n_sites), (r_nbr.shape, n_sites)
+    assert p_nbr.shape == (NBR_DIRS, 2, SU3, n_sites), (p_nbr.shape, n_sites)
+    assert r_p.shape == (2, SU3, n_sites), (r_p.shape, n_sites)
+    assert p_p.shape == (2, SU3, n_sites), (p_p.shape, n_sites)
+    assert coefs.shape == (1, CG_COEFS), coefs.shape
+    assert n_sites % tile == 0, (n_sites, tile)
+    grid = (n_sites // tile,)
+    return pl.pallas_call(
+        functools.partial(
+            _su3_cg_fused_kernel, accum_dtype=accum_dtype, compressed=compressed
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2, rows, tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((NBR_DIRS, 2, SU3, tile), lambda i: (0, 0, 0, i)),
+            pl.BlockSpec((NBR_DIRS, 2, SU3, tile), lambda i: (0, 0, 0, i)),
+            pl.BlockSpec((2, SU3, tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((2, SU3, tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((1, CG_COEFS), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((2, SU3, tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((2, SU3, tile), lambda i: (0, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((2, SU3, n_sites), u.dtype),
+            jax.ShapeDtypeStruct((2, SU3, n_sites), u.dtype),
+        ],
+        interpret=interpret,
+    )(u, r_nbr, p_nbr, r_p, p_p, coefs)
+
+
 def stencil_vmem_bytes(
     tile: int, word_bytes: int = 4, accum_word_bytes: int | None = None
 ) -> int:
@@ -182,3 +309,19 @@ def stencil_vmem_bytes(
     """
     w = max(word_bytes, accum_word_bytes or word_bytes)
     return STENCIL_WORDS_PER_SITE * tile * w
+
+
+# extra resident words/site of the fused CG grid step over the plain stencil:
+# the SECOND gathered neighbor field (p alongside r), the two center vectors,
+# and the second output (p' next to S(p'))
+CG_EXTRA_WORDS_PER_SITE = NBR_DIRS * 2 * SU3 + 3 * (2 * SU3)
+
+
+def cg_vmem_bytes(
+    tile: int, word_bytes: int = 4, accum_word_bytes: int | None = None
+) -> int:
+    """Working-set estimate for one fused CG grid step — the stencil tile
+    set plus the second gathered field and the extra vector tiles; the VMEM
+    bound the autotuner gates CG candidates on."""
+    w = max(word_bytes, accum_word_bytes or word_bytes)
+    return (STENCIL_WORDS_PER_SITE + CG_EXTRA_WORDS_PER_SITE) * tile * w

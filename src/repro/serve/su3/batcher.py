@@ -63,17 +63,25 @@ class ServeRequest:
     operator, with ``a`` the canonical gauge lattice and ``b`` the canonical
     color-vector field (n_sites, 3); ``k`` is always 1 (the stencil is not
     chained — its output is a vector field, not a lattice).
+    ``kind="solve"``: a staggered CG solve ``(sigma I + S) x = b`` with
+    ``a`` the canonical gauge lattice and ``b`` the canonical right-hand
+    side (n_sites, 3); ``tol``/``max_iters`` bound the solver and the
+    request's iteration count is DATA-DEPENDENT — the service advances it a
+    few CG iterations per scheduling turn and it retires mid-chain the turn
+    its residual crosses tol.
     """
 
     req_id: int
     a: Any  # canonical complex (n_sites, 4, 3, 3)
-    b: Any  # canonical complex (4, 3, 3) | (n_sites, 3) for kind="stencil"
+    b: Any  # canonical complex (4, 3, 3) | (n_sites, 3) for stencil/solve
     L: int
     k: int
     arrival_s: float = 0.0  # perf_counter timestamp at admission
-    kind: str = "multiply"  # "multiply" | "stencil"
+    kind: str = "multiply"  # "multiply" | "stencil" | "solve"
     seated_s: float = 0.0  # perf_counter timestamp when seated in a slot/batch
     # (0.0 until seated; the request-lifecycle span derives queue_wait from it)
+    tol: float = 0.0  # solve: relative-residual convergence target
+    max_iters: int = 0  # solve: iteration cap (retires unconverged at cap)
 
     @property
     def n_sites(self) -> int:
@@ -158,6 +166,10 @@ class DynamicBatcher:
         # stencil requests coalesce by L only (no chain depth); they never
         # ride multiply chains, so they live in their own queue family
         self._stencil: "OrderedDict[int, list[ServeRequest]]" = OrderedDict()
+        # solve requests also queue by L; the service advances ONE active
+        # solve per host a few CG iterations per turn, so this family feeds
+        # that seat oldest-first
+        self._solve: "OrderedDict[int, list[ServeRequest]]" = OrderedDict()
         self._depth = 0
 
     def __len__(self) -> int:
@@ -174,20 +186,38 @@ class DynamicBatcher:
         """Waiting stencil requests per lattice size."""
         return {L: len(q) for L, q in self._stencil.items() if q}
 
+    def solve_depths(self) -> dict[int, int]:
+        """Waiting solve requests per lattice size."""
+        return {L: len(q) for L, q in self._solve.items() if q}
+
     def submit(self, req: ServeRequest) -> bool:
         """Admit a request; False under backpressure (queue budget exhausted).
-        Multiply requests bucket by (L, k); stencil requests by L alone —
-        both draw on the one queue-depth budget."""
+        Multiply requests bucket by (L, k); stencil and solve requests by L
+        alone — all three families draw on the one queue-depth budget."""
         if self._depth >= self.cfg.max_queue_depth:
             return False
         if not req.arrival_s:
             req.arrival_s = time.perf_counter()
         if req.kind == "stencil":
             self._stencil.setdefault(req.L, []).append(req)
+        elif req.kind == "solve":
+            self._solve.setdefault(req.L, []).append(req)
         else:
             self._buckets.setdefault(req.bucket, []).append(req)
         self._depth += 1
         return True
+
+    def next_solve(self) -> ServeRequest | None:
+        """Pop the oldest waiting solve request (across lattice sizes) —
+        the service seats it as the host's active solve.  Solves never
+        coalesce: each carries its own data-dependent iteration count."""
+        live = [(L, q) for L, q in self._solve.items() if q]
+        if not live:
+            return None
+        L, queue = min(live, key=lambda kv: kv[1][0].arrival_s)
+        req = queue.pop(0)
+        self._depth -= 1
+        return req
 
     def next_stencil_batch(self) -> CoalescedBatch | None:
         """Coalesce up to ``max_batch`` stencil requests of the most urgent

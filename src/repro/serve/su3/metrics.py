@@ -68,6 +68,9 @@ class ServiceMetrics:
     # boundaries); dispatches/iterations is the dispatch-amortization figure
     # the megakernel path drives to 1.0 per host
     host_iterations: dict = dataclasses.field(default_factory=dict)  # host -> n
+    kind_iterations: dict = dataclasses.field(default_factory=dict)  # kind -> n
+    # per-kind iteration counts: "multiply"/"stencil" turns vs "solve" CG
+    # iterations — the traffic mix's iteration bill by request family
 
     def reset(self) -> None:
         """Zero every counter and restart the wall clock (post-warmup)."""
@@ -106,11 +109,15 @@ class ServiceMetrics:
     def record_midchain_admits(self, n: int = 1) -> None:
         self.midchain_admits += n
 
-    def record_iteration(self, host: int = 0) -> None:
-        """Account one iteration boundary (continuous/megakernel scheduling
-        turn) for ``host`` — the denominator of dispatches-per-iteration."""
-        self.iterations += 1
-        self.host_iterations[host] = self.host_iterations.get(host, 0) + 1
+    def record_iteration(self, host: int = 0, kind: str = "multiply",
+                         n: int = 1) -> None:
+        """Account ``n`` iteration boundaries (continuous/megakernel
+        scheduling turns, or solver CG iterations) of ``kind`` for ``host``
+        — the denominator of dispatches-per-iteration, split per request
+        family in ``kind_iterations``."""
+        self.iterations += n
+        self.host_iterations[host] = self.host_iterations.get(host, 0) + n
+        self.kind_iterations[kind] = self.kind_iterations.get(kind, 0) + n
 
     def record_completion(self, latency_s: float) -> None:
         self.completed += 1
@@ -156,6 +163,7 @@ class ServiceMetrics:
                 self.dispatches / self.iterations, 3
             ) if self.iterations else 0.0,
             "host_dispatches": {str(h): n for h, n in sorted(self.host_dispatches.items())},
+            "kind_iterations": {k: n for k, n in sorted(self.kind_iterations.items())},
             "queue_depth_max": int(self.queue_depths.max_or(0)),
             "queue_depth_mean": round(self.queue_depths.mean(), 3),
             "busy_s": round(self.busy_s, 4),

@@ -32,6 +32,17 @@ warm runner pool.  They coalesce into one vmapped stencil dispatch per
 scheduling turn and return canonical vector fields; they never join multiply
 chains in any dispatch mode.
 
+Solve requests (``submit_solve``) are the flagship iterative workload: a
+staggered CG solve ``(sigma I + S) x = b`` through the plan's fused
+stencil+axpy iteration (``ExecutionPlan.cg_state_init`` / ``cg_iterate``).
+Each host runs ONE active solve at a time, advanced
+``solve_iters_per_step`` CG iterations per scheduling turn — its iteration
+count is data-dependent, so it retires *mid-chain* the turn its residual
+crosses tol (or at ``max_iters``), freeing its seat and queue budget while
+multiply chains are still in flight.  When a host has several kinds
+pending, turns rotate multiply → stencil → solve so no sustained stream of
+one kind starves the others.
+
 Dispatch modes
 --------------
 ``batch-per-step`` (default): one ``step()`` call dispatches one coalesced
@@ -72,7 +83,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import autotune
 from repro.core.su3.layouts import Layout
 from repro.core.su3.plan import BatchedLatticeRunner, EngineConfig
-from repro.kernels.su3_stencil import STENCIL_FLOPS_PER_SITE
+from repro.kernels.su3_stencil import (
+    CG_ITER_FLOPS_PER_SITE,
+    STENCIL_FLOPS_PER_SITE,
+)
 from repro.launch.mesh import MeshSpec
 from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.serve.su3.batcher import (
@@ -137,6 +151,10 @@ class ServiceConfig:
             admission boundaries; 1 re-opens admission at every multiply,
             larger values amortize more dispatches per request at the cost
             of admission latency.
+        solve_iters_per_step: CG iterations the host's active solve advances
+            per scheduling turn; small values re-open kind rotation (and
+            thus multiply/stencil service) more often, large values amortize
+            more solver work per turn at the cost of mix latency.
     """
 
     dtype: str = "float32"  # storage dtype of every plan in the pool
@@ -153,6 +171,7 @@ class ServiceConfig:
     chain_slots: int = 0  # continuous-chain slots; 0 = padded max_batch
     megakernel: bool = False  # one batched dispatch/host/iteration (continuous)
     chain_horizon: int = 1  # megakernel in-kernel chain depth between boundaries
+    solve_iters_per_step: int = 4  # CG iterations per solve scheduling turn
 
     def __post_init__(self) -> None:
         # the pool serves the planar Pallas kernel; AOS has no planar view,
@@ -183,6 +202,11 @@ class ServiceConfig:
             )
         if self.chain_horizon < 1:
             raise ValueError(f"chain_horizon must be >= 1, got {self.chain_horizon}")
+        if self.solve_iters_per_step < 1:
+            raise ValueError(
+                f"solve_iters_per_step must be >= 1, got "
+                f"{self.solve_iters_per_step}"
+            )
 
 
 class _ChainArrays:
@@ -309,9 +333,14 @@ class SU3Service:
         self._results: dict[int, jax.Array] = {}
         # (host, L, dtype, layout, tile) -> jitted vmapped stencil dispatch
         self._stencil_steps: dict[tuple, Any] = {}
-        # per-host kind fairness: True when the host's LAST turn served a
-        # stencil batch (next turn with both kinds pending serves multiplies)
-        self._stencil_served_last: dict[int, bool] = {}
+        # per-host kind fairness: the kind the host's LAST turn served; the
+        # next turn serves the first pending kind strictly after it in the
+        # multiply -> stencil -> solve rotation, so no sustained stream of
+        # one kind starves the others
+        self._last_kind: dict[int, str] = {}
+        # per-host active solve: ONE data-dependent CG solve advanced a few
+        # iterations per scheduling turn (kind="solve" seat)
+        self._solves: dict[int, dict[str, Any]] = {}
         self._awaited: set[int] = set()  # ids owned by pending arun callers
         self._seen_shapes: set[tuple] = set()
         self._next_id = 0
@@ -567,10 +596,66 @@ class SU3Service:
                 kind="stencil", L=L, k=1, host=host, queue_depth=depth + 1)
         return req.req_id
 
+    def submit_solve(self, u: jax.Array, b: jax.Array, tol: float = 1e-6,
+                     max_iters: int = 200) -> int | None:
+        """Queue one staggered CG solve ``(sigma I + S) x = b`` on its home
+        host.
+
+        Args:
+            u: canonical complex gauge lattice ``(L**4, 4, 3, 3)``.
+            b: canonical complex right-hand side ``(L**4, 3)``.
+            tol: relative-residual target ``||r|| <= tol ||b||``.
+            max_iters: iteration cap; the request retires (best iterate
+                delivered) rather than spinning past it.
+
+        Returns:
+            A request id (result: the canonical ``(L**4, 3)`` solution
+            field), or None under backpressure — same contract as
+            :meth:`submit`.  The solve rides the SAME warm pool, locality
+            router, and per-host batcher; its iteration count is
+            data-dependent, so it advances ``solve_iters_per_step`` CG
+            iterations per scheduling turn through the fused stencil+axpy
+            kernel and retires mid-chain when the residual crosses tol.
+        """
+        L = self._infer_L(u)
+        if b.shape != (L**4, 3):
+            raise ValueError(
+                f"solve right-hand side must be (L**4, 3) canonical complex "
+                f"matching the lattice, got {b.shape} for L={L}"
+            )
+        if tol < 0:
+            raise ValueError(f"tol must be >= 0, got {tol}")
+        if max_iters < 1:
+            raise ValueError(f"max_iters must be >= 1, got {max_iters}")
+        host = self.router.host_for(L)
+        depth = self.queued()
+        req = ServeRequest(
+            req_id=self._next_id, a=u, b=b, L=L, k=1,
+            arrival_s=time.perf_counter(), kind="solve",
+            tol=tol, max_iters=max_iters,
+        )
+        if not self._batchers[host].submit(req):
+            self.metrics.record_reject()
+            return None
+        # nominal admission charge: a typical shifted-CG iteration count;
+        # the true data-dependent bill is charged per dispatched chunk
+        self.router.record_load(
+            host, float(CG_ITER_FLOPS_PER_SITE) * req.n_sites * 10
+        )
+        self._next_id += 1
+        self.metrics.record_admit(depth + 1)
+        if self.tracer.enabled:
+            self.tracer.event(
+                "admit", lane=_request_lane(req.req_id), req_id=req.req_id,
+                kind="solve", L=L, k=1, host=host, queue_depth=depth + 1)
+        return req.req_id
+
     # -- dispatch ------------------------------------------------------------
 
     def _work_pending(self) -> bool:
         if any(len(b) for b in self._batchers):
+            return True
+        if self._solves:
             return True
         if any(chain.live for chain, _ in self._chains.values()):
             return True
@@ -590,28 +675,45 @@ class SU3Service:
         requests into that host's in-flight chains at this iteration
         boundary, then advance each of its live chains by ONE iteration.
         Stencil requests (any mode) dispatch as their own coalesced vmapped
-        batch; when a host has BOTH kinds pending, turns alternate between
-        them (a sustained stencil stream must not starve admitted multiply
-        chains, nor vice versa) — they never join chains.
+        batch; solve requests advance the host's active CG solve by
+        ``solve_iters_per_step`` iterations.  When a host has several kinds
+        pending, turns serve the first pending kind after the last-served
+        one in the multiply -> stencil -> solve rotation (no sustained
+        stream of one kind starves the others); stencils and solves never
+        join multiply chains.
         """
+        order = ("multiply", "stencil", "solve")
         for _ in range(self.cfg.hosts):
             host = self._rr_host
             self._rr_host = (self._rr_host + 1) % self.cfg.hosts
-            has_stencil = bool(self._batchers[host].stencil_depths())
-            has_multiply = self._multiply_pending(host)
-            if has_stencil and (
-                not has_multiply or not self._stencil_served_last.get(host, False)
-            ):
-                self._stencil_served_last[host] = True
-                return self._step_stencil(host)
-            if has_multiply:
-                self._stencil_served_last[host] = False
+            pending = {
+                "multiply": self._multiply_pending(host),
+                "stencil": bool(self._batchers[host].stencil_depths()),
+                "solve": self._solve_pending(host),
+            }
+            if not any(pending.values()):
+                continue
+            last = self._last_kind.get(host, "multiply")
+            start = order.index(last) if last in order else 0
+            for off in range(1, len(order) + 1):
+                kind = order[(start + off) % len(order)]
+                if not pending[kind]:
+                    continue
+                self._last_kind[host] = kind
+                if kind == "stencil":
+                    return self._step_stencil(host)
+                if kind == "solve":
+                    return self._step_solve(host)
                 if self.cfg.megakernel:
                     return self._step_megakernel(host)
                 if self.cfg.continuous:
                     return self._step_continuous(host)
                 return self._step_batch(host)
         return 0
+
+    def _solve_pending(self, host: int) -> bool:
+        """Solve work waiting for ``host``: a queued solve or the active one."""
+        return host in self._solves or bool(self._batchers[host].solve_depths())
 
     def _multiply_pending(self, host: int) -> bool:
         """Multiply work waiting for ``host``: queued (L, k) buckets, or live
@@ -747,6 +849,99 @@ class SU3Service:
                 self._trace_request(r, done_s, host, "batch")
         self.metrics.record_queue_depth(self.queued())
         return len(reqs)
+
+    def _seat_solve(self, host: int) -> dict[str, Any] | None:
+        """Pop the host's oldest queued solve and seat it as the active one:
+        pack the gauge field and right-hand side through the warm runner's
+        plan, initialize the CG state, and pin the convergence threshold
+        ``||r||^2 <= tol^2 ||b||^2`` from the packed b."""
+        req = self._batchers[host].next_solve()
+        if req is None:
+            return None
+        runner = self.runner_for(req.L, host)
+        plan = runner.plan
+        u_phys = plan.pack_gauge(jnp.asarray(req.a))
+        b_p = plan.pack_rhs(jnp.asarray(req.b))
+        state = plan.cg_state_init(b_p)
+        b_rs = float(jax.device_get(state["rs"]))  # r_0 = b, so rs_0 = ||b||^2
+        active = {
+            "req": req, "plan": plan, "runner": runner, "u_phys": u_phys,
+            "state": state, "b_rs": b_rs, "stop2": req.tol * req.tol * b_rs,
+        }
+        self._solves[host] = active
+        if self.tracer.enabled:
+            req.seated_s = time.perf_counter()
+            self.tracer.event(
+                "seat", lane=_request_lane(req.req_id), req_id=req.req_id,
+                L=req.L, host=host, kind="solve", midchain=False)
+        return active
+
+    def _step_solve(self, host: int) -> int:
+        """Advance the host's active solve by ``solve_iters_per_step`` CG
+        iterations (seating the oldest queued solve first if none is
+        active); retires it — mid-chain, its seat and queue budget free
+        immediately — once the residual crosses tol or ``max_iters`` runs
+        out, delivering the best iterate either way."""
+        active = self._solves.get(host)
+        if active is None:
+            active = self._seat_solve(host)
+            if active is None:
+                return 0
+        req, plan, state = active["req"], active["plan"], active["state"]
+        if active["b_rs"] == 0.0:
+            # zero right-hand side: x = 0 exactly; retire without iterating
+            # (CG's alpha = <r,r>/<p,Ap> is 0/0 on this input)
+            return self._retire_solve(host, active, state)
+        n = min(self.cfg.solve_iters_per_step,
+                req.max_iters - state["iterations"])
+        runner = active["runner"]
+        shape_key = ("solve", req.L)
+        cold = shape_key not in self._seen_shapes
+        tr = self.tracer
+        t0 = time.perf_counter()
+        for _ in range(n):
+            if tr.enabled:
+                with tr.span("cg.iter", lane=host, req_id=req.req_id,
+                             it=state["iterations"] + 1):
+                    state = plan.cg_iterate(active["u_phys"], state)
+                    jax.block_until_ready(state["rs"])
+            else:
+                state = plan.cg_iterate(active["u_phys"], state)
+        if tr.enabled:
+            with tr.span("cg.reduce", lane=host, req_id=req.req_id,
+                         it=state["iterations"]):
+                rs_host = float(jax.device_get(state["rs"]))
+        else:
+            rs_host = float(jax.device_get(state["rs"]))  # syncs the chunk
+        step_s = time.perf_counter() - t0
+        active["state"] = state
+        self._seen_shapes.add(shape_key)
+        flops = float(CG_ITER_FLOPS_PER_SITE) * req.n_sites * n
+        self.metrics.record_dispatch(
+            live=1, padded=1, step_s=step_s, flops=flops, cold=cold, host=host,
+        )
+        self.metrics.record_iteration(host, kind="solve", n=n)
+        if tr.enabled:
+            self._trace_dispatch(
+                runner, host, "solve", req.L, n, "solve", t0, step_s,
+                live=1, padded=1, flops=flops, cold=cold)
+        if rs_host <= active["stop2"] or state["iterations"] >= req.max_iters:
+            return self._retire_solve(host, active, state)
+        self.metrics.record_queue_depth(self.queued())
+        return 0
+
+    def _retire_solve(self, host: int, active: dict[str, Any],
+                      state: dict[str, Any]) -> int:
+        """Deliver the active solve's iterate and free its seat."""
+        req, plan = active["req"], active["plan"]
+        self._results[req.req_id] = plan.unpack_vec(state["x"])
+        del self._solves[host]
+        done_s = time.perf_counter()
+        self.metrics.record_completion(done_s - req.arrival_s)
+        if self.tracer.enabled:
+            self._trace_request(req, done_s, host, "solve")
+        self.metrics.record_queue_depth(self.queued())
+        return 1
 
     def _step_continuous(self, host: int) -> int:
         """One iteration boundary for ``host``: admit, then advance each of

@@ -1,4 +1,13 @@
-"""Test-environment shims.
+"""Test-environment shims and shared forced-device subprocess plumbing.
+
+Forced host-platform device counts (``--xla_force_host_platform_device_count``)
+lock at first jax init, so every multi-host test runs its mesh code in a
+fresh subprocess.  The launcher boilerplate (env, PYTHONPATH, timeout,
+stderr-on-failure, last-stdout-line JSON protocol) used to be copy-pasted
+across test modules; it now lives here once as
+:func:`run_forced_device_subprocess` / the ``forced_subprocess_json``
+fixture, mirroring ``benchmarks.stencil._subprocess_json`` on the
+benchmark side.
 
 ``hypothesis`` is not installed in every container this repo runs in, but five
 test modules import it at module scope, which used to abort collection of the
@@ -21,10 +30,48 @@ running.  Install ``hypothesis`` to get real randomized coverage.
 from __future__ import annotations
 
 import functools
+import json
+import os
+import pathlib
+import subprocess
 import sys
 import types
 
+import pytest
+
 _MAX_FALLBACK_EXAMPLES = 5
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def run_forced_device_subprocess(code: str, timeout: int = 420):
+    """Run ``code`` in a fresh interpreter and return its last-stdout-line
+    JSON payload.
+
+    The snippet is expected to set ``XLA_FLAGS`` (forced host-platform
+    device count) BEFORE importing jax and to ``print(json.dumps(...))`` as
+    its final line; everything before that line is free-form progress
+    output.  Any nonzero exit fails the calling test with the subprocess
+    stderr tail.
+    """
+    env = dict(os.environ)
+    src = str(REPO_ROOT / "src")
+    env["PYTHONPATH"] = (
+        src + os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else src
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=env, timeout=timeout,
+        cwd=REPO_ROOT,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.fixture
+def forced_subprocess_json():
+    """The shared forced-device subprocess runner, as a fixture."""
+    return run_forced_device_subprocess
 
 
 def _install_hypothesis_fallback() -> None:

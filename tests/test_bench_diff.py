@@ -152,8 +152,10 @@ def _provenance(**over):
 
 
 def _full_artifact(*, mult_bps=384, mult_bf16_bps=192, st_bps=408,
-                   st_bf16_bps=204, identical=True, tag_comp=True):
-    """A minimal but complete artifact that PASSES the compression and
+                   st_bf16_bps=204, identical=True, tag_comp=True,
+                   cg_iters=9, cg_tol=1e-6, cg_converged=True,
+                   cg_verified=True):
+    """A minimal but complete artifact that PASSES the compression, CG, and
     provenance gates; keyword knobs break it in each gated way."""
     comp = "two_row" if tag_comp else "none"
     t2 = [
@@ -183,7 +185,16 @@ def _full_artifact(*, mult_bps=384, mult_bf16_bps=192, st_bps=408,
             st.append({"name": f"stencil_depth2_identity_h{hosts}{t}",
                        "hosts": hosts, "identical": identical,
                        "t_two_depth1_us": 100.0, "t_one_depth2_us": 90.0})
-    art = _payload({"table2_variants": t2, "stencil": st})
+    cg = [
+        {"name": "cg_residual_vs_time", "tol": cg_tol,
+         "iters_to_tol": cg_iters, "converged": cg_converged,
+         "GFLOPS": 0.2},
+        {"name": "cg_iter_L4_soa_float32_fused", "fused": True,
+         "verified": cg_verified, "GFLOPS": 0.1},
+        {"name": "cg_iter_L4_soa_float32_composed", "fused": False,
+         "GFLOPS": 0.1},
+    ]
+    art = _payload({"table2_variants": t2, "stencil": st, "cg": cg})
     art["provenance"] = _provenance()
     return art
 
@@ -329,3 +340,43 @@ def test_provenance_problems_unit():
     probs = provenance_problems(drifted, art)
     assert any("backend" in p and "REPRO_BENCH_REBASELINE" in p for p in probs)
     assert provenance_problems(drifted, art, rebaseline_note="tpu run") == []
+
+
+# -- CG convergence gate -------------------------------------------------------
+
+
+def test_cg_gate_passes_on_honest_artifact(capsys):
+    art = _full_artifact()
+    assert bench_diff.cg_gate(art, None) == []
+    assert "no committed baseline" in capsys.readouterr().out
+    # same iteration count vs a committed baseline is clean
+    assert bench_diff.cg_gate(art, _full_artifact()) == []
+
+
+def test_cg_gate_fails_on_missing_unconverged_or_unverified():
+    art = _full_artifact()
+    del art["tables"]["cg"]
+    assert any("cg_residual_vs_time row missing" in p
+               for p in bench_diff.cg_gate(art, None))
+    stalled = _full_artifact(cg_converged=False)
+    assert any("did NOT converge" in p
+               for p in bench_diff.cg_gate(stalled, None))
+    unverified = _full_artifact(cg_verified=False)
+    assert any("failed verification" in p
+               for p in bench_diff.cg_gate(unverified, None))
+
+
+def test_cg_gate_pins_iterations_to_tolerance():
+    base = _full_artifact(cg_iters=10)
+    # 10% headroom: 11/10 passes, 12/10 regresses
+    assert bench_diff.cg_gate(_full_artifact(cg_iters=11), base) == []
+    probs = bench_diff.cg_gate(_full_artifact(cg_iters=12), base)
+    assert any("convergence regressed" in p for p in probs)
+    # fewer iterations is an improvement, never a failure
+    assert bench_diff.cg_gate(_full_artifact(cg_iters=8), base) == []
+
+
+def test_cg_gate_skips_comparison_on_tol_change(capsys):
+    base = _full_artifact(cg_iters=3, cg_tol=1e-3)
+    assert bench_diff.cg_gate(_full_artifact(cg_iters=30), base) == []
+    assert "different tol" in capsys.readouterr().out

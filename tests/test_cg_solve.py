@@ -1,0 +1,210 @@
+"""Staggered CG solver: the convergence-pinned test tier.
+
+The flagship workload's correctness contracts:
+
+  * ``ExecutionPlan.cg_solve`` on the shifted SPD operator
+    ``A = sigma I + S`` matches the plain-jnp :func:`cg_reference_solve`
+    oracle ITERATE BY ITERATE — every relative residual in the history,
+    not just the final solution — within ``verify_tolerance`` across
+    lattice size x layout x dtype x compression (hypothesis grid);
+  * it converges on SU(3)-manifold gauge fields (constant per direction,
+    so the site-local-adjoint stencil is exactly Hermitian) and the
+    returned solution actually satisfies ``A x = b``;
+  * exhausting ``max_iters`` RAISES ``CGMaxItersError`` — never hangs —
+    with the iteration count and last residual on the exception;
+  * the fused stencil+axpy iteration is BIT-IDENTICAL to the composed
+    (separate axpy + stencil programs) iteration at f32 storage: same
+    search direction, same operator product, same iterates, same scalars.
+    The contract holds because the sigma shift runs in ONE shared jitted
+    epilogue program for both paths (an in-kernel FMA contracts
+    differently — see ``_su3_cg_fused_kernel``);
+  * the same bit-identity holds on 1-, 2-, and 4-host forced-device
+    meshes (subprocess via the shared conftest runner).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.su3.layouts import Layout
+from repro.core.su3.plan import (
+    CG_SHIFT,
+    CGMaxItersError,
+    EngineConfig,
+    build_plan,
+    cg_reference_solve,
+    stencil_apply_reference,
+    verify_tolerance,
+)
+
+
+def _su3_problem(L: int, seed: int = 7):
+    """Constant-per-direction SU(3) links (QR + phase/det fix — exactly on
+    the group manifold, and Hermitian under the stencil) + unit-scale b."""
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(4, 3, 3)) + 1j * rng.normal(size=(4, 3, 3))
+    q, r = np.linalg.qr(a)
+    d = np.diagonal(r, axis1=-2, axis2=-1)
+    q = q * (d / np.abs(d))[..., None, :]
+    q = q / np.linalg.det(q)[..., None, None] ** (1.0 / 3.0)
+    n = L**4
+    u = jnp.asarray(np.broadcast_to(q, (n, 4, 3, 3)).astype(np.complex64))
+    b = jnp.asarray(
+        (rng.normal(size=(n, 3)) + 1j * rng.normal(size=(n, 3))).astype(
+            np.complex64))
+    return u, b
+
+
+def _plan_for(L, layout, dtype, accum, compression, tile=16):
+    return build_plan(EngineConfig(
+        L=L, dtype=dtype, accum_dtype=accum, layout=layout, tile=tile,
+        iterations=1, warmups=0, compression=compression,
+    ))
+
+
+# -- convergence pin: iterate-by-iterate vs the jnp oracle --------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    L=st.sampled_from([2, 3]),
+    layout=st.sampled_from([Layout.SOA, Layout.AOSOA]),
+    precision=st.sampled_from([("float32", ""), ("bfloat16", "float32")]),
+    compression=st.sampled_from(["none", "two_row"]),
+)
+def test_cg_matches_reference_iterate_by_iterate(L, layout, precision,
+                                                 compression):
+    dtype, accum = precision
+    tol = 2e-2 if dtype == "bfloat16" else 1e-6
+    plan = _plan_for(L, layout, dtype, accum, compression)
+    u, b = _su3_problem(L)
+    res = plan.cg_solve(plan.pack_gauge(u), plan.pack_rhs(b), tol=tol,
+                        max_iters=64)
+    assert res.converged and res.residuals[-1] <= tol
+    _, ref_residuals, _ = cg_reference_solve(
+        u, b, L, sigma=CG_SHIFT, tol=tol, max_iters=64)
+    vt = verify_tolerance(dtype, accum,
+                          reconstruct=compression == "two_row")
+    # every iterate in the common prefix, not just the converged endpoint
+    n_common = min(len(res.residuals), len(ref_residuals))
+    assert n_common >= 1
+    for i in range(n_common):
+        assert abs(res.residuals[i] - ref_residuals[i]) <= vt, (
+            i, res.residuals[i], ref_residuals[i])
+
+
+def test_cg_converges_and_solves_the_system():
+    """The solution is a solution: ``sigma x + S x`` reproduces b through
+    the INDEPENDENT canonical-complex oracle, not the kernel path."""
+    L = 3
+    plan = _plan_for(L, Layout.SOA, "float32", "", "none")
+    u, b = _su3_problem(L)
+    res = plan.cg_solve(plan.pack_gauge(u), plan.pack_rhs(b), tol=1e-6,
+                        max_iters=32)
+    assert res.converged and res.iterations < 32
+    x = plan.unpack_vec(res.x_p)
+    ax = CG_SHIFT * x + stencil_apply_reference(u, x, L)
+    rel = float(jnp.linalg.norm(ax - b) / jnp.linalg.norm(b))
+    assert rel <= 1e-5
+
+
+def test_cg_zero_rhs_is_immediate():
+    plan = _plan_for(2, Layout.SOA, "float32", "", "none")
+    u, _ = _su3_problem(2)
+    res = plan.cg_solve(plan.pack_gauge(u),
+                        plan.pack_rhs(jnp.zeros((16, 3), jnp.complex64)),
+                        tol=1e-6, max_iters=4)
+    assert res.converged and res.iterations == 0
+    assert float(jnp.max(jnp.abs(res.x_p))) == 0.0
+
+
+def test_cg_raises_not_hangs_on_max_iters():
+    plan = _plan_for(2, Layout.SOA, "float32", "", "none")
+    u, b = _su3_problem(2)
+    with pytest.raises(CGMaxItersError) as ei:
+        plan.cg_solve(plan.pack_gauge(u), plan.pack_rhs(b), tol=1e-30,
+                      max_iters=3)
+    assert ei.value.iterations == 3
+    assert ei.value.residual > 1e-30
+    assert "did not converge" in str(ei.value)
+
+
+# -- the bit-identity contract ------------------------------------------------
+
+
+def test_fused_composed_bit_identical_f32():
+    """Fused stencil+axpy vs composed: every state array of every iterate
+    bitwise equal at f32 storage, and the full solves agree exactly."""
+    L = 2
+    plan = _plan_for(L, Layout.SOA, "float32", "", "none", tile=8)
+    u, b = _su3_problem(L)
+    u_phys, b_p = plan.pack_gauge(u), plan.pack_rhs(b)
+
+    sf = plan.cg_state_init(b_p)
+    sc = plan.cg_state_init(b_p)
+    for _ in range(5):
+        sf = plan.cg_iterate(u_phys, sf, fused=True)
+        sc = plan.cg_iterate(u_phys, sc, fused=False)
+        for key in ("x", "r", "p", "rs"):
+            a1 = np.asarray(jax.device_get(sf[key]))
+            a2 = np.asarray(jax.device_get(sc[key]))
+            assert np.array_equal(a1, a2), key
+
+    rf = plan.cg_solve(u_phys, b_p, tol=1e-6, max_iters=32, fused=True)
+    rc = plan.cg_solve(u_phys, b_p, tol=1e-6, max_iters=32, fused=False)
+    assert rf.iterations == rc.iterations
+    assert rf.residuals == rc.residuals
+    assert np.array_equal(np.asarray(jax.device_get(rf.x_p)),
+                          np.asarray(jax.device_get(rc.x_p)))
+
+
+_MULTIHOST_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+from repro.core.su3.plan import EngineConfig, build_plan
+from repro.launch.mesh import MeshSpec
+
+rng = np.random.default_rng(7)
+a = rng.normal(size=(4, 3, 3)) + 1j * rng.normal(size=(4, 3, 3))
+q, r = np.linalg.qr(a)
+d = np.diagonal(r, axis1=-2, axis2=-1)
+q = q * (d / np.abs(d))[..., None, :]
+q = q / np.linalg.det(q)[..., None, None] ** (1.0 / 3.0)
+L = 4
+n = L**4
+u = jnp.asarray(np.broadcast_to(q, (n, 4, 3, 3)).astype(np.complex64))
+b = jnp.asarray((rng.normal(size=(n, 3))
+                 + 1j * rng.normal(size=(n, 3))).astype(np.complex64))
+
+checked = []
+cfg = EngineConfig(L=L, tile=32, iterations=1, warmups=0)
+for hosts, dph in ((1, 4), (2, 2), (4, 1)):
+    plan = build_plan(cfg, MeshSpec(hosts=hosts, devices_per_host=dph))
+    u_phys, b_p = plan.pack_gauge(u), plan.pack_rhs(b)
+    sf = plan.cg_state_init(b_p)
+    sc = plan.cg_state_init(b_p)
+    for _ in range(4):
+        sf = plan.cg_iterate(u_phys, sf, fused=True)
+        sc = plan.cg_iterate(u_phys, sc, fused=False)
+        for key in ("x", "r", "p", "rs"):
+            af = np.asarray(jax.device_get(sf[key]))
+            ac = np.asarray(jax.device_get(sc[key]))
+            assert np.array_equal(af, ac), (hosts, key)
+    checked.append(hosts)
+print(json.dumps(checked))
+"""
+
+
+def test_fused_composed_bit_identical_multihost_subprocess(
+        forced_subprocess_json):
+    """The bit-identity contract survives the multi-host overlap schedule:
+    fused and composed iterates stay bitwise equal on 1-, 2-, and 4-host
+    (slab-degenerate) forced-device meshes."""
+    assert forced_subprocess_json(_MULTIHOST_SUBPROC) == [1, 2, 4]

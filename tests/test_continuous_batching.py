@@ -216,3 +216,49 @@ def test_service_config_validation():
         ServiceConfig(autotune=False, tile=16, hosts=0)
     with pytest.raises(ValueError, match="chain_slots"):
         ServiceConfig(autotune=False, tile=16, chain_slots=-1)
+
+
+# -- solve traffic under continuous batching ----------------------------------
+
+
+def test_solve_mixes_with_continuous_multiply_chains():
+    """A CG solve (data-dependent turn count) rides alongside continuous
+    multiply chains: chains keep admitting mid-flight while the solve is
+    active, the solve retires on its residual test, and every request of
+    both kinds completes with the right answer."""
+    from repro.core import autotune
+    from repro.core.su3.plan import CG_SHIFT, cg_reference_solve
+
+    svc = _svc(solve_iters_per_step=2)
+    u, b = autotune._cg_measure_problem(2)
+    sid = svc.submit_solve(u, b, tol=1e-6, max_iters=64)
+    mult = [(svc.submit(_rand_a(i), _rand_b(i), k=k), i, k)
+            for i, k in enumerate([1, 2, 1])]
+    solve_done = False
+    results = {}
+    while svc.pending():
+        svc.step()
+        for rid, out in svc.pop_ready().items():
+            results[rid] = out
+            if rid == sid:
+                solve_done = True
+        if not solve_done and len(results) == len(mult):
+            # all multiplies retired while the solve was still in flight:
+            # admit one more into the still-warm continuous machinery
+            rid = svc.submit(_rand_a(7), _rand_b(7), k=1)
+            mult.append((rid, 7, 1))
+    assert solve_done and len(results) == len(mult) + 1
+    for rid, seed, k in mult:
+        expect = _rand_a(seed)
+        for _ in range(k):
+            expect = ref.su3_mult_ref(expect, _rand_b(seed))
+        np.testing.assert_allclose(np.asarray(results[rid]),
+                                   np.asarray(expect), rtol=1e-4, atol=1e-4)
+    x_ref, _, ok = cg_reference_solve(u, b, 2, sigma=CG_SHIFT, tol=1e-6,
+                                      max_iters=64)
+    assert ok
+    np.testing.assert_allclose(np.asarray(results[sid]), np.asarray(x_ref),
+                               rtol=1e-5, atol=1e-5)
+    snap = svc.metrics.snapshot()
+    ki = snap["kind_iterations"]
+    assert 0 < ki["solve"] < 64 and ki.get("multiply", 0) > 0

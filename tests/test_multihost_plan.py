@@ -1,12 +1,6 @@
 """Multi-host plan layer: MeshSpec topology, lattice site/halo sharding
 rules, locality routing, and (in a forced-device subprocess) 2-host plan
 execution equality with per-host first-touch init."""
-import json
-import os
-import pathlib
-import subprocess
-import sys
-
 import numpy as np
 import pytest
 
@@ -18,8 +12,6 @@ from repro.core.su3.layouts import Layout
 from repro.distributed import sharding
 from repro.launch.mesh import DEVICE_AXIS, HOST_AXIS, MeshSpec
 from repro.serve.su3 import LocalityRouter
-
-ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 def _fake_mesh(hosts, dph):
@@ -162,17 +154,11 @@ print(json.dumps(out))
 """
 
 
-def test_two_host_plan_matches_single_host_subprocess():
+def test_two_host_plan_matches_single_host_subprocess(forced_subprocess_json):
     """Real execution needs >1 device: forced host-platform devices lock at
-    first jax init, so this runs in a subprocess (no hardware needed)."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = str(ROOT / "src")
-    out = subprocess.run(
-        [sys.executable, "-c", _SUBPROC],
-        capture_output=True, text=True, env=env, timeout=420, cwd=ROOT,
-    )
-    assert out.returncode == 0, out.stderr[-2000:]
-    described = json.loads(out.stdout.strip().splitlines()[-1])
+    first jax init, so this runs in a subprocess (no hardware needed) via
+    the shared conftest runner."""
+    described = forced_subprocess_json(_SUBPROC)
     assert described["soa"] == "soa/pallas/t16/sharded@4devx2h/float32"
     assert described["aos"] == "aos/versionX/t16/sharded@4devx2h/float32"
 

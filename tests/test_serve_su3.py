@@ -280,3 +280,110 @@ def test_metrics_snapshot_schema_and_percentiles():
     m.reset()
     empty = m.snapshot()
     assert empty["completed"] == 0 and empty["latency_p99_ms"] == 0.0
+
+
+# -- solve requests (data-dependent iteration count) ---------------------------
+
+
+def _solve_problem(L=2):
+    return autotune._cg_measure_problem(L)
+
+
+def test_submit_solve_result_matches_reference():
+    from repro.core.su3.plan import CG_SHIFT, cg_reference_solve
+
+    svc = _svc(solve_iters_per_step=2)
+    u, b = _solve_problem()
+    rid = svc.submit_solve(u, b, tol=1e-6, max_iters=64)
+    assert rid is not None
+    svc.run_until_drained()
+    x = svc.pop_result(rid)
+    x_ref, _, ok = cg_reference_solve(u, b, 2, sigma=CG_SHIFT, tol=1e-6,
+                                      max_iters=64)
+    assert ok
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_solve_validation_and_admit_metrics():
+    svc = _svc()
+    u, b = _solve_problem()
+    with pytest.raises(ValueError, match="canonical"):
+        svc.submit_solve(u, jnp.zeros((3,), jnp.complex64))
+    with pytest.raises(ValueError, match="max_iters"):
+        svc.submit_solve(u, b, max_iters=0)
+    with pytest.raises(ValueError, match="tol"):
+        svc.submit_solve(u, b, tol=-1.0)
+    assert svc.submit_solve(u, b) is not None
+    assert svc.metrics.snapshot()["admitted"] == 1
+    svc.run_until_drained()
+
+
+def test_solve_retires_midstream_and_frees_budget():
+    """One long solve + a multiply stream on the same host: the rotation
+    keeps multiplies completing WHILE the solve is in flight, the solve
+    retires on its residual test (not max_iters), and a multiply submitted
+    AFTER retirement is served immediately — the budget is free again."""
+    svc = _svc(solve_iters_per_step=2)
+    u, b = _solve_problem()
+    sid = svc.submit_solve(u, b, tol=1e-6, max_iters=64)
+    mids = [svc.submit(_rand_a(i), _rand_b(i), k=1) for i in range(3)]
+    solve_done_at = None
+    mult_done_mid_solve = 0
+    steps = 0
+    while svc.pending():
+        steps += 1
+        svc.step()
+        for rid in list(svc.pop_ready()):
+            if rid == sid:
+                solve_done_at = steps
+            elif solve_done_at is None:
+                mult_done_mid_solve += 1
+    assert solve_done_at is not None
+    assert mult_done_mid_solve >= 1  # multiplies flowed during the solve
+    snap = svc.metrics.snapshot()
+    assert 0 < snap["kind_iterations"]["solve"] < 64  # retired early
+    # the freed budget serves new traffic in one step
+    rid = svc.submit(_rand_a(9), _rand_b(9), k=1)
+    svc.step()
+    assert rid in svc.pop_ready()
+
+
+def test_solve_kind_rotation_non_starving():
+    """All three kinds pending at once: the rotation serves each in turn,
+    so every kind completes and none waits for the others to drain."""
+    svc = _svc(solve_iters_per_step=1)
+    u, b = _solve_problem()
+    n = 16
+    v = jax.random.normal(jax.random.PRNGKey(3), (n, 3, 2))
+    sid = svc.submit_solve(u, b, tol=1e-6, max_iters=64)
+    tid = svc.submit_stencil(u, jax.lax.complex(v[..., 0], v[..., 1]))
+    mid = svc.submit(_rand_a(0), _rand_b(0), k=1)
+    done_step: dict[int, int] = {}
+    steps = 0
+    while svc.pending():
+        steps += 1
+        svc.step()
+        for rid in svc.pop_ready():
+            done_step[rid] = steps
+    assert set(done_step) == {sid, tid, mid}
+    # with one solve iteration per turn the solve needs many turns; the
+    # other kinds must NOT be starved behind it
+    assert done_step[mid] < done_step[sid]
+    assert done_step[tid] < done_step[sid]
+    snap = svc.metrics.snapshot()
+    assert snap["completed"] == 3
+    # one iteration per turn: the iteration metric counts every solve turn
+    assert snap["kind_iterations"]["solve"] >= 2
+
+
+def test_solve_per_kind_iteration_metrics():
+    svc = _svc(solve_iters_per_step=4)
+    u, b = _solve_problem()
+    svc.submit_solve(u, b, tol=1e-6, max_iters=64)
+    svc.run_until_drained()
+    snap = svc.metrics.snapshot()
+    ki = snap["kind_iterations"]
+    assert set(ki) == {"solve"} and ki["solve"] > 0
+    assert ki["solve"] % 4 in (0, 1, 2, 3)  # dispatched in <=4-iteration turns
+    assert snap["iterations"] >= ki["solve"]

@@ -17,12 +17,7 @@ Pins the PR's acceptance bars:
   * ``SU3Service`` serves stencil requests through the existing
     warm-pool/batching machinery, mixed with multiplies.
 """
-import json
 import math
-import os
-import pathlib
-import subprocess
-import sys
 
 import numpy as np
 import pytest
@@ -40,8 +35,6 @@ from repro.kernels.su3_stencil import (
     STENCIL_WORDS_PER_SITE,
     stencil_vmem_bytes,
 )
-
-ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 def _rand_complex(rng, shape):
@@ -177,18 +170,11 @@ print(json.dumps(checked))
 """
 
 
-def test_overlap_bit_identical_multi_host_subprocess():
+def test_overlap_bit_identical_multi_host_subprocess(forced_subprocess_json):
     """Forced host-platform devices lock at first jax init, so the 2- and
-    4-host (slab-degenerate) meshes run in a subprocess — the same pattern
-    as test_multihost_plan."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = str(ROOT / "src")
-    out = subprocess.run(
-        [sys.executable, "-c", _SUBPROC],
-        capture_output=True, text=True, env=env, timeout=420, cwd=ROOT,
-    )
-    assert out.returncode == 0, out.stderr[-2000:]
-    checked = json.loads(out.stdout.strip().splitlines()[-1])
+    4-host (slab-degenerate) meshes run in a subprocess — the shared
+    conftest runner."""
+    checked = forced_subprocess_json(_SUBPROC)
     assert len(checked) == 4  # 2 layouts x 2 dtype variants
 
 
