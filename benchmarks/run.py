@@ -49,8 +49,8 @@ def main(argv: list[str] | None = None) -> None:
 
     from benchmarks import (
         cg_solve, fig7_strong_scaling, fig9_gemm_vs_dot, fig10_arch_compare,
-        lm_step, serve_traffic, stencil, table1_roofline, table2_variants,
-        table3_placement,
+        lm_step, serve_chaos, serve_traffic, stencil, table1_roofline,
+        table2_variants, table3_placement,
     )
 
     collected: dict[str, list[dict]] = {}
@@ -67,6 +67,7 @@ def main(argv: list[str] | None = None) -> None:
         ("fig10_arch_compare", lambda: fig10_arch_compare.run(L=8 if not quick else 4)),
         ("lm_step", lambda: lm_step.run()),
         ("serve", lambda: serve_traffic.run(quick=quick)),
+        ("chaos", lambda: serve_chaos.run(quick=quick)),
         ("stencil", lambda: stencil.run(quick=quick)),
         ("cg", lambda: cg_solve.run(quick=quick)),
     ]

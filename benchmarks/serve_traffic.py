@@ -39,7 +39,8 @@ Load models over ``repro.serve.su3.SU3Service``:
                (``repro.obs``): sustained-GFLOPS delta, full request
                lifecycle + stencil exchange/interior/boundary phase
                coverage, trace exported as JSONL + Chrome trace-event
-               JSON (``serve_trace.jsonl`` / ``serve_trace.chrome.json``).
+               JSON (``artifacts/serve_trace.jsonl`` /
+               ``artifacts/serve_trace.chrome.json``).
 
 Rows land in ``BENCH_su3.json`` under ``serve`` via ``benchmarks.run``;
 standalone CLI:
@@ -49,6 +50,7 @@ standalone CLI:
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -320,7 +322,7 @@ def continuous_comparison(
 def traced_serving(
     L: int = 2, n_requests: int = 16, seed: int = 0, slots: int = 4,
     ks: tuple[int, ...] = (1, 2), n_stencil: int = 4,
-    stencil_L: int = 4, trace_prefix: str = "serve_trace",
+    stencil_L: int = 4, trace_prefix: str = "artifacts/serve_trace",
 ) -> dict:
     """Tracing-overhead and lifecycle/phase-coverage row (``repro.obs``).
 
@@ -389,6 +391,9 @@ def traced_serving(
     phases = {"stencil.exchange", "stencil.interior", "stencil.boundary"}
     jsonl_path = f"{trace_prefix}.jsonl"
     chrome_path = f"{trace_prefix}.chrome.json"
+    trace_dir = os.path.dirname(trace_prefix)
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)  # gitignored artifacts/ home
     n_records = tracer.to_jsonl(jsonl_path)
     tracer.to_chrome_trace(chrome_path, metadata=provenance_block())
     # tracing cost shows up in the replay wall of the identical Poisson

@@ -57,6 +57,14 @@ deterministic (fixed seed, fixed problem), so like the compression gate
 there is no noise retry: more iterations means the numerics changed.
 ``--no-cg-gate`` skips the block (pre-solver artifacts).
 
+The chaos gate checks the robustness contract on the CURRENT artifact's
+``serve_chaos`` row (``benchmarks/serve_chaos.py``): the seeded fault
+storm must have fired, every request must resolve (zero lost), successes
+must be bitwise identical to the fault-free baseline, the same seed must
+reproduce the same fault sequence, and p99 inflation must stay bounded.
+These are determinism/accounting properties, not timings — no noise
+retry.  ``--no-chaos-gate`` skips the block (pre-chaos artifacts).
+
 The gate also verifies run PROVENANCE (``repro.obs.provenance_block``):
 a harness artifact without a provenance block fails, as does a diff whose
 jax/jaxlib/backend/device identity changed between baseline and current
@@ -439,6 +447,51 @@ def cg_gate(current: dict, baseline: dict | None) -> list[str]:
     return problems
 
 
+def chaos_gate(current: dict) -> list[str]:
+    """Robustness checks on the ``serve_chaos`` row; -> problems (empty =
+    pass).
+
+    Zero-lost / bitwise / same-seed are determinism and accounting
+    properties of the fixed-seed storm, so like the compression gate
+    there is no noise retry: a violation is a real robustness break.
+    The verdicts are computed by the benchmark itself (it holds both the
+    storm and the baseline); this gate checks the flags so the tool stays
+    importable without the jax stack.
+    """
+    row = _rows_by_name(current, "chaos").get("serve_chaos")
+    if row is None:
+        return ["chaos: serve_chaos row missing — the fault storm did not "
+                "run (or the chaos table was dropped)"]
+    if row.get("error"):
+        return [f"serve_chaos: row errored: {row['error']}"]
+    problems = []
+    if not row.get("faults_fired", 0):
+        problems.append("serve_chaos: the storm fired no faults — the row "
+                        "proves nothing")
+    for flag, what in (
+        ("zero_lost", "LOST REQUESTS — a submitted request resolved as "
+                      "neither result nor structured failure"),
+        ("clean_results_bitwise", "a request that succeeded under the storm "
+                                  "is NOT bitwise identical to the "
+                                  "fault-free baseline"),
+        ("same_seed_reproduces", "the same seed did NOT reproduce the same "
+                                 "fault sequence"),
+        ("p99_inflation_bounded", f"p99 inflation "
+                                  f"{row.get('p99_inflation')}x exceeds the "
+                                  f"ceiling"),
+    ):
+        if row.get(flag) is not True:
+            problems.append(f"serve_chaos: {what}")
+    if not problems:
+        print(f"  serve_chaos: {row.get('faults_fired')} faults "
+              f"({row.get('fired_by_site')}), "
+              f"{row.get('completed_ok')} ok + "
+              f"{row.get('failed_structured')} structured failures, "
+              f"0 lost; p99 x{row.get('p99_inflation')}, recovery max "
+              f"{row.get('recovery_max_s')}s, same-seed reproduced")
+    return problems
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default=DEFAULT_ARTIFACT,
@@ -458,6 +511,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--no-cg-gate", action="store_true",
                     help="skip the CG iterations-to-tolerance checks "
                          "(pre-solver artifacts)")
+    ap.add_argument("--no-chaos-gate", action="store_true",
+                    help="skip the serve_chaos robustness checks "
+                         "(pre-chaos artifacts)")
     ap.add_argument("--no-provenance-gate", action="store_true",
                     help="skip the provenance-block checks "
                          "(pre-provenance artifacts)")
@@ -510,6 +566,12 @@ def main(argv: list[str] | None = None) -> int:
         for p in cg_problems:
             print(f"  FAIL {p}", file=sys.stderr)
         problems.extend(cg_problems)
+    if not args.no_chaos_gate and gate_applies:
+        print("bench_diff: chaos gate (fault storm robustness contract):")
+        chaos_problems = chaos_gate(current)
+        for p in chaos_problems:
+            print(f"  FAIL {p}", file=sys.stderr)
+        problems.extend(chaos_problems)
 
     if baseline is None:
         print(f"bench_diff: no baseline at {args.baseline!r}; nothing to diff")

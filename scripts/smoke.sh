@@ -38,6 +38,16 @@ python -m pytest -x -q \
   tests/test_compression.py::test_compressed_multiply_matches_full_kernel_on_su3 \
   "tests/test_compression.py::test_stencil_depth2_single_host_bit_identical[two_row]"
 
+echo "== chaos spot check (storm zero-lost + same-seed fault reproduction) =="
+# Seconds, not minutes: ONE seeded fault-storm run through the serving
+# stack (every request must resolve, retried results bitwise clean) and
+# ONE FaultPlan determinism check, so a broken robustness seam surfaces
+# before the full tiers.  The full chaos matrix (-m chaos) rides in the
+# fast tier below.
+python -m pytest -x -q \
+  tests/test_robustness.py::test_storm_zero_lost_and_bitwise_clean \
+  tests/test_chaos.py::test_same_seed_reproduces_fault_log
+
 echo "== CG solver spot check (convergence pin + fused bit-identity) =="
 # The flagship solve, in seconds: ONE end-to-end convergence check against
 # the independent oracle and ONE fused-vs-composed bit-identity check, so
@@ -71,18 +81,21 @@ if [[ "$RUN_BENCH" == 1 ]]; then
   python -m benchmarks.run --quick --json BENCH_su3.json
   echo "== dispatch profiler (dispatch table -> BENCH_su3.json) =="
   python scripts/profile_dispatch.py --quick --json BENCH_su3.json
-  echo "== trace report (serve_trace from the traced serve row) =="
-  # benchmarks.run's serve section exported serve_trace.jsonl/.chrome.json;
-  # the report must render (span tree + attribution) or the obs layer broke
-  python scripts/trace_report.py serve_trace.jsonl > /dev/null
-  python scripts/trace_report.py serve_trace.chrome.json | tail -8
+  echo "== trace report (artifacts/serve_trace from the traced serve row) =="
+  # benchmarks.run's serve section exported the trace pair into the
+  # gitignored artifacts/ dir; the report must render (span tree +
+  # attribution) or the obs layer broke
+  python scripts/trace_report.py artifacts/serve_trace.jsonl > /dev/null
+  python scripts/trace_report.py artifacts/serve_trace.chrome.json | tail -8
   echo "== bench diff vs last committed artifact (>15% GFLOPS drop fails) =="
   # BENCH_DIFF_THRESHOLD loosens the gate on noisy shared dev hosts; flagged
   # rows are re-measured (median of 3) by scripts/bench_diff.py before the
   # gate fails, so residual failures are real regressions, not timer noise.
   # Rows present on only one side are named WARNINGs, never silent skips.
   # The CG gate rides in the same call: cg_residual_vs_time must converge,
-  # and may not need >10% more iterations to the committed tol.
+  # and may not need >10% more iterations to the committed tol.  The chaos
+  # gate does too: the serve_chaos storm row must report zero lost
+  # requests, bitwise-clean successes, and same-seed fault reproduction.
   python scripts/bench_diff.py --current BENCH_su3.json --baseline git:HEAD \
     --threshold "${BENCH_DIFF_THRESHOLD:-0.15}"
 fi

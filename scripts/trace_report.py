@@ -17,8 +17,8 @@ line) or Chrome trace-event JSON (``{"traceEvents": [...]}``) — and prints:
      (``repro.obs.attribution``).  On a jax-less machine the model side
      degrades to ``-`` and the measured columns still render.
 
-    PYTHONPATH=src python scripts/trace_report.py serve_trace.jsonl
-    python scripts/trace_report.py serve_trace.chrome.json  # same report
+    PYTHONPATH=src python scripts/trace_report.py  # artifacts/serve_trace.jsonl
+    python scripts/trace_report.py artifacts/serve_trace.chrome.json  # same report
 
 Exit code 0 iff the report rendered (used by scripts/smoke.sh to assert a
 traced serving run produced a readable trace).
@@ -150,7 +150,10 @@ def report(path: str) -> str:
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         description="render a repro.obs trace (span tree + attribution)")
-    ap.add_argument("trace", help="path to a .jsonl or .chrome.json trace")
+    ap.add_argument("trace", nargs="?", default="artifacts/serve_trace.jsonl",
+                    help="path to a .jsonl or .chrome.json trace "
+                         "(default: %(default)s — where the traced serve "
+                         "benchmark row exports)")
     args = ap.parse_args(argv)
     if not os.path.exists(args.trace):
         print(f"trace_report: no trace at {args.trace!r}", file=sys.stderr)

@@ -67,6 +67,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import time
 from typing import Any, Callable
 
@@ -81,6 +82,7 @@ from repro.core.su3.layouts import Layout, LatticeShape, LayoutCodec
 from repro.distributed import sharding as dist_sharding
 from repro.kernels import ops as _kops  # noqa: F401  (registers the Pallas kernel)
 from repro.launch.mesh import MeshSpec
+from repro.chaos.faults import NULL_FAULT_PLAN, corrupt_ghosts
 from repro.obs.tracer import NULL_TRACER
 
 PLACEMENTS = ("sharded", "host_scatter", "replicated")
@@ -429,21 +431,56 @@ def init_stencil_canonical(n_sites: int) -> tuple[jax.Array, jax.Array]:
     return a, v
 
 
-class CGMaxItersError(RuntimeError):
-    """``cg_solve`` exhausted ``max_iters`` without reaching tolerance.
+# divergence guard: rs blowing past this multiple of ||b||^2 is treated as
+# breakdown (relative residual > 1e4), not slow convergence — raise, don't spin
+CG_DIVERGENCE_FACTOR = 1e8
+
+
+class CGError(RuntimeError):
+    """Base of every structured ``cg_solve`` failure.
 
     Raised — never a hang — the Python-level iteration loop is bounded by
     ``max_iters`` and every residual sync is a finite device fetch.
+    ``result`` (when not None) carries the best iterate reached as a
+    partial :class:`CGResult` (``converged=False``): resume with
+    ``cg_solve(..., x0_p=err.result.x_p)`` instead of restarting from zero.
     """
 
-    def __init__(self, iterations: int, residual: float, tol: float):
-        super().__init__(
-            f"CG did not converge: relative residual {residual:.3e} > tol "
-            f"{tol:.1e} after {iterations} iterations"
-        )
+    def __init__(self, message: str, iterations: int, residual: float,
+                 tol: float, result: "CGResult | None" = None):
+        super().__init__(message)
         self.iterations = iterations
         self.residual = residual
         self.tol = tol
+        self.result = result
+
+
+class CGMaxItersError(CGError):
+    """``cg_solve`` exhausted ``max_iters`` without reaching tolerance."""
+
+    def __init__(self, iterations: int, residual: float, tol: float,
+                 result: "CGResult | None" = None):
+        super().__init__(
+            f"CG did not converge: relative residual {residual:.3e} > tol "
+            f"{tol:.1e} after {iterations} iterations",
+            iterations, residual, tol, result,
+        )
+
+
+class CGDivergedError(CGError):
+    """``cg_solve`` hit numerical breakdown: a NaN/Inf residual (poisoned
+    operand, corrupted halo) or a residual exploding past
+    :data:`CG_DIVERGENCE_FACTOR` x ``||b||^2``.  Structured and immediate —
+    a solver fed corrupted data must fail loudly, not iterate forever."""
+
+    def __init__(self, iterations: int, residual: float, tol: float,
+                 result: "CGResult | None" = None, reason: str = "diverged"):
+        super().__init__(
+            f"CG {reason}: relative residual {residual:.3e} (tol {tol:.1e}) "
+            f"after {iterations} iterations",
+            iterations, residual, tol, result,
+        )
+        self.reason = reason
 
 
 @dataclasses.dataclass
@@ -644,6 +681,12 @@ class ExecutionPlan:
         # synchronizes the schedule (the only way to time a phase); the real
         # overlapped wall comes from an untraced run of the same step.
         self.tracer = NULL_TRACER
+        # Fault plan for chaos testing (repro.chaos).  Disabled by default:
+        # the same one-branch guard style as the tracer, so the fault-free
+        # hot path is untouched.  When armed, the overlapped stencil
+        # schedules consult the "halo" site after each exchange and apply
+        # the drawn corruption to the ghost slabs before the boundary pass.
+        self.faults = NULL_FAULT_PLAN
 
     @classmethod
     def build(
@@ -1018,6 +1061,10 @@ class ExecutionPlan:
                 tr = plan.tracer
                 if not tr.enabled:
                     ghosts = exchange_j(v_p)  # issued FIRST: transfer in flight
+                    if plan.faults.enabled:
+                        f = plan.faults.ask("halo", depth=1)
+                        if f is not None:
+                            ghosts = corrupt_ghosts(tuple(ghosts), f.action)
                     out_i = interior_j(u_phys, v_p)  # overlaps the exchange
                     return boundary_j(u_phys, v_p, *ghosts, out_i)
                 # traced: each phase blocks so its span is a measurement —
@@ -1026,6 +1073,10 @@ class ExecutionPlan:
                 with tr.span("stencil.step", **attrs):
                     with tr.span("stencil.exchange"):
                         ghosts = jax.block_until_ready(exchange_j(v_p))
+                    if plan.faults.enabled:
+                        f = plan.faults.ask("halo", depth=1)
+                        if f is not None:
+                            ghosts = corrupt_ghosts(tuple(ghosts), f.action)
                     with tr.span("stencil.interior"):
                         out_i = jax.block_until_ready(interior_j(u_phys, v_p))
                     with tr.span("stencil.boundary"):
@@ -1102,6 +1153,11 @@ class ExecutionPlan:
             tr = plan.tracer
             if not tr.enabled:
                 g_fwd, g_bwd, ring_vnbr = exchange2_j(v_p)  # ONE exchange, 2 apps
+                if plan.faults.enabled:
+                    f = plan.faults.ask("halo", depth=2)
+                    if f is not None:
+                        g_fwd, g_bwd, ring_vnbr = corrupt_ghosts(
+                            (g_fwd, g_bwd, ring_vnbr), f.action)
                 out_1i = interior_j(u_phys, v_p)  # overlaps the exchange
                 w = boundary_j(u_phys, v_p, g_fwd, g_bwd, out_1i)
                 ring_w = ring_j(u_phys, ring_vnbr)  # recompute, don't re-exchange
@@ -1111,6 +1167,11 @@ class ExecutionPlan:
                 with tr.span("stencil.exchange"):
                     g_fwd, g_bwd, ring_vnbr = jax.block_until_ready(
                         exchange2_j(v_p))
+                if plan.faults.enabled:
+                    f = plan.faults.ask("halo", depth=2)
+                    if f is not None:
+                        g_fwd, g_bwd, ring_vnbr = corrupt_ghosts(
+                            (g_fwd, g_bwd, ring_vnbr), f.action)
                 with tr.span("stencil.interior"):
                     out_1i = jax.block_until_ready(interior_j(u_phys, v_p))
                 with tr.span("stencil.boundary"):
@@ -1372,14 +1433,47 @@ class ExecutionPlan:
         self._cg_applies[key] = fused_overlapped
         return fused_overlapped
 
-    def cg_state_init(self, b_p: jax.Array) -> dict[str, Any]:
+    def cg_state_init(
+        self,
+        b_p: jax.Array,
+        x0_p: jax.Array | None = None,
+        *,
+        u_phys: jax.Array | None = None,
+        sigma: float = CG_SHIFT,
+        fused: bool = True,
+        overlap: bool | None = None,
+    ) -> dict[str, Any]:
         """Initial CG state for planar right-hand side ``b_p``: x = 0,
         r = b, p-seed = b, beta = 0 — the first :meth:`cg_iterate` then
-        forms ``p_1 = r + 0 p = b``, the textbook start."""
+        forms ``p_1 = r + 0 p = b``, the textbook start.
+
+        With ``x0_p`` (a prior partial iterate, e.g. ``err.result.x_p`` off
+        a :class:`CGError`) this is a CG *restart*: ``r_0 = b - A x_0`` is
+        computed with the same apply/epilogue programs as the iterations
+        (``u_phys`` is required for that one application), the search
+        direction reseeds from ``r_0`` — resumed work is not thrown away,
+        only the Krylov history is."""
         h = self._cg_helpers()
-        x, r, p = h["init"](b_p)
+        if x0_p is None:
+            x, r, p = h["init"](b_p)
+            return {
+                "x": x, "r": r, "p": p, "rs": h["rr"](r),
+                "beta": jnp.float32(0.0), "iterations": 0,
+            }
+        if u_phys is None:
+            raise ValueError("resuming cg_state_init from x0_p needs u_phys "
+                             "to form r0 = b - A x0")
+        if overlap is None:
+            overlap = self.is_multi_host
+        apply_fn = self._cg_apply(fused, bool(overlap))
+        zeros, _r, _p = h["init"](b_p)
+        # beta = 0 makes the apply's p' = x0 exactly, so ap = A x0 comes out
+        # of the same compiled pass the iterations use
+        _x0, ax0 = apply_fn(u_phys, x0_p, zeros, h["coef"](0.0, sigma))
+        # shared update with p = 0, alpha = 1: x stays x0, r = b - A x0
+        x, r = h["update"](x0_p, b_p, zeros, ax0, jnp.float32(1.0))
         return {
-            "x": x, "r": r, "p": p, "rs": h["rr"](r),
+            "x": x, "r": r, "p": r, "rs": h["rr"](r),
             "beta": jnp.float32(0.0), "iterations": 0,
         }
 
@@ -1423,6 +1517,7 @@ class ExecutionPlan:
         sigma: float = CG_SHIFT,
         fused: bool = True,
         overlap: bool | None = None,
+        x0_p: jax.Array | None = None,
     ) -> CGResult:
         """Conjugate gradients on ``A = sigma I + S`` to ``||r|| <= tol ||b||``.
 
@@ -1446,9 +1541,16 @@ class ExecutionPlan:
                 (never hangs — the loop is host-bounded).
             sigma: SPD shift (see :data:`CG_SHIFT`).
             fused / overlap: iteration body selection, as above.
+            x0_p: optional warm start (a prior partial iterate) — restarts
+                from ``r0 = b - A x0`` via :meth:`cg_state_init` instead of
+                from zero.
 
         Raises:
-            CGMaxItersError: tolerance not reached within ``max_iters``.
+            CGMaxItersError: tolerance not reached within ``max_iters``;
+                ``err.result`` carries the best iterate for resume.
+            CGDivergedError: NaN/Inf residual or residual blow-up past
+                :data:`CG_DIVERGENCE_FACTOR` x ``||b||^2`` — numerical
+                breakdown, surfaced immediately with the best iterate.
         """
         tr = self.tracer
         h = self._cg_helpers()
@@ -1458,10 +1560,37 @@ class ExecutionPlan:
             x, _r, _p = h["init"](b_p)
             return CGResult(x_p=x, iterations=0, residuals=[], converged=True,
                             wall_s=time.perf_counter() - t0)
+        if not math.isfinite(b_rs):
+            raise CGDivergedError(0, float("nan"), tol,
+                                  reason="non-finite right-hand side")
         stop2 = (tol * tol) * b_rs
-        state = self.cg_state_init(b_p)
+        state = self.cg_state_init(b_p, x0_p, u_phys=u_phys, sigma=sigma,
+                                   fused=fused, overlap=overlap)
         residuals: list[float] = []
         prev: tuple[jax.Array, jax.Array] | None = None  # (x_i, rs_i)
+        best: tuple[jax.Array, float, int] | None = None  # (x, rs_host, iter)
+
+        def partial(iterations: int) -> CGResult | None:
+            # the best-so-far iterate, packaged for x0_p resume
+            if best is None:
+                return None
+            return CGResult(x_p=best[0], iterations=iterations,
+                            residuals=list(residuals), converged=False,
+                            wall_s=time.perf_counter() - t0)
+
+        def check(rs_host: float, x: jax.Array, it: int) -> None:
+            # NaN/Inf or blow-up means breakdown, not slow convergence
+            nonlocal best
+            if not math.isfinite(rs_host):
+                raise CGDivergedError(
+                    it, float("nan"), tol, partial(it),
+                    reason="non-finite residual")
+            if rs_host > CG_DIVERGENCE_FACTOR * b_rs:
+                raise CGDivergedError(
+                    it, (rs_host / b_rs) ** 0.5, tol, partial(it))
+            if best is None or rs_host < best[1]:
+                best = (x, rs_host, it)
+
         for i in range(1, max_iters + 1):
             if tr.enabled:
                 # traced: the iter span blocks so it measures the iteration —
@@ -1486,13 +1615,16 @@ class ExecutionPlan:
                     return CGResult(
                         x_p=prev[0], iterations=i - 1, residuals=residuals,
                         converged=True, wall_s=time.perf_counter() - t0)
+                check(rs_host, prev[0], i - 1)
             prev = (state["x"], state["rs"])
         rs_host = float(jax.device_get(prev[1]))
         residuals.append((rs_host / b_rs) ** 0.5)
         if rs_host <= stop2:
             return CGResult(x_p=prev[0], iterations=max_iters, residuals=residuals,
                             converged=True, wall_s=time.perf_counter() - t0)
-        raise CGMaxItersError(max_iters, (rs_host / b_rs) ** 0.5, tol)
+        check(rs_host, prev[0], max_iters)
+        raise CGMaxItersError(max_iters, (rs_host / b_rs) ** 0.5, tol,
+                              partial(max_iters))
 
     # -- placement policies ----------------------------------------------------
 

@@ -11,6 +11,10 @@ Public surface:
                                host-locality routing and continuous-batching
                                chain admission (multi-host serving)
   ServiceMetrics               latency/throughput/occupancy accounting
+  RequestFailure taxonomy      structured per-request failures delivered
+                               through the result channel (DeadlineExceeded
+                               / RetriesExhausted / LoadShed), plus the
+                               RetryPolicy / HostHealth robustness knobs
 """
 from repro.serve.su3.batcher import (
     BatcherConfig,
@@ -21,14 +25,30 @@ from repro.serve.su3.batcher import (
     ServeRequest,
 )
 from repro.serve.su3.metrics import ServiceMetrics, request_flops
+from repro.serve.su3.robustness import (
+    PRIORITY,
+    DeadlineExceededError,
+    HostHealth,
+    LoadShedError,
+    RequestFailure,
+    RetriesExhaustedError,
+    RetryPolicy,
+)
 from repro.serve.su3.service import ServiceConfig, SU3Service
 
 __all__ = [
     "BatcherConfig",
     "CoalescedBatch",
+    "DeadlineExceededError",
     "DynamicBatcher",
+    "HostHealth",
     "InflightChain",
+    "LoadShedError",
     "LocalityRouter",
+    "PRIORITY",
+    "RequestFailure",
+    "RetriesExhaustedError",
+    "RetryPolicy",
     "ServeRequest",
     "ServiceMetrics",
     "ServiceConfig",

@@ -82,6 +82,12 @@ class ServeRequest:
     # (0.0 until seated; the request-lifecycle span derives queue_wait from it)
     tol: float = 0.0  # solve: relative-residual convergence target
     max_iters: int = 0  # solve: iteration cap (retires unconverged at cap)
+    deadline_s: float = 0.0  # absolute perf_counter deadline (0 = none); a
+    # request past it is EVICTED (queue slot and live chain/table seat freed)
+    # and completes with a structured DeadlineExceededError
+    priority: int = 0  # shedding priority (robustness.PRIORITY[kind]): under
+    # backpressure, lower priorities shed first to admit higher ones
+    attempts: int = 0  # dispatch attempts consumed (retry accounting)
 
     @property
     def n_sites(self) -> int:
@@ -253,6 +259,62 @@ class DynamicBatcher:
             key=key, requests=take, padded_size=self.cfg.padded_size(len(take))
         )
 
+    # -- robustness views ------------------------------------------------------
+
+    def _families(self):
+        """The three queue families as (kind, key, queue) triples."""
+        for key, q in self._buckets.items():
+            yield "multiply", key, q
+        for L, q in self._stencil.items():
+            yield "stencil", L, q
+        for L, q in self._solve.items():
+            yield "solve", L, q
+
+    def evict_expired(self, now: float) -> list[ServeRequest]:
+        """Pop every queued request whose deadline passed; the caller turns
+        them into structured timeouts.  Requests without a deadline
+        (``deadline_s == 0``) never expire."""
+        evicted: list[ServeRequest] = []
+        for _kind, _key, q in self._families():
+            keep = []
+            for req in q:
+                if req.deadline_s and req.deadline_s <= now:
+                    evicted.append(req)
+                else:
+                    keep.append(req)
+            q[:] = keep
+        self._depth -= len(evicted)
+        return evicted
+
+    def shed_lowest(self, max_priority: int) -> ServeRequest | None:
+        """Pop the YOUNGEST queued request with priority < ``max_priority``
+        (the freshest bulk work pays for the latency-sensitive arrival —
+        oldest bulk requests have waited longest and keep their place).
+        Returns None when nothing sheddable waits."""
+        best: tuple[float, Any, list] | None = None
+        for _kind, key, q in self._families():
+            for req in q:
+                if req.priority < max_priority and (
+                    best is None or req.arrival_s > best[0]
+                ):
+                    best = (req.arrival_s, req, q)
+        if best is None:
+            return None
+        _arrival, req, q = best
+        q.remove(req)
+        self._depth -= 1
+        return req
+
+    def drain(self) -> list[ServeRequest]:
+        """Pop EVERY queued request (quarantine re-seating: the caller
+        resubmits them through the router onto healthy hosts)."""
+        out: list[ServeRequest] = []
+        for _kind, _key, q in self._families():
+            out.extend(q)
+            q.clear()
+        self._depth = 0
+        return out
+
     # -- continuous-batching admission views ----------------------------------
 
     def queued_Ls(self) -> list[int]:
@@ -387,6 +449,14 @@ class InflightChain:
     def requests(self) -> list[ServeRequest]:
         return [r for r in self._req if r is not None]
 
+    def occupants(self) -> list[tuple[int, ServeRequest, int]]:
+        """Live ``(slot, request, remaining)`` triples (eviction scans)."""
+        return [
+            (i, r, self._remaining[i])
+            for i, r in enumerate(self._req)
+            if r is not None
+        ]
+
     # -- admission -------------------------------------------------------------
 
     def can_admit(self, req: ServeRequest) -> bool:
@@ -417,6 +487,21 @@ class InflightChain:
         """True once the chain has advanced at least one iteration — a later
         admit is a mid-chain admit (the case batch-per-step cannot serve)."""
         return self.iterations_run > 0
+
+    def evict(self, slot: int) -> ServeRequest:
+        """Free a LIVE slot mid-chain (deadline eviction / quarantine
+        re-seating) and return its request; the freed slot is immediately
+        admissible — the same re-seating machinery mid-chain admission
+        uses.  A fully-drained chain resets to fresh, exactly as a drain
+        through :meth:`advance` does."""
+        req = self._req[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is not live")
+        self._req[slot] = None
+        self._remaining[slot] = 0
+        if self.live == 0:
+            self.iterations_run = 0
+        return req
 
     # -- advancement -----------------------------------------------------------
 
@@ -525,6 +610,28 @@ class SlotTable:
         """True once the table has advanced at least one iteration with live
         slots — a later admit is a mid-chain slot swap."""
         return self.iterations_run > 0
+
+    def evict(self, slot: int) -> ServeRequest:
+        """Free a LIVE slot mid-chain (deadline eviction / quarantine
+        re-seating) and return its request — the inverse slot swap of
+        :meth:`admit`, leaving the slot immediately admissible.  A table
+        drained by evictions resets to fresh like one drained by
+        :meth:`advance`."""
+        req = self._req[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is not live")
+        self._req[slot] = None
+        self._remaining[slot] = 0
+        if self.live == 0:
+            self.iterations_run = 0
+        return req
+
+    def slot_of(self, req_id: int) -> int | None:
+        """The slot seating ``req_id`` (None when not seated)."""
+        for i, r in enumerate(self._req):
+            if r is not None and r.req_id == req_id:
+                return i
+        return None
 
     # -- advancement -----------------------------------------------------------
 

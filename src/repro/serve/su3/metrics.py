@@ -71,6 +71,20 @@ class ServiceMetrics:
     kind_iterations: dict = dataclasses.field(default_factory=dict)  # kind -> n
     # per-kind iteration counts: "multiply"/"stencil" turns vs "solve" CG
     # iterations — the traffic mix's iteration bill by request family
+    rejected_by_kind: dict = dataclasses.field(default_factory=dict)  # kind -> n
+    # backpressure rejects split per request family (``rejected`` stays the
+    # total, so the pre-existing snapshot key is unchanged)
+    shed: int = 0  # queued requests evicted to admit higher-priority arrivals
+    shed_by_kind: dict = dataclasses.field(default_factory=dict)
+    timeouts: int = 0  # deadline evictions (queued or seated)
+    timeouts_by_kind: dict = dataclasses.field(default_factory=dict)
+    retries: int = 0  # re-dispatches consumed from the retry budget
+    retries_exhausted: int = 0  # requests that gave up with a structured error
+    faults_injected: int = 0  # chaos faults applied to this service's seams
+    degraded_dispatches: int = 0  # megakernel batches re-run down the
+    # per-(L) chained fallback path after a dispatch failure
+    quarantines: int = 0  # hosts latched out by the health tracker
+    reseated: int = 0  # requests moved off a quarantined host onto a healthy one
 
     def reset(self) -> None:
         """Zero every counter and restart the wall clock (post-warmup)."""
@@ -82,8 +96,33 @@ class ServiceMetrics:
         self.admitted += 1
         self.queue_depths.add(queue_depth)
 
-    def record_reject(self) -> None:
+    def record_reject(self, kind: str = "multiply") -> None:
         self.rejected += 1
+        self.rejected_by_kind[kind] = self.rejected_by_kind.get(kind, 0) + 1
+
+    def record_shed(self, kind: str) -> None:
+        self.shed += 1
+        self.shed_by_kind[kind] = self.shed_by_kind.get(kind, 0) + 1
+
+    def record_timeout(self, kind: str) -> None:
+        self.timeouts += 1
+        self.timeouts_by_kind[kind] = self.timeouts_by_kind.get(kind, 0) + 1
+
+    def record_retry(self, n: int = 1) -> None:
+        self.retries += n
+
+    def record_retries_exhausted(self) -> None:
+        self.retries_exhausted += 1
+
+    def record_fault(self, n: int = 1) -> None:
+        self.faults_injected += n
+
+    def record_degraded(self) -> None:
+        self.degraded_dispatches += 1
+
+    def record_quarantine(self, reseated: int = 0) -> None:
+        self.quarantines += 1
+        self.reseated += reseated
 
     def record_dispatch(
         self, *, live: int, padded: int, step_s: float, flops: float,
@@ -164,6 +203,17 @@ class ServiceMetrics:
             ) if self.iterations else 0.0,
             "host_dispatches": {str(h): n for h, n in sorted(self.host_dispatches.items())},
             "kind_iterations": {k: n for k, n in sorted(self.kind_iterations.items())},
+            "rejected_by_kind": {k: n for k, n in sorted(self.rejected_by_kind.items())},
+            "shed": self.shed,
+            "shed_by_kind": {k: n for k, n in sorted(self.shed_by_kind.items())},
+            "timeouts": self.timeouts,
+            "timeouts_by_kind": {k: n for k, n in sorted(self.timeouts_by_kind.items())},
+            "retries": self.retries,
+            "retries_exhausted": self.retries_exhausted,
+            "faults_injected": self.faults_injected,
+            "degraded_dispatches": self.degraded_dispatches,
+            "quarantines": self.quarantines,
+            "reseated": self.reseated,
             "queue_depth_max": int(self.queue_depths.max_or(0)),
             "queue_depth_mean": round(self.queue_depths.mean(), 3),
             "busy_s": round(self.busy_s, 4),

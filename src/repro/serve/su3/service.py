@@ -73,6 +73,8 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
+import math
+import random
 import time
 from typing import Any
 
@@ -80,9 +82,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.chaos.faults import NULL_FAULT_PLAN, FaultPlan, poison_array
 from repro.core import autotune
 from repro.core.su3.layouts import Layout
-from repro.core.su3.plan import BatchedLatticeRunner, EngineConfig
+from repro.core.su3.plan import (
+    CG_DIVERGENCE_FACTOR,
+    BatchedLatticeRunner,
+    CGDivergedError,
+    EngineConfig,
+)
 from repro.kernels.su3_stencil import (
     CG_ITER_FLOPS_PER_SITE,
     STENCIL_FLOPS_PER_SITE,
@@ -98,6 +106,15 @@ from repro.serve.su3.batcher import (
     SlotTable,
 )
 from repro.serve.su3.metrics import ServiceMetrics, request_flops
+from repro.serve.su3.robustness import (
+    PRIORITY,
+    DeadlineExceededError,
+    HostHealth,
+    LoadShedError,
+    RequestFailure,
+    RetriesExhaustedError,
+    RetryPolicy,
+)
 
 DEFAULT_TILE = 128  # small enough that every L >= 2 bucket is a few tiles
 
@@ -155,6 +172,21 @@ class ServiceConfig:
             per scheduling turn; small values re-open kind rotation (and
             thus multiply/stencil service) more often, large values amortize
             more solver work per turn at the cost of mix latency.
+        faults: optional :class:`repro.chaos.FaultPlan` armed over the
+            service's injection seams (dispatch / kernel / pool; the halo
+            seam lives on the plan).  None = the shared disabled plan —
+            every seam is one ``if faults.enabled`` branch, zero cost.
+        retry: capped-exponential-backoff retry policy plus the service-wide
+            retry budget for failed dispatches.
+        default_deadline_s: relative deadline applied to every request that
+            does not pass its own (0 = none); a request past its deadline is
+            evicted — from the queue OR its live chain/table seat — and
+            completes with a structured ``DeadlineExceededError``.
+        quarantine_after: consecutive dispatch failures that latch a host
+            out of service (its requests re-seat onto healthy hosts);
+            single-host services never self-quarantine.
+        numerics_guard: check dispatch outputs for NaN/Inf even with no
+            fault plan armed (chaos runs always check).
     """
 
     dtype: str = "float32"  # storage dtype of every plan in the pool
@@ -172,6 +204,11 @@ class ServiceConfig:
     megakernel: bool = False  # one batched dispatch/host/iteration (continuous)
     chain_horizon: int = 1  # megakernel in-kernel chain depth between boundaries
     solve_iters_per_step: int = 4  # CG iterations per solve scheduling turn
+    faults: FaultPlan | None = None  # chaos plan armed over the serve seams
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+    default_deadline_s: float = 0.0  # relative per-request deadline (0 = none)
+    quarantine_after: int = 3  # consecutive failures latching a host out
+    numerics_guard: bool = False  # NaN/Inf-check outputs without a fault plan
 
     def __post_init__(self) -> None:
         # the pool serves the planar Pallas kernel; AOS has no planar view,
@@ -206,6 +243,14 @@ class ServiceConfig:
             raise ValueError(
                 f"solve_iters_per_step must be >= 1, got "
                 f"{self.solve_iters_per_step}"
+            )
+        if self.default_deadline_s < 0:
+            raise ValueError(
+                f"default_deadline_s must be >= 0, got {self.default_deadline_s}"
+            )
+        if self.quarantine_after < 1:
+            raise ValueError(
+                f"quarantine_after must be >= 1, got {self.quarantine_after}"
             )
 
 
@@ -349,6 +394,17 @@ class SU3Service:
         self._chains: dict[tuple[int, int], tuple[InflightChain, _ChainArrays]] = {}
         # megakernel mode: host -> (SlotTable, _SlotTableArrays)
         self._tables: dict[int, tuple[SlotTable, _SlotTableArrays]] = {}
+        # -- robustness state (ISSUE 9) ---------------------------------------
+        self.faults = self.cfg.faults if self.cfg.faults is not None \
+            else NULL_FAULT_PLAN
+        self.health = HostHealth(self.cfg.hosts, self.cfg.quarantine_after)
+        self._retry_rng = random.Random(self.cfg.retry.seed)
+        self._retry_budget = self.cfg.retry.budget
+        # requests waiting out a backoff: (eligible perf_counter s, request)
+        self._retry_q: list[tuple[float, ServeRequest]] = []
+        # set the first time any request carries a deadline, so the
+        # deadline-free hot path never scans queues/seats for expiry
+        self._deadlines_armed = bool(self.cfg.default_deadline_s)
 
     # -- warm pool -----------------------------------------------------------
 
@@ -390,14 +446,38 @@ class SU3Service:
             on first use; warm afterwards).
         """
         if host is None:
-            host = self.router.host_for(L)
+            host = self._home(L)
         ecfg = self._engine_config(L)
         key = (host, L, ecfg.dtype, ecfg.layout.value, ecfg.tile, ecfg.compression)
         runner = self._pool.get(key)
         if runner is None:
+            if self.faults.enabled:
+                # "pool" seam: warm-runner construction fails (a host that
+                # cannot compile/allocate its plan).  The build is retried
+                # immediately — charged as one retry — and repeated cold-
+                # build failures walk the host toward quarantine.
+                f = self.faults.ask("pool", host=host, L=L)
+                if f is not None:
+                    self.metrics.record_fault()
+                    self.metrics.record_retry()
+                    if self.tracer.enabled:
+                        self.tracer.event("chaos.fault", lane=host,
+                                          site="pool", action=f.action,
+                                          seq=f.seq, host=host, L=L)
+                    if self.health.record_failure(host, "pool-build"):
+                        self._quarantine(host)
             runner = BatchedLatticeRunner(ecfg, self._host_mesh(host))
             self._pool[key] = runner
         return runner
+
+    def _home(self, L: int) -> int:
+        """The lattice size's home host, re-homed deterministically onto a
+        healthy host when the sticky assignment is quarantined."""
+        host = self.router.host_for(L)
+        if self.health.is_quarantined(host):
+            healthy = self.health.healthy_hosts()
+            host = healthy[L % len(healthy)]
+        return host
 
     def pool_keys(self) -> list[tuple]:
         """Sorted warm-pool keys:
@@ -523,7 +603,53 @@ class SU3Service:
         """Total waiting requests across every host's batcher."""
         return sum(len(b) for b in self._batchers)
 
-    def submit(self, a: jax.Array, b: jax.Array, k: int | None = None) -> int | None:
+    def _deadline(self, deadline_s: float | None, arrival_s: float) -> float:
+        """Absolute deadline for a request: its own relative deadline, else
+        the configured default, else none (0.0)."""
+        d = self.cfg.default_deadline_s if deadline_s is None else deadline_s
+        if d and d > 0:
+            self._deadlines_armed = True
+            return arrival_s + d
+        return 0.0
+
+    def _shed(self, victim: ServeRequest, for_kind: str) -> None:
+        """Deliver a structured LoadShedError to a queue victim evicted to
+        admit a higher-priority arrival."""
+        self.metrics.record_shed(victim.kind)
+        self._results[victim.req_id] = LoadShedError(
+            req_id=victim.req_id, kind=victim.kind, priority=victim.priority,
+            shed_for_kind=for_kind, attempts=victim.attempts)
+        if self.tracer.enabled:
+            self.tracer.event(
+                "shed", lane=_request_lane(victim.req_id),
+                req_id=victim.req_id, kind=victim.kind)
+
+    def _admit(self, req: ServeRequest, host: int, load_flops: float,
+               depth: int) -> int | None:
+        """Shared admission tail: queue-budget check with priority-aware
+        shedding (the youngest strictly-lower-priority queued request is
+        evicted — with a structured error — to admit a latency-sensitive
+        arrival), then load/metrics/trace accounting."""
+        batcher = self._batchers[host]
+        if not batcher.submit(req):
+            victim = batcher.shed_lowest(req.priority)
+            if victim is not None:
+                self._shed(victim, req.kind)
+            if victim is None or not batcher.submit(req):
+                self.metrics.record_reject(req.kind)
+                return None
+        self.router.record_load(host, load_flops)
+        self._next_id += 1
+        self.metrics.record_admit(depth + 1)
+        if self.tracer.enabled:
+            self.tracer.event(
+                "admit", lane=_request_lane(req.req_id), req_id=req.req_id,
+                kind=req.kind, L=req.L, k=req.k, host=host,
+                queue_depth=depth + 1)
+        return req.req_id
+
+    def submit(self, a: jax.Array, b: jax.Array, k: int | None = None,
+               deadline_s: float | None = None) -> int | None:
         """Queue one lattice multiply on its home host's batcher.
 
         Args:
@@ -531,33 +657,29 @@ class SU3Service:
             b: canonical complex link matrix set ``(4, 3, 3)``.
             k: chain depth (``C = A⊗B`` applied k times); None = the
                 autotuned default for (backend, L).
+            deadline_s: relative deadline; None = the configured default.
+                A request past its deadline is evicted wherever it sits and
+                completes with a structured ``DeadlineExceededError``.
 
         Returns:
             A request id, or None when the home host's queue budget is
-            exhausted (backpressure — caller retries later).
+            exhausted (backpressure — caller retries later) and nothing
+            lower-priority could be shed to make room.
         """
         L = self._infer_L(a)
-        host = self.router.host_for(L)
+        host = self._home(L)
         depth = self.queued()
+        arrival = time.perf_counter()
         req = ServeRequest(
             req_id=self._next_id, a=a, b=b, L=L,
             k=k if k is not None else self.default_k_for(L),
-            arrival_s=time.perf_counter(),
+            arrival_s=arrival, deadline_s=self._deadline(deadline_s, arrival),
+            priority=PRIORITY["multiply"],
         )
-        if not self._batchers[host].submit(req):
-            self.metrics.record_reject()
-            return None
-        self.router.record_load(host, request_flops(req.n_sites, req.k))
-        self._next_id += 1
-        self.metrics.record_admit(depth + 1)
-        if self.tracer.enabled:
-            self.tracer.event(
-                "admit", lane=_request_lane(req.req_id), req_id=req.req_id,
-                kind="multiply", L=L, k=req.k, host=host,
-                queue_depth=depth + 1)
-        return req.req_id
+        return self._admit(req, host, request_flops(req.n_sites, req.k), depth)
 
-    def submit_stencil(self, u: jax.Array, v: jax.Array) -> int | None:
+    def submit_stencil(self, u: jax.Array, v: jax.Array,
+                       deadline_s: float | None = None) -> int | None:
         """Queue one nearest-neighbor stencil application on its home host.
 
         Args:
@@ -578,26 +700,21 @@ class SU3Service:
                 f"stencil vector field must be (L**4, 3) canonical complex "
                 f"matching the lattice, got {v.shape} for L={L}"
             )
-        host = self.router.host_for(L)
+        host = self._home(L)
         depth = self.queued()
+        arrival = time.perf_counter()
         req = ServeRequest(
             req_id=self._next_id, a=u, b=v, L=L, k=1,
-            arrival_s=time.perf_counter(), kind="stencil",
+            arrival_s=arrival, kind="stencil",
+            deadline_s=self._deadline(deadline_s, arrival),
+            priority=PRIORITY["stencil"],
         )
-        if not self._batchers[host].submit(req):
-            self.metrics.record_reject()
-            return None
-        self.router.record_load(host, float(STENCIL_FLOPS_PER_SITE) * req.n_sites)
-        self._next_id += 1
-        self.metrics.record_admit(depth + 1)
-        if self.tracer.enabled:
-            self.tracer.event(
-                "admit", lane=_request_lane(req.req_id), req_id=req.req_id,
-                kind="stencil", L=L, k=1, host=host, queue_depth=depth + 1)
-        return req.req_id
+        return self._admit(
+            req, host, float(STENCIL_FLOPS_PER_SITE) * req.n_sites, depth)
 
     def submit_solve(self, u: jax.Array, b: jax.Array, tol: float = 1e-6,
-                     max_iters: int = 200) -> int | None:
+                     max_iters: int = 200,
+                     deadline_s: float | None = None) -> int | None:
         """Queue one staggered CG solve ``(sigma I + S) x = b`` on its home
         host.
 
@@ -627,28 +744,20 @@ class SU3Service:
             raise ValueError(f"tol must be >= 0, got {tol}")
         if max_iters < 1:
             raise ValueError(f"max_iters must be >= 1, got {max_iters}")
-        host = self.router.host_for(L)
+        host = self._home(L)
         depth = self.queued()
+        arrival = time.perf_counter()
         req = ServeRequest(
             req_id=self._next_id, a=u, b=b, L=L, k=1,
-            arrival_s=time.perf_counter(), kind="solve",
+            arrival_s=arrival, kind="solve",
             tol=tol, max_iters=max_iters,
+            deadline_s=self._deadline(deadline_s, arrival),
+            priority=PRIORITY["solve"],
         )
-        if not self._batchers[host].submit(req):
-            self.metrics.record_reject()
-            return None
         # nominal admission charge: a typical shifted-CG iteration count;
         # the true data-dependent bill is charged per dispatched chunk
-        self.router.record_load(
-            host, float(CG_ITER_FLOPS_PER_SITE) * req.n_sites * 10
-        )
-        self._next_id += 1
-        self.metrics.record_admit(depth + 1)
-        if self.tracer.enabled:
-            self.tracer.event(
-                "admit", lane=_request_lane(req.req_id), req_id=req.req_id,
-                kind="solve", L=L, k=1, host=host, queue_depth=depth + 1)
-        return req.req_id
+        return self._admit(
+            req, host, float(CG_ITER_FLOPS_PER_SITE) * req.n_sites * 10, depth)
 
     # -- dispatch ------------------------------------------------------------
 
@@ -657,14 +766,211 @@ class SU3Service:
             return True
         if self._solves:
             return True
+        if self._retry_q:
+            return True
         if any(chain.live for chain, _ in self._chains.values()):
             return True
         return any(table.live for table, _ in self._tables.values())
 
     def pending(self) -> bool:
-        """True while any request waits in a queue or rides an in-flight
-        chain — the loop condition for external step() drivers."""
+        """True while any request waits in a queue, a retry backoff, or an
+        in-flight chain — the loop condition for external step() drivers."""
         return self._work_pending()
+
+    # -- failure lifecycle (ISSUE 9) ------------------------------------------
+
+    @staticmethod
+    def _finite(x: jax.Array) -> bool:
+        return bool(jax.device_get(jnp.all(jnp.isfinite(x))))
+
+    def _fail(self, req: ServeRequest, err: Exception) -> None:
+        """Deliver a structured failure through the result channel: a
+        stepping caller gets the exception object from ``pop_result``, an
+        ``arun`` caller gets it raised."""
+        self._results[req.req_id] = err
+
+    def _timeout(self, req: ServeRequest, now: float,
+                 partial: Any = None) -> None:
+        self.metrics.record_timeout(req.kind)
+        self._fail(req, DeadlineExceededError(
+            req_id=req.req_id, kind=req.kind,
+            deadline_s=req.deadline_s - req.arrival_s,
+            waited_s=now - req.arrival_s, attempts=req.attempts,
+            partial=partial))
+        if self.tracer.enabled:
+            self.tracer.event(
+                "timeout", lane=_request_lane(req.req_id), req_id=req.req_id,
+                kind=req.kind, waited_s=now - req.arrival_s)
+
+    def _retry_or_fail(self, req: ServeRequest, cause: str,
+                       terminal: Exception | None = None) -> bool:
+        """Charge one failed attempt: requeue with capped-exponential
+        backoff while the per-request cap and the service-wide retry budget
+        allow, else deliver the terminal structured error.  Returns True
+        when the request was requeued."""
+        req.attempts += 1
+        policy = self.cfg.retry
+        if req.attempts <= policy.max_retries and self._retry_budget > 0:
+            self._retry_budget -= 1
+            self.metrics.record_retry()
+            delay = policy.backoff_s(req.attempts, self._retry_rng)
+            self._retry_q.append((time.perf_counter() + delay, req))
+            if self.tracer.enabled:
+                self.tracer.event(
+                    "retry", lane=_request_lane(req.req_id),
+                    req_id=req.req_id, attempt=req.attempts, cause=cause,
+                    backoff_s=delay)
+            return True
+        self.metrics.record_retries_exhausted()
+        if terminal is None:
+            terminal = RetriesExhaustedError(
+                req_id=req.req_id, kind=req.kind, attempts=req.attempts,
+                cause=cause,
+                budget_exhausted=(self._retry_budget <= 0
+                                  and req.attempts <= policy.max_retries))
+        self._fail(req, terminal)
+        return False
+
+    def _charge_seated(self, occupants: list, evict_fn: Any,
+                       cause: str) -> None:
+        """Charge one failed dispatch to every seated occupant of a chain or
+        slot table: seated requests KEEP their seats while attempts remain
+        (the next turn re-dispatches the same state, bitwise clean); past
+        the per-request cap — or with the service retry budget dry — they
+        are evicted with a structured error.  One budget unit covers the
+        whole failed dispatch, not one per occupant."""
+        policy = self.cfg.retry
+        budget_dry = self._retry_budget <= 0
+        if not budget_dry:
+            self._retry_budget -= 1
+            self.metrics.record_retry()
+        for slot, req, _rem in occupants:
+            req.attempts += 1
+            if budget_dry or req.attempts > policy.max_retries:
+                evict_fn(slot)
+                self.metrics.record_retries_exhausted()
+                self._fail(req, RetriesExhaustedError(
+                    req_id=req.req_id, kind=req.kind, attempts=req.attempts,
+                    cause=cause, budget_exhausted=budget_dry))
+
+    def _drain_retry_queue(self, now: float) -> None:
+        """Move backoff-expired requests back into their (healthy) home
+        host's queue; a still-full queue waits another beat rather than
+        dropping the request (the deadline sweep bounds that wait)."""
+        still: list[tuple[float, ServeRequest]] = []
+        for eligible_s, req in self._retry_q:
+            if eligible_s > now:
+                still.append((eligible_s, req))
+            elif not self._batchers[self._home(req.L)].submit(req):
+                still.append((now + self.cfg.retry.base_s, req))
+        self._retry_q = still
+
+    def _evict_expired(self, now: float) -> None:
+        """The deadline sweep: evict every expired request wherever it sits
+        — queued, waiting out a backoff, seated in a live chain/table slot,
+        or the active solve — and deliver structured timeouts.  Freed seats
+        are immediately admissible (the same re-seating machinery mid-chain
+        admission uses)."""
+        for batcher in self._batchers:
+            for req in batcher.evict_expired(now):
+                self._timeout(req, now)
+        if self._retry_q:
+            keep = []
+            for eligible_s, req in self._retry_q:
+                if req.deadline_s and req.deadline_s <= now:
+                    self._timeout(req, now)
+                else:
+                    keep.append((eligible_s, req))
+            self._retry_q = keep
+        for host in list(self._solves):
+            active = self._solves[host]
+            req = active["req"]
+            if req.deadline_s and req.deadline_s <= now:
+                # best iterate so far rides out as the timeout's partial
+                partial = active["plan"].unpack_vec(active["state"]["x"])
+                del self._solves[host]
+                self._timeout(req, now, partial=partial)
+        for chain, arrays in self._chains.values():
+            for slot, req, _rem in chain.occupants():
+                if req.deadline_s and req.deadline_s <= now:
+                    chain.evict(slot)
+                    arrays.clear(slot)
+                    self._timeout(req, now)
+        for table, arrays in self._tables.values():
+            for slot, req, _rem in table.occupants():
+                if req.deadline_s and req.deadline_s <= now:
+                    table.evict(slot)
+                    arrays.clear(slot)
+                    self._timeout(req, now)
+
+    def _quarantine(self, host: int) -> None:
+        """Last rung of the degradation ladder: the health tracker latched
+        ``host`` out.  Every request it holds — queued, active solve, or
+        seated in a live chain/table slot — re-seats onto a healthy host
+        (mid-chain progress is discarded; the re-run is deterministic).
+        Re-seats that bounce off a full healthy queue fail structurally."""
+        moved: list[ServeRequest] = list(self._batchers[host].drain())
+        active = self._solves.pop(host, None)
+        if active is not None:
+            moved.append(active["req"])
+        for key in [k for k in self._chains if k[0] == host]:
+            chain, arrays = self._chains.pop(key)
+            for slot, req, _rem in chain.occupants():
+                chain.evict(slot)
+                arrays.clear(slot)
+                moved.append(req)
+        entry = self._tables.pop(host, None)
+        if entry is not None:
+            table, arrays = entry
+            for slot, req, _rem in table.occupants():
+                table.evict(slot)
+                arrays.clear(slot)
+                moved.append(req)
+        reseated = 0
+        for req in moved:
+            target = self._home(req.L)
+            if self._batchers[target].submit(req):
+                reseated += 1
+            else:
+                self.metrics.record_retries_exhausted()
+                self._fail(req, RetriesExhaustedError(
+                    req_id=req.req_id, kind=req.kind, attempts=req.attempts,
+                    cause="quarantine re-seat rejected under backpressure"))
+        self.metrics.record_quarantine(reseated=reseated)
+        if self.tracer.enabled:
+            self.tracer.event(
+                "chaos.quarantine", lane=host, host=host, reseated=reseated,
+                cause=self.health.last_cause[host])
+
+    def _dispatch_fault(self, host: int, kind: str, mode: str):
+        """Consult the ``dispatch`` seam.  Returns the Fault only for the
+        "fail" action (the caller runs its failure path); "delay" is applied
+        here — a stalled-rank injection, the launch still runs."""
+        f = self.faults.ask("dispatch", host=host, kind=kind, mode=mode)
+        if f is None:
+            return None
+        self.metrics.record_fault()
+        if self.tracer.enabled:
+            self.tracer.event(
+                "chaos.fault", lane=host, site="dispatch", action=f.action,
+                seq=f.seq, host=host, kind=kind, mode=mode)
+        if f.action == "delay":
+            time.sleep(f.delay_s)
+            return None
+        return f
+
+    def _poison_output(self, x: jax.Array, host: int, kind: str) -> jax.Array:
+        """Consult the ``kernel`` seam; a fired fault poisons the dispatch
+        output with NaN/Inf for the finiteness guard to catch."""
+        f = self.faults.ask("kernel", host=host, kind=kind)
+        if f is None:
+            return x
+        self.metrics.record_fault()
+        if self.tracer.enabled:
+            self.tracer.event(
+                "chaos.fault", lane=host, site="kernel", action=f.action,
+                seq=f.seq, host=host, kind=kind)
+        return poison_array(x, f.action)
 
     def step(self) -> int:
         """Advance the service by one scheduling turn; returns completed
@@ -682,10 +988,17 @@ class SU3Service:
         stream of one kind starves the others); stencils and solves never
         join multiply chains.
         """
+        now = time.perf_counter()
+        if self._retry_q:
+            self._drain_retry_queue(now)
+        if self._deadlines_armed:
+            self._evict_expired(now)
         order = ("multiply", "stencil", "solve")
         for _ in range(self.cfg.hosts):
             host = self._rr_host
             self._rr_host = (self._rr_host + 1) % self.cfg.hosts
+            if self.health.is_quarantined(host):
+                continue
             pending = {
                 "multiply": self._multiply_pending(host),
                 "stencil": bool(self._batchers[host].stencil_depths()),
@@ -738,6 +1051,17 @@ class SU3Service:
         reqs = batch.requests
         runner = self.runner_for(batch.L, host)
         n_sites = batch.L**4
+        if self.faults.enabled:
+            f = self._dispatch_fault(host, "multiply", "batch")
+            if f is not None:
+                # launch failed: every popped request goes down the retry
+                # path (backoff requeue, or structured exhaustion)
+                quarantined = self.health.record_failure(host, "dispatch")
+                for r in reqs:
+                    self._retry_or_fail(r, "injected dispatch failure")
+                if quarantined:
+                    self._quarantine(host)
+                return 0
         a = jnp.stack([r.a for r in reqs])
         b = jnp.stack([r.b for r in reqs])
         if batch.pad:
@@ -751,8 +1075,22 @@ class SU3Service:
         cold = shape_key not in self._seen_shapes
         t0 = time.perf_counter()
         c = runner.multiply(a, b, k=batch.k)
+        if self.faults.enabled:
+            c = self._poison_output(c, host, "multiply")
         c.block_until_ready()
         step_s = time.perf_counter() - t0
+        if (self.faults.enabled or self.cfg.numerics_guard) \
+                and not self._finite(c):
+            # poisoned (or genuinely non-finite) output: never delivered —
+            # the batch re-runs through the retry path, bitwise clean
+            quarantined = self.health.record_failure(host, "non-finite output")
+            for r in reqs:
+                self._retry_or_fail(r, "non-finite kernel output")
+            if quarantined:
+                self._quarantine(host)
+            return 0
+        if self.faults.enabled or self.cfg.numerics_guard:
+            self.health.record_success(host)
         self._seen_shapes.add(shape_key)
         self.metrics.record_dispatch(
             live=len(reqs), padded=batch.padded_size, step_s=step_s,
@@ -806,6 +1144,15 @@ class SU3Service:
         runner = self.runner_for(batch.L, host)
         plan = runner.plan
         n_sites = batch.L**4
+        if self.faults.enabled:
+            f = self._dispatch_fault(host, "stencil", "batch")
+            if f is not None:
+                quarantined = self.health.record_failure(host, "dispatch")
+                for r in reqs:
+                    self._retry_or_fail(r, "injected dispatch failure")
+                if quarantined:
+                    self._quarantine(host)
+                return 0
         # warm-size padding (jit-cache control) + device-multiple padding
         # (whole lattices per device, as the multiply path's run() pads)
         dispatched = batch.padded_size + (-batch.padded_size) % runner.n_devices
@@ -826,8 +1173,20 @@ class SU3Service:
         cold = shape_key not in self._seen_shapes
         t0 = time.perf_counter()
         out_p = step(u_phys, v_p)
+        if self.faults.enabled:
+            out_p = self._poison_output(out_p, host, "stencil")
         out_p.block_until_ready()
         step_s = time.perf_counter() - t0
+        if (self.faults.enabled or self.cfg.numerics_guard) \
+                and not self._finite(out_p):
+            quarantined = self.health.record_failure(host, "non-finite output")
+            for r in reqs:
+                self._retry_or_fail(r, "non-finite kernel output")
+            if quarantined:
+                self._quarantine(host)
+            return 0
+        if self.faults.enabled or self.cfg.numerics_guard:
+            self.health.record_success(host)
         self._seen_shapes.add(shape_key)
         self.metrics.record_dispatch(
             live=len(reqs), padded=dispatched, step_s=step_s,
@@ -867,6 +1226,7 @@ class SU3Service:
         active = {
             "req": req, "plan": plan, "runner": runner, "u_phys": u_phys,
             "state": state, "b_rs": b_rs, "stop2": req.tol * req.tol * b_rs,
+            "best": None,  # (rs_host, x) — carried on structured failures
         }
         self._solves[host] = active
         if self.tracer.enabled:
@@ -892,6 +1252,17 @@ class SU3Service:
             # zero right-hand side: x = 0 exactly; retire without iterating
             # (CG's alpha = <r,r>/<p,Ap> is 0/0 on this input)
             return self._retire_solve(host, active, state)
+        if self.faults.enabled:
+            f = self._dispatch_fault(host, "solve", "solve")
+            if f is not None:
+                # failed launch unseats the solve; a retry re-seats it fresh
+                # (CG restarts are deterministic — same b, same schedule)
+                del self._solves[host]
+                quarantined = self.health.record_failure(host, "dispatch")
+                self._retry_or_fail(req, "injected dispatch failure")
+                if quarantined:
+                    self._quarantine(host)
+                return 0
         n = min(self.cfg.solve_iters_per_step,
                 req.max_iters - state["iterations"])
         runner = active["runner"]
@@ -907,6 +1278,17 @@ class SU3Service:
                     jax.block_until_ready(state["rs"])
             else:
                 state = plan.cg_iterate(active["u_phys"], state)
+        if self.faults.enabled:
+            # "kernel" seam for solves: poison the chunk's residual scalar —
+            # the corrupted-iterate case the residual guard below must catch
+            fk = self.faults.ask("kernel", host=host, kind="solve")
+            if fk is not None:
+                self.metrics.record_fault()
+                if tr.enabled:
+                    tr.event("chaos.fault", lane=host, site="kernel",
+                             action=fk.action, seq=fk.seq, host=host,
+                             kind="solve")
+                state["rs"] = jnp.full_like(state["rs"], float("nan"))
         if tr.enabled:
             with tr.span("cg.reduce", lane=host, req_id=req.req_id,
                          it=state["iterations"]):
@@ -915,6 +1297,33 @@ class SU3Service:
             rs_host = float(jax.device_get(state["rs"]))  # syncs the chunk
         step_s = time.perf_counter() - t0
         active["state"] = state
+        if self.faults.enabled or self.cfg.numerics_guard:
+            # CG residual guard: NaN/Inf or blow-up is numerical breakdown —
+            # structured failure carrying the best iterate, never a hang
+            bad = not math.isfinite(rs_host) or (
+                rs_host > CG_DIVERGENCE_FACTOR * active["b_rs"])
+            if bad:
+                del self._solves[host]
+                reason = ("non-finite residual" if not math.isfinite(rs_host)
+                          else "diverged")
+                quarantined = self.health.record_failure(host, f"cg {reason}")
+                best = active["best"]
+                residual = (rs_host / active["b_rs"]) ** 0.5 \
+                    if math.isfinite(rs_host) else float("nan")
+                terminal = CGDivergedError(
+                    state["iterations"], residual, req.tol, reason=reason)
+                # canonical best iterate rides along for the caller (same
+                # shape the request's normal result would have had)
+                terminal.partial = (
+                    None if best is None else plan.unpack_vec(best[1]))
+                self._retry_or_fail(req, f"cg {reason}", terminal=terminal)
+                if quarantined:
+                    self._quarantine(host)
+                return 0
+            self.health.record_success(host)
+            best = active["best"]
+            if best is None or rs_host < best[0]:
+                active["best"] = (rs_host, state["x"])
         self._seen_shapes.add(shape_key)
         flops = float(CG_ITER_FLOPS_PER_SITE) * req.n_sites * n
         self.metrics.record_dispatch(
@@ -993,13 +1402,46 @@ class SU3Service:
                 continue
             runner = arrays.runner
             n_sites = L**4
+            if self.faults.enabled:
+                f = self._dispatch_fault(host, "multiply", "continuous")
+                if f is not None:
+                    quarantined = self.health.record_failure(host, "dispatch")
+                    self._charge_seated(
+                        chain.occupants(),
+                        lambda s, c=chain, a=arrays: (c.evict(s), a.clear(s)),
+                        "injected dispatch failure")
+                    if quarantined:
+                        self._quarantine(host)
+                        return completed  # this host's chains are gone
+                    continue  # seated survivors re-dispatch next turn
             shape_key = self._shape_key(runner, L, 1, slots)
             cold = shape_key not in self._seen_shapes
             live = chain.live
             t0 = time.perf_counter()
+            prev_a = arrays.a_phys
             arrays.advance()
+            if self.faults.enabled:
+                arrays.a_phys = self._poison_output(
+                    arrays.a_phys, host, "multiply")
             arrays.a_phys.block_until_ready()
             step_s = time.perf_counter() - t0
+            if (self.faults.enabled or self.cfg.numerics_guard) \
+                    and not self._finite(arrays.a_phys):
+                # roll the chain state back: the retried advance re-runs
+                # from the same iterate, bitwise clean
+                arrays.a_phys = prev_a
+                quarantined = self.health.record_failure(
+                    host, "non-finite output")
+                self._charge_seated(
+                    chain.occupants(),
+                    lambda s, c=chain, a=arrays: (c.evict(s), a.clear(s)),
+                    "non-finite kernel output")
+                if quarantined:
+                    self._quarantine(host)
+                    return completed
+                continue
+            if self.faults.enabled or self.cfg.numerics_guard:
+                self.health.record_success(host)
             self._seen_shapes.add(shape_key)
             self.metrics.record_dispatch(
                 live=live, padded=slots, step_s=step_s,
@@ -1086,13 +1528,55 @@ class SU3Service:
         ks = table.plan_k(self.cfg.chain_horizon)
         if any(ks):
             occupants = table.occupants()
+            degraded = False
+            quarantine_pending = False
+            if self.faults.enabled:
+                f = self._dispatch_fault(host, "multiply", "megakernel")
+                if f is not None:
+                    # degradation ladder: the failed megakernel batch
+                    # re-dispatches down the per-(L) chained path this turn
+                    # (one runner.multiply per live slot); repeated failures
+                    # still walk the host toward quarantine
+                    degraded = True
+                    self.metrics.record_degraded()
+                    quarantine_pending = self.health.record_failure(
+                        host, "dispatch")
             shape_key = ("mega", arrays.cap_L, table.slots, self.cfg.chain_horizon)
             cold = shape_key not in self._seen_shapes
             live = table.live
             t0 = time.perf_counter()
-            arrays.advance(ks)
+            prev_a = arrays.a_phys
+            if degraded:
+                for slot, req, _rem in occupants:
+                    if not ks[slot]:
+                        continue
+                    a_mid = arrays.result(slot, req.n_sites)
+                    c = self.runner_for(req.L, host).multiply(
+                        a_mid[None], jnp.asarray(req.b)[None], k=ks[slot])[0]
+                    arrays.seat(slot, c, req.b)
+            else:
+                arrays.advance(ks)
+                if self.faults.enabled:
+                    arrays.a_phys = self._poison_output(
+                        arrays.a_phys, host, "multiply")
             arrays.a_phys.block_until_ready()
             step_s = time.perf_counter() - t0
+            if not degraded and (self.faults.enabled or self.cfg.numerics_guard) \
+                    and not self._finite(arrays.a_phys):
+                arrays.a_phys = prev_a  # retried advance is bitwise clean
+                quarantined = self.health.record_failure(
+                    host, "non-finite output")
+                self._charge_seated(
+                    table.occupants(),
+                    lambda s, t=table, a=arrays: (t.evict(s), a.clear(s)),
+                    "non-finite kernel output")
+                if quarantined:
+                    self._quarantine(host)
+                else:
+                    self.metrics.record_queue_depth(self.queued())
+                return 0
+            if not degraded and (self.faults.enabled or self.cfg.numerics_guard):
+                self.health.record_success(host)
             self._seen_shapes.add(shape_key)
             dispatch_flops = sum(
                 request_flops(req.n_sites, ks[slot])
@@ -1117,16 +1601,29 @@ class SU3Service:
                 if self.tracer.enabled:
                     self._trace_request(req, done_s, host, "megakernel")
                 completed += 1
+            if quarantine_pending:
+                # crossed the consecutive-failure latch this turn: deliver
+                # the degraded batch's completions above, then re-seat the
+                # survivors onto healthy hosts
+                self._quarantine(host)
         self.metrics.record_queue_depth(self.queued())
         return completed
 
     def run_until_drained(self, max_steps: int = 10_000) -> int:
-        """Step until queues AND in-flight chains empty; returns completed."""
+        """Step until queues, retry backoffs AND in-flight chains empty;
+        returns completed."""
         total = 0
         for _ in range(max_steps):
             if not self._work_pending():
                 return total
-            total += self.step()
+            n = self.step()
+            total += n
+            if n == 0 and self._retry_q and not self._solves \
+                    and not any(len(b) for b in self._batchers):
+                # only backoff waits remain: sleep to the earliest eligible
+                # retry instead of spinning max_steps away
+                nxt = min(t for t, _ in self._retry_q)
+                time.sleep(max(0.0, min(nxt - time.perf_counter(), 0.01)))
         raise RuntimeError(f"queue not drained after {max_steps} steps")
 
     # -- results -------------------------------------------------------------
@@ -1134,8 +1631,11 @@ class SU3Service:
     def has_result(self, req_id: int) -> bool:
         return req_id in self._results
 
-    def pop_result(self, req_id: int) -> jax.Array:
-        """The canonical complex C lattice for a completed request (once)."""
+    def pop_result(self, req_id: int) -> Any:
+        """The canonical complex result for a completed request (once) — or
+        the structured failure object (:class:`RequestFailure` subclass, or
+        a ``CGDivergedError``) the request resolved with; check
+        ``isinstance(out, Exception)``.  ``arun`` raises these instead."""
         return self._results.pop(req_id)
 
     def pop_ready(self) -> dict[int, jax.Array]:
@@ -1157,25 +1657,39 @@ class SU3Service:
 
     # -- asyncio face --------------------------------------------------------
 
-    async def arun(self, a: jax.Array, b: jax.Array, k: int | None = None) -> jax.Array:
+    async def arun(self, a: jax.Array, b: jax.Array, k: int | None = None,
+                   deadline_s: float | None = None) -> jax.Array:
         """Submit and await one request from an asyncio front-end.
 
         Concurrent ``arun`` coroutines submitted in the same scheduler tick
         coalesce into one dispatch — whichever coroutine steps first serves
-        the whole bucket.  Backpressure surfaces as cooperative retry: a
-        rejected submit yields to the loop (letting other coroutines drain
-        the queue) and tries again.
+        the whole bucket.  Backpressure surfaces as cooperative retry with
+        CAPPED EXPONENTIAL BACKOFF: the first rejection yields to the loop
+        (letting other coroutines drain the queue) and retries immediately;
+        sustained rejection sleeps the retry policy's jittered, capped
+        schedule instead of pegging the event loop with submit attempts.
+        A request that resolves with a structured failure (deadline, shed,
+        retries exhausted, CG divergence) RAISES it here.
         """
-        req_id = self.submit(a, b, k)
+        req_id = self.submit(a, b, k, deadline_s=deadline_s)
+        attempt = 0
         while req_id is None:
-            await asyncio.sleep(0)
+            if attempt == 0:
+                await asyncio.sleep(0)  # same-tick coalescing fast path
+            else:
+                await asyncio.sleep(
+                    self.cfg.retry.backoff_s(attempt, self._retry_rng))
+            attempt += 1
             self.step()
-            req_id = self.submit(a, b, k)
+            req_id = self.submit(a, b, k, deadline_s=deadline_s)
         self._awaited.add(req_id)  # shield from a concurrent pop_ready drain
         try:
             while not self.has_result(req_id):
                 await asyncio.sleep(0)
                 self.step()
-            return self.pop_result(req_id)
+            out = self.pop_result(req_id)
+            if isinstance(out, Exception):
+                raise out
+            return out
         finally:
             self._awaited.discard(req_id)

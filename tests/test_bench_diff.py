@@ -194,7 +194,17 @@ def _full_artifact(*, mult_bps=384, mult_bf16_bps=192, st_bps=408,
         {"name": "cg_iter_L4_soa_float32_composed", "fused": False,
          "GFLOPS": 0.1},
     ]
-    art = _payload({"table2_variants": t2, "stencil": st, "cg": cg})
+    chaos = [
+        {"name": "serve_chaos", "faults_fired": 8,
+         "fired_by_site": {"dispatch": 3, "kernel": 4, "pool": 1},
+         "completed_ok": 13, "failed_structured": 0,
+         "zero_lost": True, "clean_results_bitwise": True,
+         "same_seed_reproduces": True, "p99_inflation": 0.9,
+         "p99_inflation_bounded": True, "recovery_max_s": 0.1,
+         "GFLOPS": 0.1},
+    ]
+    art = _payload({"table2_variants": t2, "stencil": st, "cg": cg,
+                    "chaos": chaos})
     art["provenance"] = _provenance()
     return art
 
@@ -380,3 +390,63 @@ def test_cg_gate_skips_comparison_on_tol_change(capsys):
     base = _full_artifact(cg_iters=3, cg_tol=1e-3)
     assert bench_diff.cg_gate(_full_artifact(cg_iters=30), base) == []
     assert "different tol" in capsys.readouterr().out
+
+
+# -- chaos gate ----------------------------------------------------------------
+
+
+def _chaos_row(**over):
+    row = {"name": "serve_chaos", "L": 2, "seed": 0, "faults_fired": 8,
+           "fired_by_site": {"dispatch": 3, "kernel": 4, "pool": 1},
+           "completed_ok": 13, "failed_structured": 0,
+           "zero_lost": True, "clean_results_bitwise": True,
+           "same_seed_reproduces": True, "p99_inflation": 0.9,
+           "p99_inflation_bounded": True, "recovery_max_s": 0.1,
+           "retries": 12, "GFLOPS": 0.1}
+    row.update(over)
+    return row
+
+
+def test_chaos_gate_passes_on_honest_row(capsys):
+    art = _payload({"chaos": [_chaos_row()]})
+    assert bench_diff.chaos_gate(art) == []
+    out = capsys.readouterr().out
+    assert "8 faults" in out and "same-seed reproduced" in out
+
+
+def test_chaos_gate_fails_each_broken_contract():
+    missing = _payload({"chaos": []})
+    assert any("serve_chaos row missing" in p
+               for p in bench_diff.chaos_gate(missing))
+    errored = _payload({"chaos": [_chaos_row(error="boom")]})
+    assert bench_diff.chaos_gate(errored) == ["serve_chaos: row errored: boom"]
+    dud = _payload({"chaos": [_chaos_row(faults_fired=0)]})
+    assert any("fired no faults" in p for p in bench_diff.chaos_gate(dud))
+    for flag, needle in (
+        ("zero_lost", "LOST REQUESTS"),
+        ("clean_results_bitwise", "NOT bitwise identical"),
+        ("same_seed_reproduces", "did NOT reproduce"),
+        ("p99_inflation_bounded", "exceeds the ceiling"),
+    ):
+        # both an explicit False and a silently dropped flag must fail
+        for bad in ({flag: False}, {flag: None}):
+            art = _payload({"chaos": [_chaos_row(**bad)]})
+            assert any(needle in p for p in bench_diff.chaos_gate(art)), flag
+
+
+def test_main_runs_chaos_gate_on_harness_artifacts(tmp_path):
+    import json
+    absent = str(tmp_path / "absent.json")
+    # a harness artifact (gated tables present) with a broken chaos row fails
+    art = _full_artifact()
+    art["tables"]["chaos"] = [_chaos_row(zero_lost=False)]
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(art))
+    assert bench_diff.main(["--current", str(bad), "--baseline", absent]) == 1
+    assert bench_diff.main(["--current", str(bad), "--baseline", absent,
+                            "--no-chaos-gate"]) == 0
+    # honest chaos row passes end to end
+    art["tables"]["chaos"] = [_chaos_row()]
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(art))
+    assert bench_diff.main(["--current", str(good), "--baseline", absent]) == 0

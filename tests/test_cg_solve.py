@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from repro.core.su3.layouts import Layout
 from repro.core.su3.plan import (
     CG_SHIFT,
+    CGDivergedError,
     CGMaxItersError,
     EngineConfig,
     build_plan,
@@ -208,3 +209,61 @@ def test_fused_composed_bit_identical_multihost_subprocess(
     fused and composed iterates stay bitwise equal on 1-, 2-, and 4-host
     (slab-degenerate) forced-device meshes."""
     assert forced_subprocess_json(_MULTIHOST_SUBPROC) == [1, 2, 4]
+
+
+# -- partial results and resume (ISSUE 9) -------------------------------------
+
+
+def test_cg_max_iters_carries_partial_result_for_resume():
+    """CGMaxItersError hands back the best iterate as a partial CGResult;
+    resuming from it (``x0_p=err.result.x_p``) converges and solves the
+    system.  CG is non-monotone in exact-arithmetic terms, so the resume
+    contract is the warm start — the first resumed residual picks up near
+    the partial's best — not an iteration-count saving."""
+    L = 2
+    plan = _plan_for(L, Layout.SOA, "float32", "", "none")
+    u, b = _su3_problem(L)
+    u_phys, b_p = plan.pack_gauge(u), plan.pack_rhs(b)
+    with pytest.raises(CGMaxItersError) as ei:
+        plan.cg_solve(u_phys, b_p, tol=1e-6, max_iters=4)
+    err = ei.value
+    assert err.result is not None and not err.result.converged
+    assert err.result.iterations == 4
+    assert len(err.result.residuals) == 4
+    best = min(err.result.residuals)
+
+    res = plan.cg_solve(u_phys, b_p, tol=1e-6, max_iters=64,
+                        x0_p=err.result.x_p)
+    assert res.converged
+    # the warm start is real: the resumed run opens at the partial's best
+    # residual scale, not at the cold start's ~1.0
+    assert res.residuals[0] <= best * 4.0
+    x = plan.unpack_vec(res.x_p)
+    ax = CG_SHIFT * x + stencil_apply_reference(u, x, L)
+    rel = float(jnp.linalg.norm(ax - b) / jnp.linalg.norm(b))
+    assert rel <= 1e-5
+
+
+def test_cg_diverges_structurally_on_non_finite_rhs():
+    plan = _plan_for(2, Layout.SOA, "float32", "", "none")
+    u, b = _su3_problem(2)
+    bad = b.at[0, 0].set(jnp.nan)
+    with pytest.raises(CGDivergedError) as ei:
+        plan.cg_solve(plan.pack_gauge(u), plan.pack_rhs(bad), tol=1e-6,
+                      max_iters=8)
+    assert ei.value.reason == "non-finite right-hand side"
+    assert ei.value.iterations == 0 and ei.value.result is None
+
+
+def test_cg_diverges_structurally_on_non_finite_operator():
+    plan = _plan_for(2, Layout.SOA, "float32", "", "none")
+    u, b = _su3_problem(2)
+    bad_u = u.at[0, 0, 0, 0].set(jnp.nan)
+    with pytest.raises(CGDivergedError) as ei:
+        plan.cg_solve(plan.pack_gauge(bad_u), plan.pack_rhs(b), tol=1e-6,
+                      max_iters=8)
+    assert ei.value.reason == "non-finite residual"
+    assert ei.value.iterations == 1  # caught at the first residual sync
+    # the poison hit before any finite iterate existed, so there is no
+    # partial to resume from — result stays None rather than lying
+    assert ei.value.result is None

@@ -1,0 +1,200 @@
+"""repro.chaos: FaultPlan determinism, schedules, poison helpers, halo seam."""
+import json
+
+import pytest
+
+import jax.numpy as jnp
+
+from repro.chaos import (
+    NULL_FAULT_PLAN,
+    SITE_ACTIONS,
+    SITES,
+    FaultPlan,
+    FaultSpec,
+    corrupt_ghosts,
+    poison_array,
+    storm,
+)
+
+pytestmark = pytest.mark.chaos
+
+
+def _drive(plan: FaultPlan, schedule):
+    """Ask the plan per (site, n_asks) schedule; return the fired log."""
+    for site, n in schedule:
+        for _ in range(n):
+            plan.ask(site)
+    return plan.log()
+
+
+# -- determinism ---------------------------------------------------------------
+
+
+def test_same_seed_reproduces_fault_log():
+    sites = {
+        "dispatch": FaultSpec(probability=0.5, actions=("fail", "delay")),
+        "kernel": FaultSpec(probability=0.4, actions=("nan", "inf")),
+    }
+    schedule = [("dispatch", 7), ("kernel", 5), ("dispatch", 3), ("kernel", 9)]
+    log1 = _drive(FaultPlan(11, sites), schedule)
+    log2 = _drive(FaultPlan(11, sites), schedule)
+    assert log1 == log2 and len(log1) > 0
+
+
+def test_site_streams_independent_of_interleaving():
+    # the per-site (action, site_seq) sequence depends only on that site's
+    # ask count — the property that makes a serving-stack storm replayable
+    sites = {
+        "dispatch": FaultSpec(probability=0.5, actions=("fail", "delay")),
+        "kernel": FaultSpec(probability=0.5, actions=("nan", "inf")),
+    }
+    blocked = _drive(FaultPlan(3, sites), [("dispatch", 10), ("kernel", 10)])
+    inter = FaultPlan(3, sites)
+    for _ in range(10):
+        inter.ask("dispatch")
+        inter.ask("kernel")
+    by_site = lambda log: {  # noqa: E731
+        s: [(e["action"], e["site_seq"]) for e in log if e["site"] == s]
+        for s in ("dispatch", "kernel")
+    }
+    assert by_site(blocked) == by_site(inter.log())
+
+
+def test_different_seed_differs():
+    sites = {"dispatch": FaultSpec(probability=0.5, actions=("fail",))}
+    schedule = [("dispatch", 64)]
+    assert _drive(FaultPlan(0, sites), schedule) != _drive(
+        FaultPlan(1, sites), schedule)
+
+
+def test_reset_rebuilds_the_identical_plan():
+    plan = storm(9, dispatch_p=0.6, kernel_p=0.6)
+    log1 = _drive(plan, [("dispatch", 8), ("kernel", 8)])
+    again = plan.reset()
+    assert again.seed == plan.seed and again.specs == plan.specs
+    assert _drive(again, [("dispatch", 8), ("kernel", 8)]) == log1
+
+
+# -- schedules -----------------------------------------------------------------
+
+
+def test_after_and_max_fires_bound_the_storm():
+    plan = FaultPlan(0, {"dispatch": FaultSpec(
+        probability=1.0, actions=("fail",), after=2, max_fires=3)})
+    fired = [plan.ask("dispatch") is not None for _ in range(10)]
+    # never in the first `after` asks, then exactly max_fires, then silence
+    assert fired == [False, False, True, True, True] + [False] * 5
+    assert plan.fired == 3
+    assert plan.fired_by_site() == {"dispatch": 3}
+    assert [f["site_seq"] for f in plan.log()] == [2, 3, 4]
+
+
+def test_delay_action_carries_delay_seconds():
+    plan = FaultPlan(0, {"dispatch": FaultSpec(
+        probability=1.0, actions=("delay",), delay_s=0.25)})
+    f = plan.ask("dispatch", host=3)
+    assert f.action == "delay" and f.delay_s == 0.25
+    assert dict(f.ctx) == {"host": 3}
+
+
+def test_unknown_site_and_action_rejected():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan(0, {"gpu": FaultSpec(probability=0.5)})
+    with pytest.raises(ValueError, match="does not support actions"):
+        FaultPlan(0, {"kernel": FaultSpec(probability=0.5, actions=("drop",))})
+    with pytest.raises(ValueError, match="probability"):
+        FaultSpec(probability=1.5)
+
+
+def test_disabled_plan_never_fires_and_never_draws():
+    assert not NULL_FAULT_PLAN.enabled
+    assert NULL_FAULT_PLAN.ask("dispatch") is None
+    assert NULL_FAULT_PLAN.fired == 0
+    # a plan whose sites all have probability 0 is dead too — the hot-path
+    # guard `if faults.enabled` stays one always-false branch
+    dead = FaultPlan(0, {"kernel": FaultSpec(probability=0.0)})
+    assert not dead.enabled and dead.ask("kernel") is None
+
+
+def test_describe_is_json_round_trippable_provenance():
+    plan = storm(5, dispatch_p=0.3, halo_p=0.2, kernel_p=0.1, pool_p=0.4,
+                 after=1, max_fires=2)
+    desc = json.loads(json.dumps(plan.describe()))
+    assert desc["seed"] == 5
+    assert set(desc["sites"]) == {"dispatch", "halo", "kernel", "pool"}
+    assert desc["sites"]["halo"]["actions"] == list(SITE_ACTIONS["halo"])
+    assert desc["sites"]["dispatch"]["max_fires"] == 2
+
+
+def test_storm_builder_skips_zero_probability_sites():
+    plan = storm(0, kernel_p=0.5)
+    assert set(plan.specs) == {"kernel"}
+    assert set(SITE_ACTIONS) == set(SITES)
+
+
+# -- poison helpers ------------------------------------------------------------
+
+
+def test_poison_array_nan_and_inf_hit_one_fixed_element():
+    x = jnp.ones((3, 4), jnp.complex64)
+    for action, pred in (("nan", jnp.isnan), ("inf", jnp.isinf)):
+        bad = poison_array(x, action)
+        assert bad.shape == x.shape and bad.dtype == x.dtype
+        flat = jnp.ravel(bad)
+        assert bool(pred(jnp.real(flat[0])))
+        assert bool(jnp.all(flat[1:] == 1.0))
+
+
+def test_corrupt_ghosts_drop_zeroes_and_corrupt_nans():
+    ghosts = (jnp.ones((2, 3)), jnp.full((4,), 2.0))
+    dropped = corrupt_ghosts(ghosts, "drop")
+    assert all(bool(jnp.all(g == 0)) for g in dropped)
+    assert [g.shape for g in dropped] == [g.shape for g in ghosts]
+    mangled = corrupt_ghosts(ghosts, "corrupt")
+    assert all(bool(jnp.all(jnp.isnan(g))) for g in mangled)
+
+
+# -- the plan-level halo seam (needs a real multi-host boundary) ---------------
+
+
+_HALO_SEAM_CODE = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax
+import jax.numpy as jnp
+from repro.core.su3.plan import EngineConfig, build_plan
+from repro.launch.mesh import MeshSpec
+from repro.chaos import FaultPlan, FaultSpec
+
+plan = build_plan(EngineConfig(L=2, tile=16, iterations=1, warmups=0),
+                  MeshSpec(hosts=2, devices_per_host=1))
+u, v = plan.init_stencil_data()
+step = plan.stencil_step(overlap=True)
+clean = step(u, v)
+
+plan.faults = FaultPlan(7, {"halo": FaultSpec(probability=1.0, actions=("drop",))})
+dropped = step(u, v)
+fired_drop = plan.faults.fired
+
+plan.faults = FaultPlan(7, {"halo": FaultSpec(probability=1.0, actions=("corrupt",))})
+corrupted = step(u, v)
+
+from repro.chaos import NULL_FAULT_PLAN
+plan.faults = NULL_FAULT_PLAN
+clean_again = step(u, v)
+
+print(json.dumps({
+    "fired_drop": fired_drop,
+    "drop_changes_boundary": not bool(jnp.array_equal(clean, dropped)),
+    "corrupt_non_finite": not bool(jnp.all(jnp.isfinite(jnp.real(corrupted)))),
+    "clean_path_bitwise_restored": bool(jnp.array_equal(clean, clean_again)),
+}))
+"""
+
+
+def test_halo_fault_corrupts_only_faulted_steps(forced_subprocess_json):
+    out = forced_subprocess_json(_HALO_SEAM_CODE)
+    assert out["fired_drop"] == 1
+    assert out["drop_changes_boundary"] is True
+    assert out["corrupt_non_finite"] is True
+    assert out["clean_path_bitwise_restored"] is True
