@@ -4,7 +4,11 @@ Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
 ``us_per_call`` is the best iteration time where measured (engine rows) and
 empty for analytic tables; ``derived`` carries the table-specific payload.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--json [PATH]]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json [PATH]] [--seed N]
+
+``--seed`` re-keys the seeded sections (the chaos fault storm and the
+tenancy mix) so their deterministic schedules can be varied without
+touching the timing tables.
 
 ``--json`` additionally writes a machine-readable ``BENCH_su3.json`` (all
 rows, grouped per table, with GFLOPS/GBYTES where measured) so the perf
@@ -46,11 +50,16 @@ def main(argv: list[str] | None = None) -> None:
         i = argv.index("--json")
         nxt = argv[i + 1] if i + 1 < len(argv) else None
         json_path = nxt if nxt and not nxt.startswith("--") else DEFAULT_JSON
+    seed = 0  # seeded sections (chaos storm, tenancy mix) key off this
+    if "--seed" in argv:
+        i = argv.index("--seed")
+        if i + 1 < len(argv):
+            seed = int(argv[i + 1])
 
     from benchmarks import (
         cg_solve, fig7_strong_scaling, fig9_gemm_vs_dot, fig10_arch_compare,
-        lm_step, serve_chaos, serve_traffic, stencil, table1_roofline,
-        table2_variants, table3_placement,
+        lm_step, serve_chaos, serve_tenancy, serve_traffic, stencil,
+        table1_roofline, table2_variants, table3_placement,
     )
 
     collected: dict[str, list[dict]] = {}
@@ -67,7 +76,8 @@ def main(argv: list[str] | None = None) -> None:
         ("fig10_arch_compare", lambda: fig10_arch_compare.run(L=8 if not quick else 4)),
         ("lm_step", lambda: lm_step.run()),
         ("serve", lambda: serve_traffic.run(quick=quick)),
-        ("chaos", lambda: serve_chaos.run(quick=quick)),
+        ("chaos", lambda: serve_chaos.run(quick=quick, seed=seed)),
+        ("tenancy", lambda: serve_tenancy.run(quick=quick, seed=seed)),
         ("stencil", lambda: stencil.run(quick=quick)),
         ("cg", lambda: cg_solve.run(quick=quick)),
     ]

@@ -208,6 +208,7 @@ def fault_storm(L: int = 2, n_multiply: int = 20, seed: int = 0) -> dict:
     return {
         "name": "serve_chaos",
         "L": L,
+        "seed": seed,
         "n_multiply": n_multiply,
         "n_solve": 1,
         "tol": tol,

@@ -65,6 +65,18 @@ reproduce the same fault sequence, and p99 inflation must stay bounded.
 These are determinism/accounting properties, not timings — no noise
 retry.  ``--no-chaos-gate`` skips the block (pre-chaos artifacts).
 
+The tenancy gate checks the multi-tenant SLO contract on the CURRENT
+artifact's ``serve_tenancy`` row (``benchmarks/serve_tenancy.py``): the
+steady tenant's latency-class p99 under the bulk flood must stay within
+the published ceiling of its unloaded p99, Jain fairness over delivered
+bulk work must clear the floor, the flood must actually climb the
+brownout ladder and the same seed must reproduce its transition log,
+and every submission must resolve (zero lost).  The latency/fairness
+verdicts are computed against the row's own unloaded baseline (same
+process, same warm state), so they are paired measurements rather than
+absolute timings — no noise retry.  ``--no-tenancy-gate`` skips the
+block (pre-tenancy artifacts).
+
 The gate also verifies run PROVENANCE (``repro.obs.provenance_block``):
 a harness artifact without a provenance block fails, as does a diff whose
 jax/jaxlib/backend/device identity changed between baseline and current
@@ -492,6 +504,61 @@ def chaos_gate(current: dict) -> list[str]:
     return problems
 
 
+def tenancy_gate(current: dict) -> list[str]:
+    """Multi-tenant SLO checks on the ``serve_tenancy`` row; -> problems
+    (empty = pass).
+
+    Fairness / latency-isolation / brownout-replay verdicts are computed
+    by the benchmark itself against its own in-process unloaded baseline
+    (paired measurements, not absolute timings), so like the chaos gate
+    this tool only checks the flags and stays importable without the jax
+    stack.  No noise retry: a violation is a real scheduling break.
+    """
+    row = _rows_by_name(current, "tenancy").get("serve_tenancy")
+    if row is None:
+        return ["tenancy: serve_tenancy row missing — the adversarial "
+                "tenant mix did not run (or the tenancy table was dropped)"]
+    if row.get("error"):
+        return [f"serve_tenancy: row errored: {row['error']}"]
+    problems = []
+    if row.get("zero_lost") is not True:
+        problems.append("serve_tenancy: LOST REQUESTS — a submitted request "
+                        "resolved as neither result, structured failure, nor "
+                        "deterministic front-door rejection")
+    if row.get("latency_bounded") is not True:
+        problems.append(f"serve_tenancy: latency-class p99 under the bulk "
+                        f"burst is {row.get('latency_inflation')}x the "
+                        f"unloaded p99 — exceeds the ceiling (tenant "
+                        f"isolation broke)")
+    if row.get("fairness_ok") is not True:
+        problems.append(f"serve_tenancy: Jain fairness "
+                        f"{row.get('jain_fairness')} over delivered bulk "
+                        f"work is under the floor — the burst tenant "
+                        f"starved the drip tenant")
+    if not row.get("brownout_transitions", 0):
+        problems.append("serve_tenancy: the flood never climbed the "
+                        "brownout ladder — the row proves nothing about "
+                        "overload control")
+    if row.get("brownout_signature_reproduced") is not True:
+        problems.append("serve_tenancy: the same seed did NOT reproduce "
+                        "the brownout transition log")
+    if row.get("same_seed_reproduces") is not True:
+        problems.append("serve_tenancy: the same seed did NOT reproduce "
+                        "the same fault sequence")
+    if row.get("clean_results_bitwise") is not True:
+        problems.append("serve_tenancy: a multiply that succeeded under the "
+                        "storm is NOT bitwise identical to the clean "
+                        "loaded run")
+    if not problems:
+        print(f"  serve_tenancy: latency p99 x{row.get('latency_inflation')}"
+              f" under flood, Jain {row.get('jain_fairness')}, brownout "
+              f"{row.get('brownout_transitions')} transition(s) "
+              f"{row.get('brownout_signature')}, "
+              f"{row.get('quota_rejected')} quota-rejected, 0 lost, "
+              f"same-seed reproduced")
+    return problems
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default=DEFAULT_ARTIFACT,
@@ -514,6 +581,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--no-chaos-gate", action="store_true",
                     help="skip the serve_chaos robustness checks "
                          "(pre-chaos artifacts)")
+    ap.add_argument("--no-tenancy-gate", action="store_true",
+                    help="skip the serve_tenancy multi-tenant SLO checks "
+                         "(pre-tenancy artifacts)")
     ap.add_argument("--no-provenance-gate", action="store_true",
                     help="skip the provenance-block checks "
                          "(pre-provenance artifacts)")
@@ -572,6 +642,12 @@ def main(argv: list[str] | None = None) -> int:
         for p in chaos_problems:
             print(f"  FAIL {p}", file=sys.stderr)
         problems.extend(chaos_problems)
+    if not args.no_tenancy_gate and gate_applies:
+        print("bench_diff: tenancy gate (multi-tenant SLO contract):")
+        tenancy_problems = tenancy_gate(current)
+        for p in tenancy_problems:
+            print(f"  FAIL {p}", file=sys.stderr)
+        problems.extend(tenancy_problems)
 
     if baseline is None:
         print(f"bench_diff: no baseline at {args.baseline!r}; nothing to diff")

@@ -48,6 +48,16 @@ python -m pytest -x -q \
   tests/test_robustness.py::test_storm_zero_lost_and_bitwise_clean \
   tests/test_chaos.py::test_same_seed_reproduces_fault_log
 
+echo "== tenancy spot check (deficit-fair turns + brownout replay determinism) =="
+# Seconds, not minutes: ONE service-level fairness check (two tenants'
+# bulk queues earn equal DRR turns however lopsided the backlogs) and ONE
+# brownout-ladder signature replay check, so a broken scheduler or a
+# non-deterministic overload ladder surfaces before the full tiers.  The
+# full multi-tenant matrix (-m tenancy) rides in the fast tier below.
+python -m pytest -x -q \
+  tests/test_tenancy.py::test_deficit_fair_turns_across_tenants_in_service \
+  tests/test_tenancy.py::test_brownout_signature_is_replay_deterministic
+
 echo "== CG solver spot check (convergence pin + fused bit-identity) =="
 # The flagship solve, in seconds: ONE end-to-end convergence check against
 # the independent oracle and ONE fused-vs-composed bit-identity check, so
@@ -96,6 +106,9 @@ if [[ "$RUN_BENCH" == 1 ]]; then
   # and may not need >10% more iterations to the committed tol.  The chaos
   # gate does too: the serve_chaos storm row must report zero lost
   # requests, bitwise-clean successes, and same-seed fault reproduction.
+  # So does the tenancy gate: the serve_tenancy row must hold the latency
+  # p99 ceiling under the bulk flood, clear the Jain fairness floor, and
+  # reproduce its brownout transition log from the same seed.
   python scripts/bench_diff.py --current BENCH_su3.json --baseline git:HEAD \
     --threshold "${BENCH_DIFF_THRESHOLD:-0.15}"
 fi

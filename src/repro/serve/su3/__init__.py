@@ -15,6 +15,11 @@ Public surface:
                                through the result channel (DeadlineExceeded
                                / RetriesExhausted / LoadShed), plus the
                                RetryPolicy / HostHealth robustness knobs
+  tenancy layer                SLO classes (latency/bulk) + SLOPolicy,
+                               per-tenant TenantQuota token buckets, the
+                               DeficitFairScheduler over (tenant, class)
+                               groups, WarmPoolAutoscaler, and the
+                               three-rung BrownoutLadder overload control
 """
 from repro.serve.su3.batcher import (
     BatcherConfig,
@@ -35,11 +40,30 @@ from repro.serve.su3.robustness import (
     RetryPolicy,
 )
 from repro.serve.su3.service import ServiceConfig, SU3Service
+from repro.serve.su3.tenancy import (
+    DEFAULT_TENANT,
+    SLO_BULK,
+    SLO_CLASSES,
+    SLO_LATENCY,
+    AutoscaleConfig,
+    BrownoutConfig,
+    BrownoutLadder,
+    DeficitFairScheduler,
+    SLOPolicy,
+    TenantQuota,
+    TokenBucket,
+    WarmPoolAutoscaler,
+)
 
 __all__ = [
+    "AutoscaleConfig",
     "BatcherConfig",
+    "BrownoutConfig",
+    "BrownoutLadder",
     "CoalescedBatch",
+    "DEFAULT_TENANT",
     "DeadlineExceededError",
+    "DeficitFairScheduler",
     "DynamicBatcher",
     "HostHealth",
     "InflightChain",
@@ -49,9 +73,16 @@ __all__ = [
     "RequestFailure",
     "RetriesExhaustedError",
     "RetryPolicy",
+    "SLOPolicy",
+    "SLO_BULK",
+    "SLO_CLASSES",
+    "SLO_LATENCY",
     "ServeRequest",
     "ServiceMetrics",
     "ServiceConfig",
     "SU3Service",
+    "TenantQuota",
+    "TokenBucket",
+    "WarmPoolAutoscaler",
     "request_flops",
 ]

@@ -50,6 +50,8 @@ import time
 from collections import OrderedDict
 from typing import Any
 
+from repro.serve.su3.tenancy import DEFAULT_TENANT, SLO_BULK, GroupKey
+
 BucketKey = tuple[int, int]  # (L, chain depth k)
 
 
@@ -88,6 +90,10 @@ class ServeRequest:
     priority: int = 0  # shedding priority (robustness.PRIORITY[kind]): under
     # backpressure, lower priorities shed first to admit higher ones
     attempts: int = 0  # dispatch attempts consumed (retry accounting)
+    tenant: str = DEFAULT_TENANT  # tenant identity (quota + fairness group)
+    slo: str = SLO_BULK  # SLO class: "latency" (preempting, never shed) or
+    # "bulk" (preemptible, the only sheddable lane); defaults bulk so a raw
+    # request stays sheddable — the service sets the per-kind class default
 
     @property
     def n_sites(self) -> int:
@@ -96,6 +102,11 @@ class ServeRequest:
     @property
     def bucket(self) -> BucketKey:
         return (self.L, self.k)
+
+    @property
+    def group(self) -> GroupKey:
+        """The (tenant, SLO class) fairness group this request bills to."""
+        return (self.tenant, self.slo)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,16 +177,22 @@ class DynamicBatcher:
 
     def __init__(self, cfg: BatcherConfig | None = None):
         self.cfg = cfg if cfg is not None else BatcherConfig()
-        # bucket -> FIFO of requests; OrderedDict keeps bucket creation order
-        # as the tiebreak when head-request arrival times are equal.
-        self._buckets: "OrderedDict[BucketKey, list[ServeRequest]]" = OrderedDict()
+        # (group, bucket) -> FIFO of requests; OrderedDict keeps creation
+        # order as the tiebreak when head-request arrival times are equal.
+        # Keying the families by (tenant, SLO class) FIRST means a coalesced
+        # dispatch only ever carries one group's requests — tenant isolation
+        # extends into the batch, not just the queue.
+        self._buckets: "OrderedDict[tuple[GroupKey, BucketKey], list[ServeRequest]]" \
+            = OrderedDict()
         # stencil requests coalesce by L only (no chain depth); they never
         # ride multiply chains, so they live in their own queue family
-        self._stencil: "OrderedDict[int, list[ServeRequest]]" = OrderedDict()
+        self._stencil: "OrderedDict[tuple[GroupKey, int], list[ServeRequest]]" \
+            = OrderedDict()
         # solve requests also queue by L; the service advances ONE active
         # solve per host a few CG iterations per turn, so this family feeds
         # that seat oldest-first
-        self._solve: "OrderedDict[int, list[ServeRequest]]" = OrderedDict()
+        self._solve: "OrderedDict[tuple[GroupKey, int], list[ServeRequest]]" \
+            = OrderedDict()
         self._depth = 0
 
     def __len__(self) -> int:
@@ -186,74 +203,136 @@ class DynamicBatcher:
         return self._depth
 
     def bucket_depths(self) -> dict[BucketKey, int]:
-        return {k: len(v) for k, v in self._buckets.items() if v}
+        """Waiting multiplies per (L, k), aggregated over tenant groups
+        (the pre-tenancy key shape every caller and test pins)."""
+        out: dict[BucketKey, int] = {}
+        for (_g, key), q in self._buckets.items():
+            if q:
+                out[key] = out.get(key, 0) + len(q)
+        return out
 
     def stencil_depths(self) -> dict[int, int]:
-        """Waiting stencil requests per lattice size."""
-        return {L: len(q) for L, q in self._stencil.items() if q}
+        """Waiting stencil requests per lattice size (all groups)."""
+        out: dict[int, int] = {}
+        for (_g, L), q in self._stencil.items():
+            if q:
+                out[L] = out.get(L, 0) + len(q)
+        return out
 
     def solve_depths(self) -> dict[int, int]:
-        """Waiting solve requests per lattice size."""
-        return {L: len(q) for L, q in self._solve.items() if q}
+        """Waiting solve requests per lattice size (all groups)."""
+        out: dict[int, int] = {}
+        for (_g, L), q in self._solve.items():
+            if q:
+                out[L] = out.get(L, 0) + len(q)
+        return out
+
+    # -- tenancy views ---------------------------------------------------------
+
+    def pending_kinds_by_group(self) -> dict[GroupKey, set[str]]:
+        """Queued work per (tenant, SLO class) group: group -> kinds with at
+        least one waiting request — the fair scheduler's pending set."""
+        out: dict[GroupKey, set[str]] = {}
+        for kind, (group, _key), q in self._family_items():
+            if q:
+                out.setdefault(group, set()).add(kind)
+        return out
+
+    def depth_for_slo(self, slo: str) -> int:
+        """Total queued requests of one SLO class (any tenant, any kind) —
+        the brownout ladder's reduced-bulk-budget check."""
+        return sum(
+            len(q) for _kind, (group, _key), q in self._family_items()
+            if group[1] == slo
+        )
+
+    def has_waiting(self, kind: str, L: int | None = None,
+                    slo: str | None = None) -> bool:
+        """Any queued request of ``kind`` (optionally restricted to one
+        lattice size and/or SLO class) — the preemption trigger check."""
+        for fam_kind, (group, key), q in self._family_items():
+            if fam_kind != kind or not q:
+                continue
+            if slo is not None and group[1] != slo:
+                continue
+            fam_L = key[0] if fam_kind == "multiply" else key
+            if L is not None and fam_L != L:
+                continue
+            return True
+        return False
 
     def submit(self, req: ServeRequest) -> bool:
         """Admit a request; False under backpressure (queue budget exhausted).
-        Multiply requests bucket by (L, k); stencil and solve requests by L
-        alone — all three families draw on the one queue-depth budget."""
+        Multiply requests bucket by (group, (L, k)); stencil and solve
+        requests by (group, L) — all families draw on one depth budget."""
         if self._depth >= self.cfg.max_queue_depth:
             return False
         if not req.arrival_s:
             req.arrival_s = time.perf_counter()
         if req.kind == "stencil":
-            self._stencil.setdefault(req.L, []).append(req)
+            self._stencil.setdefault((req.group, req.L), []).append(req)
         elif req.kind == "solve":
-            self._solve.setdefault(req.L, []).append(req)
+            self._solve.setdefault((req.group, req.L), []).append(req)
         else:
-            self._buckets.setdefault(req.bucket, []).append(req)
+            self._buckets.setdefault((req.group, req.bucket), []).append(req)
         self._depth += 1
         return True
 
-    def next_solve(self) -> ServeRequest | None:
+    def next_solve(self, group: GroupKey | None = None) -> ServeRequest | None:
         """Pop the oldest waiting solve request (across lattice sizes) —
         the service seats it as the host's active solve.  Solves never
-        coalesce: each carries its own data-dependent iteration count."""
-        live = [(L, q) for L, q in self._solve.items() if q]
+        coalesce: each carries its own data-dependent iteration count.
+        ``group`` restricts the pop to one (tenant, class) — the fair
+        scheduler serves exactly the group that owns the turn."""
+        live = [
+            (key, q) for (g, key), q in self._solve.items()
+            if q and (group is None or g == group)
+        ]
         if not live:
             return None
-        L, queue = min(live, key=lambda kv: kv[1][0].arrival_s)
+        _L, queue = min(live, key=lambda kv: kv[1][0].arrival_s)
         req = queue.pop(0)
         self._depth -= 1
         return req
 
-    def next_stencil_batch(self) -> CoalescedBatch | None:
+    def next_stencil_batch(self, group: GroupKey | None = None) -> CoalescedBatch | None:
         """Coalesce up to ``max_batch`` stencil requests of the most urgent
         lattice size (oldest waiting head first), warm-size padded like the
         multiply buckets.  The batch ``key`` is ``(L, 1)`` — one stencil
-        application per request."""
-        live = [(L, q) for L, q in self._stencil.items() if q]
+        application per request.  ``group`` restricts to one (tenant, class);
+        batches never mix groups either way (the families are group-keyed)."""
+        live = [
+            (key, q) for (g, key), q in self._stencil.items()
+            if q and (group is None or g == group)
+        ]
         if not live:
             return None
         L, queue = min(live, key=lambda kv: kv[1][0].arrival_s)
         take = queue[: self.cfg.max_batch]
-        self._stencil[L] = queue[len(take):]
+        queue[:] = queue[len(take):]
         self._depth -= len(take)
         return CoalescedBatch(
             key=(L, 1), requests=take, padded_size=self.cfg.padded_size(len(take))
         )
 
-    def next_batch(self) -> CoalescedBatch | None:
+    def next_batch(self, group: GroupKey | None = None) -> CoalescedBatch | None:
         """Coalesce up to ``max_batch`` requests from the most urgent bucket.
 
         Urgency is head-of-line arrival time (oldest waiting request first),
         so no bucket starves under mixed traffic: a lone L=2 request queued
         behind a stream of L=4 batches is picked as soon as it is oldest.
+        ``group`` restricts to one (tenant, class); a batch never mixes
+        groups either way — the buckets themselves are group-keyed.
         """
-        live = [(key, q) for key, q in self._buckets.items() if q]
+        live = [
+            (key, q) for (g, key), q in self._buckets.items()
+            if q and (group is None or g == group)
+        ]
         if not live:
             return None
         key, queue = min(live, key=lambda kv: kv[1][0].arrival_s)
         take = queue[: self.cfg.max_batch]
-        self._buckets[key] = queue[len(take):]
+        queue[:] = queue[len(take):]
         self._depth -= len(take)
         return CoalescedBatch(
             key=key, requests=take, padded_size=self.cfg.padded_size(len(take))
@@ -261,14 +340,20 @@ class DynamicBatcher:
 
     # -- robustness views ------------------------------------------------------
 
+    def _family_items(self):
+        """Every queue as a (kind, (group, key), queue) triple."""
+        for gkey, q in self._buckets.items():
+            yield "multiply", gkey, q
+        for gkey, q in self._stencil.items():
+            yield "stencil", gkey, q
+        for gkey, q in self._solve.items():
+            yield "solve", gkey, q
+
     def _families(self):
-        """The three queue families as (kind, key, queue) triples."""
-        for key, q in self._buckets.items():
-            yield "multiply", key, q
-        for L, q in self._stencil.items():
-            yield "stencil", L, q
-        for L, q in self._solve.items():
-            yield "solve", L, q
+        """The three queue families as (kind, key, queue) triples (legacy
+        key shape: (L, k) for multiplies, L otherwise)."""
+        for kind, (_group, key), q in self._family_items():
+            yield kind, key, q
 
     def evict_expired(self, now: float) -> list[ServeRequest]:
         """Pop every queued request whose deadline passed; the caller turns
@@ -286,14 +371,19 @@ class DynamicBatcher:
         self._depth -= len(evicted)
         return evicted
 
-    def shed_lowest(self, max_priority: int) -> ServeRequest | None:
+    def shed_lowest(self, max_priority: int,
+                    sheddable_slo: str | None = None) -> ServeRequest | None:
         """Pop the YOUNGEST queued request with priority < ``max_priority``
         (the freshest bulk work pays for the latency-sensitive arrival —
         oldest bulk requests have waited longest and keep their place).
+        ``sheddable_slo`` additionally restricts victims to one SLO class
+        (the service passes "bulk": the latency lane is never shed).
         Returns None when nothing sheddable waits."""
         best: tuple[float, Any, list] | None = None
         for _kind, key, q in self._families():
             for req in q:
+                if sheddable_slo is not None and req.slo != sheddable_slo:
+                    continue
                 if req.priority < max_priority and (
                     best is None or req.arrival_s > best[0]
                 ):
@@ -317,33 +407,40 @@ class DynamicBatcher:
 
     # -- continuous-batching admission views ----------------------------------
 
-    def queued_Ls(self) -> list[int]:
-        """Distinct lattice sizes with waiting requests, oldest-head first."""
+    def queued_Ls(self, group: GroupKey | None = None) -> list[int]:
+        """Distinct lattice sizes with waiting requests, oldest-head first
+        (optionally restricted to one (tenant, class) group)."""
         heads: dict[int, float] = {}
-        for (L, _k), q in self._buckets.items():
-            if q:
+        for (g, (L, _k)), q in self._buckets.items():
+            if q and (group is None or g == group):
                 heads[L] = min(heads.get(L, q[0].arrival_s), q[0].arrival_s)
         return sorted(heads, key=heads.__getitem__)
 
-    def next_for_L(self, L: int, max_n: int) -> list[ServeRequest]:
+    def next_for_L(self, L: int, max_n: int,
+                   group: GroupKey | None = None) -> list[ServeRequest]:
         """Pop up to ``max_n`` oldest waiting requests of lattice size ``L``,
         across every chain depth k.
 
         Continuous batching admits by *shape* compatibility only — a chain
         in flight for L can absorb requests of any k (each slot tracks its
         own remaining iterations), so the (L, k) buckets merge here by
-        arrival order.  Returns ``[]`` when nothing of size L waits.
+        arrival order.  ``group`` restricts the pops to one (tenant, class)
+        — a fair turn admits only the turn owner's requests, though seated
+        slots of every group still advance together (the chain's dispatch
+        is shared).  Returns ``[]`` when nothing eligible of size L waits.
         """
         if max_n < 1:
             return []
         out: list[ServeRequest] = []
         while len(out) < max_n:
             candidates = [
-                (key, q) for key, q in self._buckets.items() if q and key[0] == L
+                (gkey, q) for gkey, q in self._buckets.items()
+                if q and gkey[1][0] == L
+                and (group is None or gkey[0] == group)
             ]
             if not candidates:
                 break
-            key, queue = min(candidates, key=lambda kv: kv[1][0].arrival_s)
+            _gkey, queue = min(candidates, key=lambda kv: kv[1][0].arrival_s)
             out.append(queue.pop(0))
             self._depth -= 1
         return out

@@ -31,11 +31,13 @@ import dataclasses
 import time
 
 from repro.obs.stats import Reservoir, RunningStat
+from repro.serve.su3.tenancy import class_key
 
 FLOPS_PER_SITE = 864  # 4 links x 3x3x3 complex MACs x 8 real flops (paper §3.1)
 
 
 LATENCY_RESERVOIR_CAPACITY = 4096  # exact percentiles below this many samples
+CLASS_RESERVOIR_CAPACITY = 1024  # per-(tenant, class) latency reservoirs
 
 
 def request_flops(n_sites: int, k: int) -> float:
@@ -85,6 +87,30 @@ class ServiceMetrics:
     # per-(L) chained fallback path after a dispatch failure
     quarantines: int = 0  # hosts latched out by the health tracker
     reseated: int = 0  # requests moved off a quarantined host onto a healthy one
+    # -- tenancy splits (ISSUE 10) --------------------------------------------
+    # per-(tenant, SLO class) views keyed "tenant/class"; the legacy totals
+    # above are unchanged — the default tenant's traffic lands in
+    # "default/bulk" / "default/latency" and sums to the old numbers
+    admitted_by_class: dict = dataclasses.field(default_factory=dict)
+    shed_by_class: dict = dataclasses.field(default_factory=dict)
+    timeouts_by_class: dict = dataclasses.field(default_factory=dict)
+    latencies_by_class: dict = dataclasses.field(default_factory=dict)
+    # "tenant/class" -> Reservoir of completion latencies
+    shed_for_kind: dict = dataclasses.field(default_factory=dict)
+    # beneficiary attribution: which arriving kind (or "brownout") each shed
+    # paid for — sums to ``shed``, so shed accounting reconciles with admits
+    quota_rejected: int = 0  # submits refused by a tenant's token bucket
+    quota_rejected_by_tenant: dict = dataclasses.field(default_factory=dict)
+    preemptions: int = 0  # bulk seats evicted for a waiting latency request
+    scale_ups: int = 0  # autoscaler grow events
+    scale_downs: int = 0  # autoscaler shrink events
+    active_hosts: int = 0  # current active pool size (gauge; 0 = unset)
+    brownout_rung: int = 0  # current ladder rung (gauge)
+    brownout_transitions: int = 0  # ladder moves (either direction)
+    brownout_rung_turns: dict = dataclasses.field(default_factory=dict)
+    # rung -> scheduling turns spent there (rung occupancy for the bench row)
+    brownout_degraded_solve_turns: int = 0  # bulk solve turns run at reduced
+    # iterations (and/or on a warm bf16 pool entry) by rung >= 2
 
     def reset(self) -> None:
         """Zero every counter and restart the wall clock (post-warmup)."""
@@ -92,21 +118,63 @@ class ServiceMetrics:
 
     # -- recording -----------------------------------------------------------
 
-    def record_admit(self, queue_depth: int) -> None:
+    @staticmethod
+    def _bump(d: dict, key: str, n: int = 1) -> None:
+        d[key] = d.get(key, 0) + n
+
+    def record_admit(self, queue_depth: int, tenant: str | None = None,
+                     slo: str | None = None) -> None:
         self.admitted += 1
         self.queue_depths.add(queue_depth)
+        if tenant is not None and slo is not None:
+            self._bump(self.admitted_by_class, class_key(tenant, slo))
 
     def record_reject(self, kind: str = "multiply") -> None:
         self.rejected += 1
         self.rejected_by_kind[kind] = self.rejected_by_kind.get(kind, 0) + 1
 
-    def record_shed(self, kind: str) -> None:
+    def record_quota_reject(self, tenant: str) -> None:
+        self.quota_rejected += 1
+        self._bump(self.quota_rejected_by_tenant, tenant)
+
+    def record_shed(self, kind: str, for_kind: str = "",
+                    tenant: str | None = None, slo: str | None = None) -> None:
+        """One shed victim of ``kind``; ``for_kind`` is the BENEFICIARY —
+        the arriving kind the victim paid for (or "brownout" for ladder
+        sheds) — so ``shed_for_kind`` reconciles sheds against admits."""
         self.shed += 1
         self.shed_by_kind[kind] = self.shed_by_kind.get(kind, 0) + 1
+        if for_kind:
+            self._bump(self.shed_for_kind, for_kind)
+        if tenant is not None and slo is not None:
+            self._bump(self.shed_by_class, class_key(tenant, slo))
 
-    def record_timeout(self, kind: str) -> None:
+    def record_timeout(self, kind: str, tenant: str | None = None,
+                       slo: str | None = None) -> None:
         self.timeouts += 1
         self.timeouts_by_kind[kind] = self.timeouts_by_kind.get(kind, 0) + 1
+        if tenant is not None and slo is not None:
+            self._bump(self.timeouts_by_class, class_key(tenant, slo))
+
+    def record_preemption(self) -> None:
+        self.preemptions += 1
+
+    def record_scale(self, delta: int, active: int) -> None:
+        if delta > 0:
+            self.scale_ups += 1
+        elif delta < 0:
+            self.scale_downs += 1
+        self.active_hosts = active
+
+    def record_brownout_transition(self, rung: int) -> None:
+        self.brownout_transitions += 1
+        self.brownout_rung = rung
+
+    def record_brownout_turn(self, rung: int) -> None:
+        self._bump(self.brownout_rung_turns, str(rung))
+
+    def record_degraded_solve_turn(self) -> None:
+        self.brownout_degraded_solve_turns += 1
 
     def record_retry(self, n: int = 1) -> None:
         self.retries += n
@@ -158,9 +226,17 @@ class ServiceMetrics:
         self.host_iterations[host] = self.host_iterations.get(host, 0) + n
         self.kind_iterations[kind] = self.kind_iterations.get(kind, 0) + n
 
-    def record_completion(self, latency_s: float) -> None:
+    def record_completion(self, latency_s: float, tenant: str | None = None,
+                          slo: str | None = None) -> None:
         self.completed += 1
         self.latencies_s.add(latency_s)
+        if tenant is not None and slo is not None:
+            key = class_key(tenant, slo)
+            res = self.latencies_by_class.get(key)
+            if res is None:
+                res = self.latencies_by_class[key] = Reservoir(
+                    CLASS_RESERVOIR_CAPACITY)
+            res.add(latency_s)
 
     def record_queue_depth(self, depth: int) -> None:
         self.queue_depths.add(depth)
@@ -218,4 +294,33 @@ class ServiceMetrics:
             "queue_depth_mean": round(self.queue_depths.mean(), 3),
             "busy_s": round(self.busy_s, 4),
             "wall_s": round(wall, 4),
+            # -- tenancy splits (additive keys; legacy keys above unchanged) --
+            "admitted_by_class": {
+                k: n for k, n in sorted(self.admitted_by_class.items())},
+            "shed_by_class": {
+                k: n for k, n in sorted(self.shed_by_class.items())},
+            "shed_for_kind": {
+                k: n for k, n in sorted(self.shed_for_kind.items())},
+            "timeouts_by_class": {
+                k: n for k, n in sorted(self.timeouts_by_class.items())},
+            "latency_by_class_ms": {
+                k: {
+                    "p50": round(r.percentile(50) * 1e3, 3),
+                    "p99": round(r.percentile(99) * 1e3, 3),
+                    "count": r.count,
+                }
+                for k, r in sorted(self.latencies_by_class.items())
+            },
+            "quota_rejected": self.quota_rejected,
+            "quota_rejected_by_tenant": {
+                k: n for k, n in sorted(self.quota_rejected_by_tenant.items())},
+            "preemptions": self.preemptions,
+            "scale_ups": self.scale_ups,
+            "scale_downs": self.scale_downs,
+            "active_hosts": self.active_hosts,
+            "brownout_rung": self.brownout_rung,
+            "brownout_transitions": self.brownout_transitions,
+            "brownout_rung_turns": {
+                k: n for k, n in sorted(self.brownout_rung_turns.items())},
+            "brownout_degraded_solve_turns": self.brownout_degraded_solve_turns,
         }

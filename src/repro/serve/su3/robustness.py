@@ -90,17 +90,24 @@ class RetriesExhaustedError(RequestFailure):
 
 class LoadShedError(RequestFailure):
     """The request was shed from the queue to admit a higher-priority one
-    under backpressure (bulk multiplies shed before solves)."""
+    under backpressure (bulk multiplies shed before solves) — or rejected
+    at the door by the brownout ladder (``shed_for_kind="brownout"``).
+    ``retry_after_s > 0`` is a Retry-After hint: the service is browning
+    out and the caller should back off at least that long before
+    resubmitting (rung 3 sets it; ordinary sheds leave it 0)."""
 
     def __init__(self, *, req_id: int, kind: str, priority: int,
-                 shed_for_kind: str, attempts: int = 0):
+                 shed_for_kind: str, attempts: int = 0,
+                 retry_after_s: float = 0.0):
+        hint = f"; retry after {retry_after_s:.3f}s" if retry_after_s else ""
         super().__init__(
             f"request {req_id} ({kind}, priority {priority}) shed under "
-            f"backpressure for an arriving {shed_for_kind}",
+            f"backpressure for an arriving {shed_for_kind}{hint}",
             req_id=req_id, kind=kind, attempts=attempts,
         )
         self.priority = priority
         self.shed_for_kind = shed_for_kind
+        self.retry_after_s = retry_after_s
 
 
 @dataclasses.dataclass(frozen=True)

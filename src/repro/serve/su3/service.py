@@ -115,6 +115,22 @@ from repro.serve.su3.robustness import (
     RetriesExhaustedError,
     RetryPolicy,
 )
+from repro.serve.su3.tenancy import (
+    DEFAULT_KIND_SLO,
+    DEFAULT_TENANT,
+    SLO_BULK,
+    SLO_CLASSES,
+    SLO_LATENCY,
+    AutoscaleConfig,
+    BrownoutConfig,
+    BrownoutLadder,
+    DeficitFairScheduler,
+    GroupKey,
+    SLOPolicy,
+    TenantQuota,
+    TokenBucket,
+    WarmPoolAutoscaler,
+)
 
 DEFAULT_TILE = 128  # small enough that every L >= 2 bucket is a few tiles
 
@@ -187,6 +203,22 @@ class ServiceConfig:
             single-host services never self-quarantine.
         numerics_guard: check dispatch outputs for NaN/Inf even with no
             fault plan armed (chaos runs always check).
+        slo: per-class policy — deadline defaults and fair-scheduler weights
+            for the ``latency`` and ``bulk`` lanes.
+        quotas: optional per-tenant :class:`TenantQuota` token buckets
+            (``{tenant: TenantQuota}``); a tenant past its bucket is
+            rejected at the front door (``submit_*`` returns None, counted
+            in ``quota_rejected``).  Tenants absent from the map are
+            unmetered.
+        autoscale: warm-pool controller; when enabled the service starts at
+            ``min_hosts`` active hosts and grows/shrinks the active set
+            from queue-depth/occupancy pressure with hysteresis (shrink
+            never evicts a seated latency request).  Disabled = every
+            configured host stays active (pre-tenancy behavior).
+        brownout: optional three-rung overload ladder over the bulk lane
+            (None = disabled): rung 1 sheds bulk admissions past a reduced
+            queue share, rung 2 additionally degrades bulk solves, rung 3
+            rejects new bulk with a Retry-After hint in the LoadShedError.
     """
 
     dtype: str = "float32"  # storage dtype of every plan in the pool
@@ -209,6 +241,10 @@ class ServiceConfig:
     default_deadline_s: float = 0.0  # relative per-request deadline (0 = none)
     quarantine_after: int = 3  # consecutive failures latching a host out
     numerics_guard: bool = False  # NaN/Inf-check outputs without a fault plan
+    slo: SLOPolicy = dataclasses.field(default_factory=SLOPolicy)
+    quotas: Any = None  # {tenant: TenantQuota} token buckets (None = unmetered)
+    autoscale: AutoscaleConfig = dataclasses.field(default_factory=AutoscaleConfig)
+    brownout: BrownoutConfig | None = None  # overload ladder (None = disabled)
 
     def __post_init__(self) -> None:
         # the pool serves the planar Pallas kernel; AOS has no planar view,
@@ -251,6 +287,23 @@ class ServiceConfig:
         if self.quarantine_after < 1:
             raise ValueError(
                 f"quarantine_after must be >= 1, got {self.quarantine_after}"
+            )
+        if self.quotas is not None:
+            for tenant, quota in dict(self.quotas).items():
+                if not tenant or not isinstance(tenant, str):
+                    raise ValueError(
+                        f"quota tenants must be non-empty strings, got "
+                        f"{tenant!r}"
+                    )
+                if not isinstance(quota, TenantQuota):
+                    raise ValueError(
+                        f"quotas values must be TenantQuota, got "
+                        f"{type(quota).__name__} for tenant {tenant!r}"
+                    )
+        if self.autoscale.enabled and self.autoscale.min_hosts > self.hosts:
+            raise ValueError(
+                f"autoscale.min_hosts={self.autoscale.min_hosts} exceeds "
+                f"hosts={self.hosts}"
             )
 
 
@@ -378,11 +431,14 @@ class SU3Service:
         self._results: dict[int, jax.Array] = {}
         # (host, L, dtype, layout, tile) -> jitted vmapped stencil dispatch
         self._stencil_steps: dict[tuple, Any] = {}
-        # per-host kind fairness: the kind the host's LAST turn served; the
-        # next turn serves the first pending kind strictly after it in the
-        # multiply -> stencil -> solve rotation, so no sustained stream of
-        # one kind starves the others
-        self._last_kind: dict[int, str] = {}
+        # (host, group) kind fairness: the kind that group's LAST turn on
+        # the host served; the next turn serves the first pending kind
+        # strictly after it in the multiply -> stencil -> solve rotation,
+        # so within one (tenant, class) group no sustained stream of one
+        # kind starves the others.  WHICH group owns a turn is the deficit
+        # fair scheduler's call (replacing the old global kind rotation).
+        self._last_kind: dict[tuple[int, GroupKey], str] = {}
+        self._sched = DeficitFairScheduler(weight_for=self.cfg.slo.weight_for)
         # per-host active solve: ONE data-dependent CG solve advanced a few
         # iterations per scheduling turn (kind="solve" seat)
         self._solves: dict[int, dict[str, Any]] = {}
@@ -404,7 +460,22 @@ class SU3Service:
         self._retry_q: list[tuple[float, ServeRequest]] = []
         # set the first time any request carries a deadline, so the
         # deadline-free hot path never scans queues/seats for expiry
-        self._deadlines_armed = bool(self.cfg.default_deadline_s)
+        self._deadlines_armed = bool(
+            self.cfg.default_deadline_s
+            or self.cfg.slo.latency_deadline_s
+            or self.cfg.slo.bulk_deadline_s)
+        # -- tenancy state (ISSUE 10) ------------------------------------------
+        self._quota_buckets: dict[str, TokenBucket] = {}
+        self._brownout = BrownoutLadder(self.cfg.brownout) \
+            if self.cfg.brownout is not None else None
+        if self.cfg.autoscale.enabled:
+            self._autoscaler: WarmPoolAutoscaler | None = WarmPoolAutoscaler(
+                self.cfg.autoscale, self.cfg.hosts)
+            self._active_hosts = self.cfg.autoscale.min_hosts
+        else:
+            self._autoscaler = None
+            self._active_hosts = self.cfg.hosts
+        self.metrics.active_hosts = self._active_hosts
 
     # -- warm pool -----------------------------------------------------------
 
@@ -470,13 +541,25 @@ class SU3Service:
             self._pool[key] = runner
         return runner
 
+    def _serving_hosts(self) -> list[int]:
+        """Hosts eligible for new work: active (autoscaler set) and not
+        quarantined.  Never empty — if quarantine has eaten the whole
+        active set, the healthy hosts beyond it serve (HostHealth never
+        quarantines the last healthy host)."""
+        hosts = [
+            h for h in range(self._active_hosts)
+            if not self.health.is_quarantined(h)
+        ]
+        return hosts or self.health.healthy_hosts()
+
     def _home(self, L: int) -> int:
         """The lattice size's home host, re-homed deterministically onto a
-        healthy host when the sticky assignment is quarantined."""
+        serving host when the sticky assignment is quarantined or scaled
+        out of the active pool."""
         host = self.router.host_for(L)
-        if self.health.is_quarantined(host):
-            healthy = self.health.healthy_hosts()
-            host = healthy[L % len(healthy)]
+        serving = self._serving_hosts()
+        if host not in serving:
+            host = serving[L % len(serving)]
         return host
 
     def pool_keys(self) -> list[tuple]:
@@ -603,19 +686,95 @@ class SU3Service:
         """Total waiting requests across every host's batcher."""
         return sum(len(b) for b in self._batchers)
 
-    def _deadline(self, deadline_s: float | None, arrival_s: float) -> float:
+    def _deadline(self, deadline_s: float | None, arrival_s: float,
+                  slo: str = SLO_BULK) -> float:
         """Absolute deadline for a request: its own relative deadline, else
-        the configured default, else none (0.0)."""
-        d = self.cfg.default_deadline_s if deadline_s is None else deadline_s
+        the SLO class's default, else the service-wide default, else none
+        (0.0)."""
+        d = deadline_s
+        if d is None:
+            d = self.cfg.slo.deadline_for(slo) or self.cfg.default_deadline_s
         if d and d > 0:
             self._deadlines_armed = True
             return arrival_s + d
         return 0.0
 
+    @staticmethod
+    def _resolve_slo(kind: str, slo: str | None) -> str:
+        """The request's SLO class: explicit, else the kind's default."""
+        if slo is None:
+            return DEFAULT_KIND_SLO[kind]
+        if slo not in SLO_CLASSES:
+            raise ValueError(
+                f"slo must be one of {SLO_CLASSES}, got {slo!r}"
+            )
+        return slo
+
+    @staticmethod
+    def _check_tenant(tenant: str) -> str:
+        if not tenant or not isinstance(tenant, str):
+            raise ValueError(
+                f"tenant must be a non-empty string, got {tenant!r}"
+            )
+        return tenant
+
+    def _quota_admit(self, tenant: str, now: float) -> bool:
+        """Charge the tenant's token bucket; False = quota backpressure
+        (the submit returns None before touching any queue)."""
+        quotas = self.cfg.quotas
+        if not quotas:
+            return True
+        spec = quotas.get(tenant)
+        if spec is None:
+            return True
+        bucket = self._quota_buckets.get(tenant)
+        if bucket is None:
+            bucket = self._quota_buckets[tenant] = TokenBucket(spec)
+        if bucket.try_take(now):
+            return True
+        self.metrics.record_quota_reject(tenant)
+        if self.tracer.enabled:
+            self.tracer.event("quota.reject", lane=0, tenant=tenant)
+        return False
+
+    def _brownout_door(self, req: ServeRequest, host: int) -> int | None:
+        """The brownout ladder's bulk-lane admission check.  Returns the
+        request id when the ladder SHED the arrival (the id resolves
+        immediately to a LoadShedError — zero-lost accounting holds, the
+        caller can pop the structured error), or None to admit normally.
+        Latency-class requests are never browned out."""
+        ladder = self._brownout
+        if ladder is None or ladder.rung < 1 or req.slo != SLO_BULK:
+            return None
+        rung = ladder.rung
+        retry_after = 0.0
+        if rung >= 3:
+            retry_after = self.cfg.brownout.retry_after_s
+        else:
+            # rung 1/2: bulk keeps only a reduced share of the queue budget
+            budget = max(1, int(self.cfg.batcher.max_queue_depth
+                                * self.cfg.brownout.bulk_queue_fraction))
+            if self._batchers[host].depth_for_slo(SLO_BULK) < budget:
+                return None
+        self._next_id += 1
+        self.metrics.record_shed(req.kind, for_kind="brownout",
+                                 tenant=req.tenant, slo=req.slo)
+        self._results[req.req_id] = LoadShedError(
+            req_id=req.req_id, kind=req.kind, priority=req.priority,
+            shed_for_kind="brownout", attempts=req.attempts,
+            retry_after_s=retry_after)
+        if self.tracer.enabled:
+            self.tracer.event(
+                "brownout.shed", lane=_request_lane(req.req_id),
+                req_id=req.req_id, kind=req.kind, tenant=req.tenant,
+                rung=rung, retry_after_s=retry_after)
+        return req.req_id
+
     def _shed(self, victim: ServeRequest, for_kind: str) -> None:
         """Deliver a structured LoadShedError to a queue victim evicted to
         admit a higher-priority arrival."""
-        self.metrics.record_shed(victim.kind)
+        self.metrics.record_shed(victim.kind, for_kind=for_kind,
+                                 tenant=victim.tenant, slo=victim.slo)
         self._results[victim.req_id] = LoadShedError(
             req_id=victim.req_id, kind=victim.kind, priority=victim.priority,
             shed_for_kind=for_kind, attempts=victim.attempts)
@@ -624,15 +783,38 @@ class SU3Service:
                 "shed", lane=_request_lane(victim.req_id),
                 req_id=victim.req_id, kind=victim.kind)
 
+    def _preempt_bulk(self, occupants: list, evict_fn: Any, host: int) -> bool:
+        """Latency-lane seat preemption: evict the youngest-arrival seated
+        BULK request to free one slot for a waiting latency-class multiply.
+        The victim is not failed — it re-queues on its home batcher (the
+        deterministic re-run the quarantine re-seat path already relies on)
+        and only resolves as a structured shed if its queue is full."""
+        bulk = [(slot, req) for slot, req, _rem in occupants
+                if req.slo == SLO_BULK]
+        if not bulk:
+            return False
+        slot, victim = max(bulk, key=lambda t: t[1].arrival_s)
+        evict_fn(slot)
+        self.metrics.record_preemption()
+        if self.tracer.enabled:
+            self.tracer.event(
+                "preempt", lane=_request_lane(victim.req_id),
+                req_id=victim.req_id, kind=victim.kind, host=host, slot=slot,
+                tenant=victim.tenant)
+        if not self._batchers[host].submit(victim):
+            self._shed(victim, "latency-preempt")
+        return True
+
     def _admit(self, req: ServeRequest, host: int, load_flops: float,
                depth: int) -> int | None:
         """Shared admission tail: queue-budget check with priority-aware
-        shedding (the youngest strictly-lower-priority queued request is
-        evicted — with a structured error — to admit a latency-sensitive
-        arrival), then load/metrics/trace accounting."""
+        shedding (the youngest strictly-lower-priority BULK-class request
+        is evicted — with a structured error — to admit a latency-sensitive
+        arrival; the latency lane is never shed), then load/metrics/trace
+        accounting."""
         batcher = self._batchers[host]
         if not batcher.submit(req):
-            victim = batcher.shed_lowest(req.priority)
+            victim = batcher.shed_lowest(req.priority, sheddable_slo=SLO_BULK)
             if victim is not None:
                 self._shed(victim, req.kind)
             if victim is None or not batcher.submit(req):
@@ -640,16 +822,18 @@ class SU3Service:
                 return None
         self.router.record_load(host, load_flops)
         self._next_id += 1
-        self.metrics.record_admit(depth + 1)
+        self.metrics.record_admit(depth + 1, tenant=req.tenant, slo=req.slo)
         if self.tracer.enabled:
             self.tracer.event(
                 "admit", lane=_request_lane(req.req_id), req_id=req.req_id,
-                kind=req.kind, L=req.L, k=req.k, host=host,
-                queue_depth=depth + 1)
+                kind=req.kind, L=req.L, k=req.k, host=host, tenant=req.tenant,
+                slo=req.slo, queue_depth=depth + 1)
         return req.req_id
 
     def submit(self, a: jax.Array, b: jax.Array, k: int | None = None,
-               deadline_s: float | None = None) -> int | None:
+               deadline_s: float | None = None,
+               tenant: str = DEFAULT_TENANT,
+               slo: str | None = None) -> int | None:
         """Queue one lattice multiply on its home host's batcher.
 
         Args:
@@ -657,29 +841,46 @@ class SU3Service:
             b: canonical complex link matrix set ``(4, 3, 3)``.
             k: chain depth (``C = A⊗B`` applied k times); None = the
                 autotuned default for (backend, L).
-            deadline_s: relative deadline; None = the configured default.
-                A request past its deadline is evicted wherever it sits and
-                completes with a structured ``DeadlineExceededError``.
+            deadline_s: relative deadline; None = the SLO class default,
+                else the configured service default.  A request past its
+                deadline is evicted wherever it sits and completes with a
+                structured ``DeadlineExceededError``.
+            tenant: tenant identity (quota metering + fairness group);
+                every pre-tenancy call site rides the default tenant.
+            slo: SLO class ("latency"/"bulk"); None = the kind's default
+                (multiplies are bulk).
 
         Returns:
-            A request id, or None when the home host's queue budget is
-            exhausted (backpressure — caller retries later) and nothing
-            lower-priority could be shed to make room.
+            A request id, or None when the tenant's quota bucket is dry or
+            the home host's queue budget is exhausted (backpressure —
+            caller retries later) and nothing lower-priority could be shed
+            to make room.  Under brownout the id may resolve immediately
+            to a ``LoadShedError`` carrying a Retry-After hint.
         """
         L = self._infer_L(a)
+        tenant = self._check_tenant(tenant)
+        slo = self._resolve_slo("multiply", slo)
         host = self._home(L)
         depth = self.queued()
         arrival = time.perf_counter()
+        if not self._quota_admit(tenant, arrival):
+            return None
         req = ServeRequest(
             req_id=self._next_id, a=a, b=b, L=L,
             k=k if k is not None else self.default_k_for(L),
-            arrival_s=arrival, deadline_s=self._deadline(deadline_s, arrival),
-            priority=PRIORITY["multiply"],
+            arrival_s=arrival,
+            deadline_s=self._deadline(deadline_s, arrival, slo),
+            priority=PRIORITY["multiply"], tenant=tenant, slo=slo,
         )
+        shed_id = self._brownout_door(req, host)
+        if shed_id is not None:
+            return shed_id
         return self._admit(req, host, request_flops(req.n_sites, req.k), depth)
 
     def submit_stencil(self, u: jax.Array, v: jax.Array,
-                       deadline_s: float | None = None) -> int | None:
+                       deadline_s: float | None = None,
+                       tenant: str = DEFAULT_TENANT,
+                       slo: str | None = None) -> int | None:
         """Queue one nearest-neighbor stencil application on its home host.
 
         Args:
@@ -700,21 +901,30 @@ class SU3Service:
                 f"stencil vector field must be (L**4, 3) canonical complex "
                 f"matching the lattice, got {v.shape} for L={L}"
             )
+        tenant = self._check_tenant(tenant)
+        slo = self._resolve_slo("stencil", slo)
         host = self._home(L)
         depth = self.queued()
         arrival = time.perf_counter()
+        if not self._quota_admit(tenant, arrival):
+            return None
         req = ServeRequest(
             req_id=self._next_id, a=u, b=v, L=L, k=1,
             arrival_s=arrival, kind="stencil",
-            deadline_s=self._deadline(deadline_s, arrival),
-            priority=PRIORITY["stencil"],
+            deadline_s=self._deadline(deadline_s, arrival, slo),
+            priority=PRIORITY["stencil"], tenant=tenant, slo=slo,
         )
+        shed_id = self._brownout_door(req, host)
+        if shed_id is not None:
+            return shed_id
         return self._admit(
             req, host, float(STENCIL_FLOPS_PER_SITE) * req.n_sites, depth)
 
     def submit_solve(self, u: jax.Array, b: jax.Array, tol: float = 1e-6,
                      max_iters: int = 200,
-                     deadline_s: float | None = None) -> int | None:
+                     deadline_s: float | None = None,
+                     tenant: str = DEFAULT_TENANT,
+                     slo: str | None = None) -> int | None:
         """Queue one staggered CG solve ``(sigma I + S) x = b`` on its home
         host.
 
@@ -744,16 +954,23 @@ class SU3Service:
             raise ValueError(f"tol must be >= 0, got {tol}")
         if max_iters < 1:
             raise ValueError(f"max_iters must be >= 1, got {max_iters}")
+        tenant = self._check_tenant(tenant)
+        slo = self._resolve_slo("solve", slo)
         host = self._home(L)
         depth = self.queued()
         arrival = time.perf_counter()
+        if not self._quota_admit(tenant, arrival):
+            return None
         req = ServeRequest(
             req_id=self._next_id, a=u, b=b, L=L, k=1,
             arrival_s=arrival, kind="solve",
             tol=tol, max_iters=max_iters,
-            deadline_s=self._deadline(deadline_s, arrival),
-            priority=PRIORITY["solve"],
+            deadline_s=self._deadline(deadline_s, arrival, slo),
+            priority=PRIORITY["solve"], tenant=tenant, slo=slo,
         )
+        shed_id = self._brownout_door(req, host)
+        if shed_id is not None:
+            return shed_id
         # nominal admission charge: a typical shifted-CG iteration count;
         # the true data-dependent bill is charged per dispatched chunk
         return self._admit(
@@ -791,7 +1008,7 @@ class SU3Service:
 
     def _timeout(self, req: ServeRequest, now: float,
                  partial: Any = None) -> None:
-        self.metrics.record_timeout(req.kind)
+        self.metrics.record_timeout(req.kind, tenant=req.tenant, slo=req.slo)
         self._fail(req, DeadlineExceededError(
             req_id=req.req_id, kind=req.kind,
             deadline_s=req.deadline_s - req.arrival_s,
@@ -903,12 +1120,11 @@ class SU3Service:
                     arrays.clear(slot)
                     self._timeout(req, now)
 
-    def _quarantine(self, host: int) -> None:
-        """Last rung of the degradation ladder: the health tracker latched
-        ``host`` out.  Every request it holds — queued, active solve, or
-        seated in a live chain/table slot — re-seats onto a healthy host
-        (mid-chain progress is discarded; the re-run is deterministic).
-        Re-seats that bounce off a full healthy queue fail structurally."""
+    def _drain_host(self, host: int) -> list[ServeRequest]:
+        """Pull every request ``host`` holds — queued, the active solve, and
+        seated chain/table slots — off the host (mid-chain progress is
+        discarded; the re-run is deterministic).  Shared by the quarantine
+        and scale-down paths."""
         moved: list[ServeRequest] = list(self._batchers[host].drain())
         active = self._solves.pop(host, None)
         if active is not None:
@@ -926,8 +1142,21 @@ class SU3Service:
                 table.evict(slot)
                 arrays.clear(slot)
                 moved.append(req)
+        return moved
+
+    def _reseat(self, moved: list[ServeRequest], cause: str) -> int:
+        """Re-seat displaced requests onto serving hosts; returns the count
+        that landed.  A request whose deadline has ALREADY passed resolves
+        as a DeadlineExceededError right here — exactly once — instead of
+        being resubmitted only for the next sweep to evict it (the
+        deadline-expiry x re-seat race).  Re-seats that bounce off a full
+        queue fail structurally."""
+        now = time.perf_counter()
         reseated = 0
         for req in moved:
+            if req.deadline_s and req.deadline_s <= now:
+                self._timeout(req, now)
+                continue
             target = self._home(req.L)
             if self._batchers[target].submit(req):
                 reseated += 1
@@ -935,7 +1164,16 @@ class SU3Service:
                 self.metrics.record_retries_exhausted()
                 self._fail(req, RetriesExhaustedError(
                     req_id=req.req_id, kind=req.kind, attempts=req.attempts,
-                    cause="quarantine re-seat rejected under backpressure"))
+                    cause=cause))
+        return reseated
+
+    def _quarantine(self, host: int) -> None:
+        """Last rung of the degradation ladder: the health tracker latched
+        ``host`` out.  Every request it holds re-seats onto a healthy host
+        via :meth:`_reseat` (``_home`` already excludes the latched host)."""
+        moved = self._drain_host(host)
+        reseated = self._reseat(
+            moved, "quarantine re-seat rejected under backpressure")
         self.metrics.record_quarantine(reseated=reseated)
         if self.tracer.enabled:
             self.tracer.event(
@@ -972,66 +1210,10 @@ class SU3Service:
                 seq=f.seq, host=host, kind=kind)
         return poison_array(x, f.action)
 
-    def step(self) -> int:
-        """Advance the service by one scheduling turn; returns completed
-        request count.
-
-        Batch-per-step mode: dispatch ONE coalesced (L, k) batch from the
-        next non-empty host (round-robin).  Continuous mode: admit waiting
-        requests into that host's in-flight chains at this iteration
-        boundary, then advance each of its live chains by ONE iteration.
-        Stencil requests (any mode) dispatch as their own coalesced vmapped
-        batch; solve requests advance the host's active CG solve by
-        ``solve_iters_per_step`` iterations.  When a host has several kinds
-        pending, turns serve the first pending kind after the last-served
-        one in the multiply -> stencil -> solve rotation (no sustained
-        stream of one kind starves the others); stencils and solves never
-        join multiply chains.
-        """
-        now = time.perf_counter()
-        if self._retry_q:
-            self._drain_retry_queue(now)
-        if self._deadlines_armed:
-            self._evict_expired(now)
-        order = ("multiply", "stencil", "solve")
-        for _ in range(self.cfg.hosts):
-            host = self._rr_host
-            self._rr_host = (self._rr_host + 1) % self.cfg.hosts
-            if self.health.is_quarantined(host):
-                continue
-            pending = {
-                "multiply": self._multiply_pending(host),
-                "stencil": bool(self._batchers[host].stencil_depths()),
-                "solve": self._solve_pending(host),
-            }
-            if not any(pending.values()):
-                continue
-            last = self._last_kind.get(host, "multiply")
-            start = order.index(last) if last in order else 0
-            for off in range(1, len(order) + 1):
-                kind = order[(start + off) % len(order)]
-                if not pending[kind]:
-                    continue
-                self._last_kind[host] = kind
-                if kind == "stencil":
-                    return self._step_stencil(host)
-                if kind == "solve":
-                    return self._step_solve(host)
-                if self.cfg.megakernel:
-                    return self._step_megakernel(host)
-                if self.cfg.continuous:
-                    return self._step_continuous(host)
-                return self._step_batch(host)
-        return 0
-
-    def _solve_pending(self, host: int) -> bool:
-        """Solve work waiting for ``host``: a queued solve or the active one."""
-        return host in self._solves or bool(self._batchers[host].solve_depths())
-
-    def _multiply_pending(self, host: int) -> bool:
-        """Multiply work waiting for ``host``: queued (L, k) buckets, or live
-        in-flight chains/slots in the continuous/megakernel modes."""
-        if self._batchers[host].bucket_depths():
+    def _host_busy(self, host: int) -> bool:
+        """A live seat on ``host``: the active solve, a live chain, or a
+        live slot table (the occupancy half of the pressure signal)."""
+        if host in self._solves:
             return True
         if self.cfg.megakernel:
             entry = self._tables.get(host)
@@ -1043,9 +1225,176 @@ class SU3Service:
             )
         return False
 
-    def _step_batch(self, host: int) -> int:
-        """One coalesced fused-k dispatch for ``host`` (batch-per-step)."""
-        batch = self._batchers[host].next_batch()
+    def _seated_latency(self, host: int) -> bool:
+        """True when ``host`` holds a seated latency-class request (a shrink
+        must never evict one — the veto the autoscaler docs promise)."""
+        active = self._solves.get(host)
+        if active is not None and active["req"].slo == SLO_LATENCY:
+            return True
+        for (h, _L), (chain, _a) in self._chains.items():
+            if h == host and any(
+                    req.slo == SLO_LATENCY
+                    for _s, req, _rem in chain.occupants()):
+                return True
+        entry = self._tables.get(host)
+        if entry is not None and any(
+                req.slo == SLO_LATENCY
+                for _s, req, _rem in entry[0].occupants()):
+            return True
+        return False
+
+    def _scale_down(self) -> None:
+        """Retire the top active host: drain its queued/seated work onto the
+        remaining hosts (the quarantine re-seat machinery).  Vetoed when the
+        victim holds a seated latency request — the controller proposes
+        again after its next cold streak."""
+        victim = self._active_hosts - 1
+        if self._seated_latency(victim):
+            if self.tracer.enabled:
+                self.tracer.event("scale.veto", lane=victim, host=victim)
+            return
+        self._active_hosts -= 1  # _home() now excludes the victim
+        moved = self._drain_host(victim)
+        reseated = self._reseat(
+            moved, "scale-down re-seat rejected under backpressure")
+        self.metrics.record_scale(-1, self._active_hosts)
+        if self.tracer.enabled:
+            self.tracer.event(
+                "scale.down", lane=victim, host=victim,
+                active=self._active_hosts, reseated=reseated)
+
+    def _observe_pressure(self) -> None:
+        """One control-loop sample per step(): feed the brownout ladder and
+        the warm-pool autoscaler the same load signals — queued fraction of
+        the active queue budget, blended with seat occupancy while a
+        backlog exists — and apply their decisions.  Both controllers are
+        functions of the observation SEQUENCE, so a same-seed replay of the
+        same traffic reproduces every transition and scale event."""
+        active = self._serving_hosts()
+        n = max(1, len(active))
+        depth = self.queued()
+        cap = max(1, self.cfg.batcher.max_queue_depth) * n
+        occupancy = sum(1 for h in active if self._host_busy(h)) / n
+        pressure = min(1.0, depth / cap)
+        if depth:
+            pressure = max(pressure, occupancy)
+        if self._brownout is not None:
+            new_rung = self._brownout.observe(pressure)
+            self.metrics.record_brownout_turn(self._brownout.rung)
+            if new_rung is not None:
+                self.metrics.record_brownout_transition(new_rung)
+                if self.tracer.enabled:
+                    t = self._brownout.transitions[-1]
+                    self.tracer.event(
+                        "brownout.transition", lane=0, rung=new_rung,
+                        from_rung=t["from"], pressure=t["pressure"])
+        if self._autoscaler is not None:
+            delta = self._autoscaler.observe(
+                depth_per_host=depth / n, occupancy=occupancy,
+                active=self._active_hosts)
+            if delta > 0:
+                self._active_hosts += 1
+                self.metrics.record_scale(+1, self._active_hosts)
+                if self.tracer.enabled:
+                    self.tracer.event(
+                        "scale.up", lane=0, active=self._active_hosts)
+            elif delta < 0:
+                self._scale_down()
+
+    def step(self) -> int:
+        """Advance the service by one scheduling turn; returns completed
+        request count.
+
+        Turn ownership is two-level.  The deficit-weighted fair scheduler
+        first picks WHICH (tenant, SLO class) group owns the turn on the
+        next host with pending work — every pending group accrues
+        weight-proportional credit, so a backlogged bulk tenant cannot
+        monopolize turns and a pending latency group is served within a
+        provable bound (tests/test_tenancy.py pins it).  Within the granted
+        group, kinds rotate multiply -> stencil -> solve exactly as before
+        — per (host, group) now — so no sustained stream of one kind
+        starves the others *inside* a group.  Dispatch is unchanged:
+        batch-per-step serves one coalesced (L, k) bucket from the group's
+        buckets; continuous admits the group's waiters at the iteration
+        boundary then advances ALL the host's live chains; megakernel
+        slot-swaps then fires one batched K-chain dispatch.  Each step also
+        feeds one pressure sample to the brownout ladder and the warm-pool
+        autoscaler (when configured).
+        """
+        now = time.perf_counter()
+        if self._retry_q:
+            self._drain_retry_queue(now)
+        if self._deadlines_armed:
+            self._evict_expired(now)
+        if self._brownout is not None or self._autoscaler is not None:
+            self._observe_pressure()
+        order = ("multiply", "stencil", "solve")
+        for _ in range(self.cfg.hosts):
+            host = self._rr_host
+            self._rr_host = (self._rr_host + 1) % self.cfg.hosts
+            if self.health.is_quarantined(host):
+                continue
+            groups = self._pending_groups(host)
+            if not groups:
+                continue
+            group = self._sched.next_group(sorted(groups))
+            if group is None:  # pragma: no cover - groups is non-empty
+                continue
+            pending = groups[group]
+            last = self._last_kind.get((host, group), "multiply")
+            start = order.index(last) if last in order else 0
+            for off in range(1, len(order) + 1):
+                kind = order[(start + off) % len(order)]
+                if kind not in pending:
+                    continue
+                self._last_kind[(host, group)] = kind
+                if kind == "stencil":
+                    return self._step_stencil(host, group)
+                if kind == "solve":
+                    return self._step_solve(host, group)
+                if self.cfg.megakernel:
+                    return self._step_megakernel(host, group)
+                if self.cfg.continuous:
+                    return self._step_continuous(host, group)
+                return self._step_batch(host, group)
+        return 0
+
+    def _pending_groups(self, host: int) -> dict[GroupKey, set[str]]:
+        """Pending work on ``host`` keyed by (tenant, SLO class) group, each
+        with its waiting kinds.  Live chain/table seats count as multiply
+        work for their occupants' groups; the single active solve counts
+        for ITS group only and suppresses other groups' queued solves (one
+        solve seat per host — their turn comes when it retires)."""
+        groups = {
+            g: set(kinds)
+            for g, kinds in
+            self._batchers[host].pending_kinds_by_group().items()
+        }
+        active = self._solves.get(host)
+        if active is not None:
+            owner = active["req"].group
+            for g, kinds in groups.items():
+                if g != owner:
+                    kinds.discard("solve")
+            groups.setdefault(owner, set()).add("solve")
+        if self.cfg.megakernel:
+            entry = self._tables.get(host)
+            if entry is not None:
+                for _slot, req, _rem in entry[0].occupants():
+                    groups.setdefault(req.group, set()).add("multiply")
+        elif self.cfg.continuous:
+            for (h, _L), (chain, _arr) in self._chains.items():
+                if h != host:
+                    continue
+                for _slot, req, _rem in chain.occupants():
+                    groups.setdefault(req.group, set()).add("multiply")
+        return {g: kinds for g, kinds in groups.items() if kinds}
+
+    def _step_batch(self, host: int, group: GroupKey | None = None) -> int:
+        """One coalesced fused-k dispatch for ``host`` (batch-per-step),
+        drawn from ``group``'s buckets when the fair scheduler granted the
+        turn to a specific (tenant, class) group."""
+        batch = self._batchers[host].next_batch(group=group)
         if batch is None:
             return 0
         reqs = batch.requests
@@ -1105,7 +1454,8 @@ class SU3Service:
         done_s = time.perf_counter()
         for i, r in enumerate(reqs):
             self._results[r.req_id] = c[i]
-            self.metrics.record_completion(done_s - r.arrival_s)
+            self.metrics.record_completion(
+                done_s - r.arrival_s, tenant=r.tenant, slo=r.slo)
             if self.tracer.enabled:
                 r.seated_s = t0  # batch mode: seating IS the dispatch start
                 self._trace_request(r, done_s, host, "batch")
@@ -1134,10 +1484,11 @@ class SU3Service:
             self._stencil_steps[key] = step
         return step
 
-    def _step_stencil(self, host: int) -> int:
-        """One coalesced stencil dispatch for ``host``: the oldest waiting
-        lattice size's requests, vmapped through the warm runner's plan."""
-        batch = self._batchers[host].next_stencil_batch()
+    def _step_stencil(self, host: int, group: GroupKey | None = None) -> int:
+        """One coalesced stencil dispatch for ``host``: the granted group's
+        oldest waiting lattice size, vmapped through the warm runner's
+        plan."""
+        batch = self._batchers[host].next_stencil_batch(group=group)
         if batch is None:
             return 0
         reqs = batch.requests
@@ -1202,22 +1553,37 @@ class SU3Service:
         done_s = time.perf_counter()
         for i, r in enumerate(reqs):
             self._results[r.req_id] = plan.codec.unpack_vec(out_p[i], n_sites)
-            self.metrics.record_completion(done_s - r.arrival_s)
+            self.metrics.record_completion(
+                done_s - r.arrival_s, tenant=r.tenant, slo=r.slo)
             if self.tracer.enabled:
                 r.seated_s = t0
                 self._trace_request(r, done_s, host, "batch")
         self.metrics.record_queue_depth(self.queued())
         return len(reqs)
 
-    def _seat_solve(self, host: int) -> dict[str, Any] | None:
-        """Pop the host's oldest queued solve and seat it as the active one:
-        pack the gauge field and right-hand side through the warm runner's
-        plan, initialize the CG state, and pin the convergence threshold
-        ``||r||^2 <= tol^2 ||b||^2`` from the packed b."""
-        req = self._batchers[host].next_solve()
+    def _seat_solve(self, host: int,
+                    group: GroupKey | None = None) -> dict[str, Any] | None:
+        """Pop the granted group's oldest queued solve and seat it as the
+        active one: pack the gauge field and right-hand side through the
+        warm runner's plan, initialize the CG state, and pin the
+        convergence threshold ``||r||^2 <= tol^2 ||b||^2`` from the packed
+        b."""
+        req = self._batchers[host].next_solve(group=group)
         if req is None:
             return None
         runner = self.runner_for(req.L, host)
+        if (self._brownout is not None and self._brownout.rung >= 2
+                and self.cfg.brownout.degrade_bulk_bf16
+                and req.slo == SLO_BULK
+                and runner.cfg.dtype != "bfloat16"):
+            # rung 2 degradation: a BULK solve rides a warm bf16-storage
+            # plan when the pool already holds one for this (host, L) —
+            # never builds a new plan mid-overload
+            for key, cand in self._pool.items():
+                if key[0] == host and key[1] == req.L \
+                        and key[2] == "bfloat16":
+                    runner = cand
+                    break
         plan = runner.plan
         u_phys = plan.pack_gauge(jnp.asarray(req.a))
         b_p = plan.pack_rhs(jnp.asarray(req.b))
@@ -1236,15 +1602,15 @@ class SU3Service:
                 L=req.L, host=host, kind="solve", midchain=False)
         return active
 
-    def _step_solve(self, host: int) -> int:
+    def _step_solve(self, host: int, group: GroupKey | None = None) -> int:
         """Advance the host's active solve by ``solve_iters_per_step`` CG
-        iterations (seating the oldest queued solve first if none is
-        active); retires it — mid-chain, its seat and queue budget free
-        immediately — once the residual crosses tol or ``max_iters`` runs
-        out, delivering the best iterate either way."""
+        iterations (seating the granted group's oldest queued solve first
+        if none is active); retires it — mid-chain, its seat and queue
+        budget free immediately — once the residual crosses tol or
+        ``max_iters`` runs out, delivering the best iterate either way."""
         active = self._solves.get(host)
         if active is None:
-            active = self._seat_solve(host)
+            active = self._seat_solve(host, group)
             if active is None:
                 return 0
         req, plan, state = active["req"], active["plan"], active["state"]
@@ -1265,6 +1631,12 @@ class SU3Service:
                 return 0
         n = min(self.cfg.solve_iters_per_step,
                 req.max_iters - state["iterations"])
+        if (self._brownout is not None and self._brownout.rung >= 2
+                and req.slo == SLO_BULK):
+            # rung 2: bulk solves advance fewer CG iterations per turn,
+            # returning turns to the latency lane sooner
+            n = max(1, n // self.cfg.brownout.degrade_solve_factor)
+            self.metrics.record_degraded_solve_turn()
         runner = active["runner"]
         shape_key = ("solve", req.L)
         cold = shape_key not in self._seen_shapes
@@ -1346,15 +1718,16 @@ class SU3Service:
         self._results[req.req_id] = plan.unpack_vec(state["x"])
         del self._solves[host]
         done_s = time.perf_counter()
-        self.metrics.record_completion(done_s - req.arrival_s)
+        self.metrics.record_completion(
+            done_s - req.arrival_s, tenant=req.tenant, slo=req.slo)
         if self.tracer.enabled:
             self._trace_request(req, done_s, host, "solve")
         self.metrics.record_queue_depth(self.queued())
         return 1
 
-    def _step_continuous(self, host: int) -> int:
-        """One iteration boundary for ``host``: admit, then advance each of
-        its chains by one multiply."""
+    def _step_continuous(self, host: int, group: GroupKey | None = None) -> int:
+        """One iteration boundary for ``host``: admit the granted group's
+        waiters, then advance each of its chains by one multiply."""
         batcher = self._batchers[host]
         self.metrics.record_iteration(host)
         slots = self._chain_slots()
@@ -1364,7 +1737,7 @@ class SU3Service:
         #    from a chain's is never seated in it (InflightChain.admit
         #    enforces the shape incompatibility); it reaches its own chain
         #    here.
-        for L in batcher.queued_Ls():
+        for L in batcher.queued_Ls(group):
             chain_key = (host, L)
             if chain_key not in self._chains:
                 runner = self.runner_for(L, host)
@@ -1374,9 +1747,17 @@ class SU3Service:
                 )
             chain, arrays = self._chains[chain_key]
             free = slots - chain.live
+            if not free and group is not None and group[1] == SLO_LATENCY:
+                # a full chain never blocks the latency lane: the youngest
+                # bulk seat is preempted (re-queued) to admit this turn
+                if self._preempt_bulk(
+                        chain.occupants(),
+                        lambda s, c=chain, a=arrays: (c.evict(s), a.clear(s)),
+                        host):
+                    free = 1
             if not free:
                 continue
-            admitted = batcher.next_for_L(L, free)
+            admitted = batcher.next_for_L(L, free, group=group)
             for req in admitted:
                 slot = chain.admit(req)
                 arrays.seat(slot, req.a, req.b)
@@ -1456,7 +1837,8 @@ class SU3Service:
             for slot, req in chain.advance():
                 self._results[req.req_id] = arrays.result(slot, n_sites)
                 arrays.clear(slot)
-                self.metrics.record_completion(done_s - req.arrival_s)
+                self.metrics.record_completion(
+                    done_s - req.arrival_s, tenant=req.tenant, slo=req.slo)
                 if self.tracer.enabled:
                     self._trace_request(req, done_s, host, "continuous")
                 completed += 1
@@ -1489,12 +1871,13 @@ class SU3Service:
             self._tables[host] = (table, arrays)
         return self._tables[host]
 
-    def _step_megakernel(self, host: int) -> int:
+    def _step_megakernel(self, host: int, group: GroupKey | None = None) -> int:
         """One iteration boundary for ``host``: slot-swap admission across
-        ALL queued lattice sizes, then ONE batched K-chain dispatch."""
+        the granted group's queued lattice sizes, then ONE batched K-chain
+        dispatch."""
         batcher = self._batchers[host]
         self.metrics.record_iteration(host)
-        queued = batcher.queued_Ls()
+        queued = batcher.queued_Ls(group)
         entry = self._tables.get(host)
         if entry is None and not queued:
             return 0
@@ -1506,9 +1889,19 @@ class SU3Service:
             table, arrays = self._table_for(host, cap_L)
             for L in queued:
                 free = self._chain_slots() - table.live
+                if not free and group is not None \
+                        and group[1] == SLO_LATENCY:
+                    # full table: preempt the youngest bulk seat so the
+                    # latency lane admits this turn
+                    if self._preempt_bulk(
+                            table.occupants(),
+                            lambda s, t=table, a=arrays: (
+                                t.evict(s), a.clear(s)),
+                            host):
+                        free = 1
                 if not free:
                     break
-                admitted = batcher.next_for_L(L, free)
+                admitted = batcher.next_for_L(L, free, group=group)
                 for req in admitted:
                     slot = table.admit(req)
                     arrays.seat(slot, req.a, req.b)
@@ -1597,7 +1990,8 @@ class SU3Service:
             for slot, req in table.advance(ks):
                 self._results[req.req_id] = arrays.result(slot, req.n_sites)
                 arrays.clear(slot)
-                self.metrics.record_completion(done_s - req.arrival_s)
+                self.metrics.record_completion(
+                    done_s - req.arrival_s, tenant=req.tenant, slo=req.slo)
                 if self.tracer.enabled:
                     self._trace_request(req, done_s, host, "megakernel")
                 completed += 1
@@ -1658,7 +2052,9 @@ class SU3Service:
     # -- asyncio face --------------------------------------------------------
 
     async def arun(self, a: jax.Array, b: jax.Array, k: int | None = None,
-                   deadline_s: float | None = None) -> jax.Array:
+                   deadline_s: float | None = None,
+                   tenant: str = DEFAULT_TENANT,
+                   slo: str | None = None) -> jax.Array:
         """Submit and await one request from an asyncio front-end.
 
         Concurrent ``arun`` coroutines submitted in the same scheduler tick
@@ -1668,10 +2064,13 @@ class SU3Service:
         (letting other coroutines drain the queue) and retries immediately;
         sustained rejection sleeps the retry policy's jittered, capped
         schedule instead of pegging the event loop with submit attempts.
-        A request that resolves with a structured failure (deadline, shed,
+        Quota backpressure (a dry tenant bucket) rides the same loop — the
+        coroutine backs off until the bucket refills.  A request that
+        resolves with a structured failure (deadline, shed, brownout,
         retries exhausted, CG divergence) RAISES it here.
         """
-        req_id = self.submit(a, b, k, deadline_s=deadline_s)
+        req_id = self.submit(a, b, k, deadline_s=deadline_s,
+                             tenant=tenant, slo=slo)
         attempt = 0
         while req_id is None:
             if attempt == 0:
@@ -1681,7 +2080,8 @@ class SU3Service:
                     self.cfg.retry.backoff_s(attempt, self._retry_rng))
             attempt += 1
             self.step()
-            req_id = self.submit(a, b, k, deadline_s=deadline_s)
+            req_id = self.submit(a, b, k, deadline_s=deadline_s,
+                                 tenant=tenant, slo=slo)
         self._awaited.add(req_id)  # shield from a concurrent pop_ready drain
         try:
             while not self.has_result(req_id):

@@ -203,8 +203,17 @@ def _full_artifact(*, mult_bps=384, mult_bf16_bps=192, st_bps=408,
          "p99_inflation_bounded": True, "recovery_max_s": 0.1,
          "GFLOPS": 0.1},
     ]
+    tenancy = [
+        {"name": "serve_tenancy", "seed": 0, "latency_inflation": 1.2,
+         "latency_bounded": True, "jain_fairness": 0.97, "fairness_ok": True,
+         "brownout_transitions": 3,
+         "brownout_signature": [[3, 0, 1], [9, 1, 2], [14, 2, 0]],
+         "brownout_signature_reproduced": True, "quota_rejected": 6,
+         "zero_lost": True, "same_seed_reproduces": True,
+         "clean_results_bitwise": True, "GFLOPS": 0.1},
+    ]
     art = _payload({"table2_variants": t2, "stencil": st, "cg": cg,
-                    "chaos": chaos})
+                    "chaos": chaos, "tenancy": tenancy})
     art["provenance"] = _provenance()
     return art
 
@@ -447,6 +456,70 @@ def test_main_runs_chaos_gate_on_harness_artifacts(tmp_path):
                             "--no-chaos-gate"]) == 0
     # honest chaos row passes end to end
     art["tables"]["chaos"] = [_chaos_row()]
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(art))
+    assert bench_diff.main(["--current", str(good), "--baseline", absent]) == 0
+
+
+# -- tenancy gate --------------------------------------------------------------
+
+
+def _tenancy_row(**over):
+    row = {"name": "serve_tenancy", "seed": 0, "latency_inflation": 1.2,
+           "latency_bounded": True, "jain_fairness": 0.97, "fairness_ok": True,
+           "brownout_transitions": 3,
+           "brownout_signature": [[3, 0, 1], [9, 1, 2], [14, 2, 0]],
+           "brownout_signature_reproduced": True, "quota_rejected": 6,
+           "zero_lost": True, "same_seed_reproduces": True,
+           "clean_results_bitwise": True, "GFLOPS": 0.1}
+    row.update(over)
+    return row
+
+
+def test_tenancy_gate_passes_on_honest_row(capsys):
+    art = _payload({"tenancy": [_tenancy_row()]})
+    assert bench_diff.tenancy_gate(art) == []
+    out = capsys.readouterr().out
+    assert "Jain 0.97" in out and "same-seed reproduced" in out
+
+
+def test_tenancy_gate_fails_each_broken_contract():
+    missing = _payload({"tenancy": []})
+    assert any("serve_tenancy row missing" in p
+               for p in bench_diff.tenancy_gate(missing))
+    errored = _payload({"tenancy": [_tenancy_row(error="boom")]})
+    assert bench_diff.tenancy_gate(errored) == [
+        "serve_tenancy: row errored: boom"]
+    # a flood that never tripped the ladder proves nothing
+    dud = _payload({"tenancy": [_tenancy_row(brownout_transitions=0)]})
+    assert any("never climbed the brownout ladder" in p
+               for p in bench_diff.tenancy_gate(dud))
+    for flag, needle in (
+        ("zero_lost", "LOST REQUESTS"),
+        ("latency_bounded", "exceeds the ceiling"),
+        ("fairness_ok", "under the floor"),
+        ("brownout_signature_reproduced", "brownout transition log"),
+        ("same_seed_reproduces", "same fault sequence"),
+        ("clean_results_bitwise", "NOT bitwise identical"),
+    ):
+        # both an explicit False and a silently dropped flag must fail
+        for bad in ({flag: False}, {flag: None}):
+            art = _payload({"tenancy": [_tenancy_row(**bad)]})
+            assert any(needle in p for p in bench_diff.tenancy_gate(art)), flag
+
+
+def test_main_runs_tenancy_gate_on_harness_artifacts(tmp_path):
+    import json
+    absent = str(tmp_path / "absent.json")
+    art = _full_artifact()
+    art["tables"]["tenancy"] = [_tenancy_row(fairness_ok=False)]
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(art))
+    assert bench_diff.main(["--current", str(bad), "--baseline", absent]) == 1
+    assert bench_diff.main(["--current", str(bad), "--baseline", absent,
+                            "--no-tenancy-gate"]) == 0
+    # honest tenancy row passes end to end
+    art["tables"]["tenancy"] = [_tenancy_row()]
     good = tmp_path / "good.json"
     good.write_text(json.dumps(art))
     assert bench_diff.main(["--current", str(good), "--baseline", absent]) == 0

@@ -325,6 +325,28 @@ def test_deadline_eviction_on_quarantined_host_reseats_then_times_out():
     assert not svc.pending()
 
 
+def test_reseat_resolves_already_expired_deadline_exactly_once():
+    # the deadline-expiry x re-seat race: a request whose deadline passed
+    # BEFORE the quarantine/scale-down re-seat runs must resolve as exactly
+    # one DeadlineExceededError at re-seat time — never resubmitted for the
+    # next sweep to evict (double resolution), never silently dropped
+    svc = _svc(hosts=2)
+    now = time.perf_counter()
+    req = _req(1, deadline_s=now - 0.01, arrival=now - 0.5)
+    reseated = svc._reseat([req], "re-seat rejected")
+    assert reseated == 0
+    assert svc.queued() == 0  # never re-entered any queue
+    out = svc.pop_result(1)
+    assert isinstance(out, DeadlineExceededError)
+    assert not svc.has_result(1)  # resolved once; nothing left behind
+    assert svc.metrics.snapshot()["timeouts_by_kind"] == {"multiply": 1}
+    # a live-deadline companion in the same batch re-seats normally
+    fresh = _req(2, deadline_s=now + 60.0, arrival=now)
+    assert svc._reseat([fresh], "re-seat rejected") == 1
+    assert svc.queued() == 1
+    assert svc.metrics.snapshot()["timeouts"] == 1
+
+
 # -- load shedding -------------------------------------------------------------
 
 
@@ -370,12 +392,12 @@ def test_arun_backs_off_exponentially_instead_of_busy_spinning():
     real_submit, real_step = svc.submit, svc.step
     svc.step = lambda: 0  # the service is stalled while it rejects
 
-    def stub(aa, bb, k=None, deadline_s=None):
+    def stub(aa, bb, k=None, deadline_s=None, **kw):
         times.append(time.perf_counter())
         if len(times) <= 4:
             return None  # sustained backpressure
         svc.step = real_step  # service unstalls; let the request complete
-        return real_submit(aa, bb, k, deadline_s=deadline_s)
+        return real_submit(aa, bb, k, deadline_s=deadline_s, **kw)
 
     svc.submit = stub
     out = asyncio.run(svc.arun(a, b, k=1))
